@@ -1,0 +1,48 @@
+//! DvD case study (paper §5.3, Fig 6): population TD3 with a shared
+//! critic and an explicit diversity bonus — the log-determinant of the
+//! RBF kernel over the policies' actions on probe states. The diversity
+//! weight follows a schedule (paper Appendix B.2 replaces DvD's bandit
+//! with a schedule).
+//!
+//!     cargo run --release --example dvd -- [env] [updates]
+//!
+//! The paper trains pop 5 on Humanoid-v2 with one T4; we default to the
+//! halfcheetah-dimension task for the single-core budget (pass `humanoid`
+//! after regenerating an artifact for it — see DESIGN.md).
+
+use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
+use fastpbrl::coordinator::trainer::{Trainer, TrainerConfig};
+use fastpbrl::manifest::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let env = args.first().cloned().unwrap_or_else(|| "halfcheetah".into());
+    let updates: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10_000);
+
+    let manifest = Manifest::load("artifacts")?;
+    let cfg = TrainerConfig {
+        env: env.clone(),
+        algo: "dvd".into(),
+        pop: 5, // same population size as the original study
+        total_updates: updates,
+        sync_every: 50,
+        warmup_steps: 1000,
+        shared_replay: true, // DvD mixes all agents' data in one buffer
+        seed: 11,
+        csv_path: format!("results/dvd_{env}.csv"),
+        max_seconds: 1500.0,
+        ..TrainerConfig::default()
+    };
+    let mut controller = DvdLambdaSchedule::default_for(updates);
+    let mut trainer = Trainer::new(&manifest, cfg)?;
+    println!("DvD pop=5 on {env}: {updates} updates, lambda {:.2} -> {:.2}",
+             controller.value_at(0), controller.value_at(updates));
+    let summary = trainer.run(&mut controller)?;
+    println!(
+        "wall {:.1}s | updates {} | env steps {} | best return {:.1} | mean {:.1}",
+        summary.wall_seconds, summary.updates, summary.env_steps,
+        summary.best_return, summary.mean_return
+    );
+    println!("curve -> results/dvd_{env}.csv");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! PBT case study (paper §5.1, Figs 5 & 7): tune TD3/SAC hyperparameters
+//! on a locomotion task by evolving a population — best-agent return is
+//! logged against both wall time (Fig 5) and env timesteps (Fig 7).
+//!
+//!     cargo run --release --example pbt -- [env] [algo] [pop] [updates]
+//!
+//! Defaults are scaled to this machine's single CPU core (the paper uses
+//! pop 80 on 4 T4s; comparisons within the run are preserved — see
+//! DESIGN.md "Scale note"). The CSV has wall_s AND env_steps columns, so
+//! one run regenerates both figures' series.
+
+use fastpbrl::coordinator::hyperparams::HyperSpec;
+use fastpbrl::coordinator::pbt::{Explore, PbtController};
+use fastpbrl::coordinator::trainer::{Trainer, TrainerConfig};
+use fastpbrl::manifest::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let env = args.first().cloned().unwrap_or_else(|| "halfcheetah".into());
+    let algo = args.get(1).cloned().unwrap_or_else(|| "td3".into());
+    let pop: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let updates: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+
+    let manifest = Manifest::load("artifacts")?;
+    let spec = HyperSpec::for_algo(&algo)?;
+    // Evolution cadence scaled with total budget (paper: every 100k of
+    // multi-million-step runs; here: 8 generations).
+    let interval = (updates / 8).max(1);
+    let mut controller = PbtController::new(spec.clone(), interval, 0.3, Explore::Resample);
+
+    let cfg = TrainerConfig {
+        env: env.clone(),
+        algo: algo.clone(),
+        pop,
+        total_updates: updates,
+        sync_every: 50,
+        warmup_steps: 1000,
+        seed: 7,
+        csv_path: format!("results/pbt_{algo}_{env}.csv"),
+        max_seconds: 1800.0,
+        hyper_spec: Some(spec),
+        return_window: 10,
+        ..TrainerConfig::default()
+    };
+    let mut trainer = Trainer::new(&manifest, cfg)?;
+    println!("PBT {algo} pop={pop} on {env}: {updates} updates, evolve every {interval}");
+    let summary = trainer.run(&mut controller)?;
+    println!(
+        "wall {:.1}s | updates {} | env steps {} | best return {:.1} | mean {:.1}",
+        summary.wall_seconds, summary.updates, summary.env_steps,
+        summary.best_return, summary.mean_return
+    );
+    println!("evolution events: {}", controller.history.len());
+    for (gen, loser, parent) in controller.history.iter().take(10) {
+        println!("  at {gen} updates: agent {loser} <- clone of {parent}");
+    }
+    println!("curves (wall_s + env_steps axes) -> results/pbt_{algo}_{env}.csv");
+    Ok(())
+}

@@ -1,0 +1,302 @@
+"""AOT driver: lower every update-step variant to HLO text + manifest.
+
+Python runs ONCE, at build time (``make artifacts``): each (algorithm, env,
+population-size, num-steps) combination is traced, lowered to StableHLO,
+converted to an XlaComputation and dumped as **HLO text** — the interchange
+format the rust runtime can load (``HloModuleProto::from_text_file``).
+Serialized protos are NOT used: jax >= 0.5 emits 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+``artifacts/manifest.json`` describes every artifact: the flat-state layout
+(field offsets/shapes/dtypes/init specs/groups), the batch inputs, env
+dims, and output shapes — everything ``rust/src/manifest.rs`` needs to
+initialize states, drive ``execute_b`` and read metrics.
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts --set default
+    python -m compile.aot --out-dir ../artifacts --set bench
+    python -m compile.aot --out-dir ../artifacts --spec td3:halfcheetah:p8:k1:b256:h256
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .layout import Layout
+from .updates import common, dqn, sac, shared_critic, td3
+
+# ---------------------------------------------------------------------------
+# Environment registry (tensor shapes only; dynamics live in rust/src/envs).
+# Dims follow the MuJoCo Gym tasks the paper trains on (Ant uses the
+# 27-dim proprioceptive observation, without contact forces).
+# ---------------------------------------------------------------------------
+
+ENVS: Dict[str, common.EnvSpec] = {
+    "halfcheetah": common.EnvSpec("halfcheetah", obs_dim=17, act_dim=6),
+    "hopper": common.EnvSpec("hopper", obs_dim=11, act_dim=3),
+    "walker2d": common.EnvSpec("walker2d", obs_dim=17, act_dim=6),
+    "ant": common.EnvSpec("ant", obs_dim=27, act_dim=8),
+    "humanoid": common.EnvSpec("humanoid", obs_dim=376, act_dim=17),
+    "swimmer": common.EnvSpec("swimmer", obs_dim=8, act_dim=2),
+    "pendulum": common.EnvSpec("pendulum", obs_dim=3, act_dim=1),
+    "minatar": common.EnvSpec("minatar", frame=(10, 10, 4), n_actions=3),
+    "asterix": common.EnvSpec("asterix", frame=(10, 10, 4), n_actions=5),
+    "spaceinvaders": common.EnvSpec("spaceinvaders", frame=(10, 10, 4),
+                                    n_actions=4),
+    # the paper's original Atari frame scale (Mnih conv stack; Fig 2 DQN
+    # rows at full scale — generate on demand, it is large)
+    "atari": common.EnvSpec("atari", frame=(84, 84, 4), n_actions=6),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    algo: str          # td3 | sac | dqn | cem | cemseq | dvd | td3fwd | sacfwd | dqnfwd
+    env: str
+    pop: int
+    num_steps: int = 1
+    batch: int = 256
+    hidden: Tuple[int, ...] = (256, 256)
+
+    @property
+    def name(self) -> str:
+        h = "x".join(str(d) for d in self.hidden)
+        return f"{self.algo}_{self.env}_p{self.pop}_k{self.num_steps}_b{self.batch}_h{h}"
+
+
+def parse_spec(text: str) -> Spec:
+    """Parse 'algo:env:p4:k1:b256:h256x256'."""
+    parts = text.split(":")
+    algo, env = parts[0], parts[1]
+    kw: Dict[str, object] = {}
+    for p in parts[2:]:
+        if p.startswith("p"):
+            kw["pop"] = int(p[1:])
+        elif p.startswith("k"):
+            kw["num_steps"] = int(p[1:])
+        elif p.startswith("b"):
+            kw["batch"] = int(p[1:])
+        elif p.startswith("h"):
+            kw["hidden"] = tuple(int(d) for d in p[1:].split("x"))
+        else:
+            raise ValueError(f"bad spec token {p!r} in {text!r}")
+    return Spec(algo, env, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build(spec: Spec):
+    """Returns (layout, fn, batch_args, out_desc, sync_groups).
+
+    An algo ending in "ref" builds the same computation with the pure-jnp
+    reference kernel instead of Pallas (the L1 ablation of DESIGN.md §Perf
+    — lowering both lets the rust benches A/B the kernel's lowered form).
+    """
+    e = ENVS[spec.env]
+    if spec.algo == "td3" or spec.algo == "td3ref":
+        layout, fn, bargs = td3.make_update(
+            spec.pop, e.obs_dim, e.act_dim, spec.batch, spec.num_steps,
+            spec.hidden)
+        return layout, fn, bargs, "state", ["policy", "critic"]
+    if spec.algo == "sac":
+        layout, fn, bargs = sac.make_update(
+            spec.pop, e.obs_dim, e.act_dim, spec.batch, spec.num_steps,
+            spec.hidden)
+        return layout, fn, bargs, "state", ["critic"]
+    if spec.algo == "dqn":
+        h, w, c = e.frame
+        layout, fn, bargs = dqn.make_update(
+            spec.pop, h, w, c, e.n_actions, spec.batch, spec.num_steps)
+        return layout, fn, bargs, "state", ["critic"]
+    if spec.algo in ("cem", "cemseq", "dvd"):
+        layout, fn, bargs = shared_critic.make_update(
+            spec.pop, e.obs_dim, e.act_dim, spec.batch,
+            ordering="seq" if spec.algo == "cemseq" else "vec",
+            num_steps=spec.num_steps, hidden=spec.hidden,
+            dvd=spec.algo == "dvd")
+        return layout, fn, bargs, "state", ["policy", "critic"]
+    if spec.algo == "td3fwd":
+        layout, fn, bargs = td3.make_policy_forward(
+            spec.pop, e.obs_dim, e.act_dim, spec.batch, spec.hidden)
+        return layout, fn, bargs, "actions", []
+    if spec.algo == "sacfwd":
+        layout, fn, bargs = sac.make_policy_forward(
+            spec.pop, e.obs_dim, e.act_dim, spec.batch, spec.hidden)
+        return layout, fn, bargs, "actions", []
+    if spec.algo == "dqnfwd":
+        h, w, c = e.frame
+        layout, fn, bargs = dqn.make_q_forward(
+            spec.pop, h, w, c, e.n_actions, spec.batch)
+        return layout, fn, bargs, "qvalues", []
+    raise ValueError(f"unknown algo {spec.algo!r}")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: Spec, out_dir: str) -> dict:
+    from .kernels import pop_linear as pk
+
+    # "...ref" algos trace through the jnp oracle instead of Pallas
+    pk.set_use_pallas(not spec.algo.endswith("ref"))
+    try:
+        return _lower_spec_inner(spec, out_dir)
+    finally:
+        pk.set_use_pallas(True)
+
+
+def _lower_spec_inner(spec: Spec, out_dir: str) -> dict:
+    layout, fn, bargs, out_kind, sync_groups = build(spec)
+    e = ENVS[spec.env]
+    state_arg = jax.ShapeDtypeStruct((layout.size,), jnp.float32)
+    batch_shapes = []
+    for a in bargs:
+        shape = a.shape if spec.num_steps == 1 or out_kind != "state" \
+            else (spec.num_steps,) + a.shape
+        batch_shapes.append(jax.ShapeDtypeStruct(shape, a.jnp_dtype()))
+
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(state_arg, *batch_shapes)
+    text = to_hlo_text(lowered)
+    dt = time.time() - t0
+
+    fname = f"{spec.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    inputs = [{"name": "state", "shape": [layout.size], "dtype": "f32"}]
+    for a, sh in zip(bargs, batch_shapes):
+        inputs.append({"name": a.name, "shape": list(sh.shape),
+                       "dtype": a.dtype})
+    env_desc = {"obs_dim": e.obs_dim, "act_dim": e.act_dim}
+    if e.frame != (0, 0, 0):
+        env_desc = {"frame": list(e.frame), "n_actions": e.n_actions}
+    print(f"  lowered {spec.name}: state={layout.size} f32, "
+          f"{len(text)} chars, {dt:.1f}s", file=sys.stderr)
+    return {
+        "file": fname,
+        "algo": spec.algo,
+        "env": spec.env,
+        "env_desc": env_desc,
+        "pop": spec.pop,
+        "num_steps": spec.num_steps,
+        "batch": spec.batch,
+        "hidden": list(spec.hidden),
+        "state_size": layout.size,
+        "output": out_kind,
+        "sync_target_groups": sync_groups,
+        "fields": layout.manifest(),
+        "inputs": inputs,
+        "lower_seconds": round(dt, 2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Artifact sets
+# ---------------------------------------------------------------------------
+
+# Small, fast set: enough for `cargo test` + the examples. Hidden sizes are
+# scaled to the single-CPU-core substrate (see DESIGN.md); the bench set
+# uses the paper's 256x256.
+DEFAULT_SET: List[Spec] = [
+    # fast tests + quickstart (pendulum, tiny nets)
+    Spec("td3", "pendulum", 1, 1, 32, (32, 32)),
+    Spec("td3", "pendulum", 4, 1, 64, (32, 32)),
+    Spec("td3fwd", "pendulum", 1, 1, 16, (32, 32)),
+    Spec("td3fwd", "pendulum", 4, 1, 1, (32, 32)),
+    Spec("sac", "pendulum", 4, 1, 64, (32, 32)),
+    Spec("sacfwd", "pendulum", 4, 1, 1, (32, 32)),
+    # paper-shaped nets on halfcheetah (examples pbt/cemrl/dvd)
+    Spec("td3", "halfcheetah", 1, 1, 256, (256, 256)),
+    Spec("td3", "halfcheetah", 8, 1, 256, (64, 64)),
+    Spec("td3", "halfcheetah", 8, 10, 256, (64, 64)),
+    Spec("td3fwd", "halfcheetah", 8, 1, 1, (64, 64)),
+    Spec("sac", "halfcheetah", 8, 1, 256, (64, 64)),
+    Spec("sacfwd", "halfcheetah", 8, 1, 1, (64, 64)),
+    Spec("cem", "halfcheetah", 10, 1, 64, (64, 64)),
+    Spec("cemseq", "halfcheetah", 10, 1, 64, (64, 64)),
+    Spec("dvd", "halfcheetah", 5, 1, 64, (64, 64)),
+    Spec("td3fwd", "halfcheetah", 10, 1, 1, (64, 64)),
+    Spec("td3fwd", "halfcheetah", 5, 1, 1, (64, 64)),
+    # dqn on the minatar substitute
+    Spec("dqn", "minatar", 1, 1, 32),
+    Spec("dqn", "minatar", 2, 1, 32),
+    Spec("dqnfwd", "minatar", 1, 1, 8),
+    Spec("dqnfwd", "minatar", 2, 1, 1),
+]
+
+# Fig 2 / Fig 3 / Fig 4 / Table 3 sweeps (paper-sized nets).
+BENCH_POPS = [1, 2, 5, 10, 20]
+BENCH_SET: List[Spec] = (
+    [Spec("td3", "halfcheetah", p, 1, 256) for p in BENCH_POPS]
+    + [Spec("td3", "halfcheetah", p, 10, 256) for p in BENCH_POPS]
+    + [Spec("sac", "halfcheetah", p, 1, 256) for p in BENCH_POPS]
+    + [Spec("dqn", "minatar", p, 1, 32) for p in BENCH_POPS]
+    + [Spec("cem", "halfcheetah", p, 1, 256) for p in [1, 2, 5, 10]]
+    + [Spec("cemseq", "halfcheetah", p, 1, 256) for p in [1, 2, 5, 10]]
+    # L1 ablation: the same TD3 update lowered through the jnp reference
+    # kernel instead of Pallas (interpret-mode overhead study, §Perf)
+    + [Spec("td3ref", "halfcheetah", p, 1, 256) for p in BENCH_POPS]
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", choices=["default", "bench", "all", "none"],
+                    default="default")
+    ap.add_argument("--spec", action="append", default=[],
+                    help="extra artifact spec algo:env:pN:kN:bN:hAxB")
+    args = ap.parse_args()
+
+    specs: List[Spec] = []
+    if args.set in ("default", "all"):
+        specs += DEFAULT_SET
+    if args.set in ("bench", "all"):
+        specs += BENCH_SET
+    specs += [parse_spec(s) for s in args.spec]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for spec in specs:
+        if spec.name in manifest["artifacts"] and os.path.exists(
+                os.path.join(args.out_dir, f"{spec.name}.hlo.txt")):
+            print(f"  cached  {spec.name}", file=sys.stderr)
+            continue
+        manifest["artifacts"][spec.name] = lower_spec(spec, args.out_dir)
+        # write incrementally so an interrupted run keeps its progress
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts: {len(manifest['artifacts'])} total, "
+          f"{time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

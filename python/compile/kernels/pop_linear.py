@@ -1,0 +1,234 @@
+"""L1: population-batched affine transform as a Pallas kernel.
+
+The hot spot of every population update step in the paper is the
+population-batched linear layer (the jax analogue of the paper's Appendix-C
+``VectorizedLinearLayer``)::
+
+    y[p, b, o] = act(sum_i x[p, b, i] * w[p, i, o] + bias[p, o])
+
+We implement the forward pass and the full backward pass (dx, dw, db) as
+Pallas kernels wrapped in a ``jax.custom_vjp`` so that gradients of the L2
+update functions flow through Pallas end to end.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper batches
+cuBLAS GEMMs over the population on GPUs. On TPU the population axis becomes
+the Pallas *grid* — one program instance per population member, which is
+perfect data parallelism with no cross-member traffic — and the per-member
+GEMM is tiled so the working set fits VMEM and feeds the 128x128 MXU. The
+``block_b``/``block_o`` knobs expose that tiling; on the CPU interpret path
+(this image) the default is "no tiling" (one program per member) because
+interpret-mode grids lower to XLA while-loops whose trip count we want to
+keep small.
+
+All kernels run under ``interpret=True`` so they lower to plain HLO the
+PJRT CPU client can execute (real-TPU lowering emits Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACTIVATIONS = ("none", "relu", "tanh")
+
+# Flipped to False by tests to route every pop_linear call through the
+# pure-jnp reference (kernels/ref.py); the L2 update functions are written
+# against this module only, so the switch gives a one-line A/B of the whole
+# model with and without Pallas.
+_USE_PALLAS = True
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = bool(flag)
+
+
+def _apply_act(z, activation: str):
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _act_bwd_from_out(y, g, activation: str):
+    """dL/dz given dL/dy and the *post*-activation value y.
+
+    Both relu and tanh admit a backward pass in terms of the output alone,
+    which lets the VJP save one residual instead of two.
+    """
+    if activation == "none":
+        return g
+    if activation == "relu":
+        return g * (y > 0).astype(g.dtype)
+    if activation == "tanh":
+        return g * (1.0 - y * y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+# --------------------------------------------------------------------------
+# Forward kernel
+# --------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, y_ref, *, activation: str):
+    # One grid step owns one (member-block, batch-tile, out-tile) block.
+    x = x_ref[...]  # [pb, bb, i]
+    w = w_ref[...]  # [pb, i, bo]
+    b = b_ref[...]  # [pb, 1, bo]
+    z = jnp.einsum("pbi,pio->pbo", x, w,
+                   preferred_element_type=jnp.float32) + b
+    y_ref[...] = _apply_act(z, activation).astype(y_ref.dtype)
+
+
+def _blk(total: int, want: Optional[int]) -> int:
+    """Resolve a tile size: None = whole axis; non-divisors fall back to
+    the whole axis (edge handling is not worth interpret overhead on CPU;
+    on TPU pad instead)."""
+    if want is None:
+        return total
+    b = min(want, total)
+    return b if total % b == 0 else total
+
+
+def _fwd_pallas(x, w, b, activation: str, block_b: Optional[int],
+                block_o: Optional[int], pop_block: Optional[int]):
+    p, bsz, i = x.shape
+    o = w.shape[2]
+    pb = _blk(p, pop_block)
+    bb = _blk(bsz, block_b)
+    bo = _blk(o, block_o)
+    # Grid: population tiles first (embarrassing parallelism), then row/col
+    # tiles of the member GEMM. On TPU, pop_block=1 gives the one-member-
+    # per-TensorCore-program schedule (DESIGN.md §Hardware-Adaptation); on
+    # the CPU interpret path the default pop_block=None collapses the grid
+    # to a single program, because interpret-mode grid steps lower to an
+    # XLA while-loop with dynamic slicing whose overhead scales with the
+    # trip count (measured 3.6x at P=20 — see EXPERIMENTS.md §Perf).
+    grid = (p // pb, bsz // bb, o // bo)
+    b2 = b.reshape(p, 1, o)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pb, bb, i), lambda pi, bi, oi: (pi, bi, 0)),
+            pl.BlockSpec((pb, i, bo), lambda pi, bi, oi: (pi, 0, oi)),
+            pl.BlockSpec((pb, 1, bo), lambda pi, bi, oi: (pi, 0, oi)),
+        ],
+        out_specs=pl.BlockSpec((pb, bb, bo), lambda pi, bi, oi: (pi, bi, oi)),
+        out_shape=jax.ShapeDtypeStruct((p, bsz, o), x.dtype),
+        interpret=True,
+    )(x, w, b2)
+
+
+# --------------------------------------------------------------------------
+# Backward kernels
+# --------------------------------------------------------------------------
+
+
+def _bwd_kernel(x_ref, w_ref, y_ref, g_ref, dx_ref, dw_ref, db_ref, *, activation: str):
+    x = x_ref[...]  # [pb, b, i]
+    w = w_ref[...]  # [pb, i, o]
+    y = y_ref[...]  # [pb, b, o]
+    g = g_ref[...]  # [pb, b, o]
+    dz = _act_bwd_from_out(y, g, activation)
+    dx_ref[...] = jnp.einsum("pbo,pio->pbi", dz, w,
+                             preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dw_ref[...] = jnp.einsum("pbi,pbo->pio", x, dz,
+                             preferred_element_type=jnp.float32).astype(dw_ref.dtype)
+    db_ref[...] = jnp.sum(dz, axis=1).astype(db_ref.dtype)
+
+
+def _bwd_pallas(x, w, y, g, activation: str, pop_block: Optional[int]):
+    p, bsz, i = x.shape
+    o = w.shape[2]
+    pb = _blk(p, pop_block)
+    kern = functools.partial(_bwd_kernel, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=(p // pb,),
+        in_specs=[
+            pl.BlockSpec((pb, bsz, i), lambda pi: (pi, 0, 0)),
+            pl.BlockSpec((pb, i, o), lambda pi: (pi, 0, 0)),
+            pl.BlockSpec((pb, bsz, o), lambda pi: (pi, 0, 0)),
+            pl.BlockSpec((pb, bsz, o), lambda pi: (pi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((pb, bsz, i), lambda pi: (pi, 0, 0)),
+            pl.BlockSpec((pb, i, o), lambda pi: (pi, 0, 0)),
+            pl.BlockSpec((pb, o), lambda pi: (pi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, bsz, i), x.dtype),
+            jax.ShapeDtypeStruct((p, i, o), w.dtype),
+            jax.ShapeDtypeStruct((p, o), w.dtype),
+        ],
+        interpret=True,
+    )(x, w, y, g)
+
+
+# --------------------------------------------------------------------------
+# Public entry point with custom VJP
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def pop_linear(x, w, b, activation: str = "none",
+               block_b: Optional[int] = None, block_o: Optional[int] = None,
+               pop_block: Optional[int] = None):
+    """Population-batched affine transform ``act(x @ w + b)``.
+
+    Args:
+      x: ``f32[P, B, I]`` per-member activations.
+      w: ``f32[P, I, O]`` per-member weights.
+      b: ``f32[P, O]`` per-member biases.
+      activation: one of ``none|relu|tanh`` (fused into the kernel).
+      block_b / block_o: optional VMEM tile sizes for the batch and output
+        axes (TPU knob; ``None`` = whole axis).
+      pop_block: population members per grid step. ``1`` is the TPU layout
+        (one member per TensorCore program — perfect data parallelism);
+        ``None`` (default) collapses the population into one program,
+        which is what the CPU interpret path wants (its grid steps lower
+        to an XLA while-loop whose overhead scales with the trip count —
+        the §Perf ablation measured 3.6x at P=20).
+
+    Returns:
+      ``f32[P, B, O]``.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if not _USE_PALLAS:
+        from . import ref
+
+        return ref.pop_linear_ref(x, w, b, activation)
+    return _fwd_pallas(x, w, b, activation, block_b, block_o, pop_block)
+
+
+def _pop_linear_fwd(x, w, b, activation, block_b, block_o, pop_block):
+    if not _USE_PALLAS:
+        from . import ref
+
+        y = ref.pop_linear_ref(x, w, b, activation)
+        return y, (x, w, y)
+    y = _fwd_pallas(x, w, b, activation, block_b, block_o, pop_block)
+    return y, (x, w, y)
+
+
+def _pop_linear_bwd(activation, block_b, block_o, pop_block, res, g):
+    x, w, y = res
+    if not _USE_PALLAS:
+        from . import ref
+
+        dx, dw, db = ref.pop_linear_bwd_ref(x, w, y, g, activation)
+        return dx, dw, db
+    dx, dw, db = _bwd_pallas(x, w, y, g, activation, pop_block)
+    return dx, dw, db
+
+
+pop_linear.defvjp(_pop_linear_fwd, _pop_linear_bwd)

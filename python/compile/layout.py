@@ -1,0 +1,169 @@
+"""Flat train-state record: the interchange format between L2 and L3.
+
+Every update-step artifact takes the *entire* train state of the population
+(parameters, target parameters, Adam moments, per-agent hyperparameters, RNG
+keys, step counters, metric slots) as ONE flat ``f32[S]`` vector and returns
+the new vector. This gives the Rust coordinator a zero-copy round trip
+through ``execute_b`` — parameters never visit host memory between update
+steps, which is the paper's "multiple update steps without copying to host"
+optimization taken to its limit.
+
+``u32`` fields (RNG keys, step counters) are stored bit-cast into f32 lanes
+(``lax.bitcast_convert_type``), so the record stays a single homogeneous
+array. Metric slots are declared as ordinary (ignored-on-input) fields so
+the output shape equals the input shape.
+
+The layout (field name -> offset/size/shape/dtype/init/group) is serialized
+into ``artifacts/manifest.json`` and mirrored by ``rust/src/manifest.rs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Initialization specs understood by both python (tests) and rust (runtime):
+#   zeros | ones | const:<v> | lecun_uniform:<fan_in> | uniform:<lo>,<hi>
+#   | orthogonal-free variance scaling is intentionally not used (keep the
+#     generator trivially portable across languages)
+#   key  -- RNG key material: filled with per-agent seed material
+#   step -- u32 step counter, starts at 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = "f32"  # f32 | u32
+    init: str = "zeros"
+    group: str = "misc"  # policy|policy_target|critic|critic_target|opt|hyper|rng|step|metric|misc
+    per_agent: bool = True  # leading axis is the population axis
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+class Layout:
+    """Ordered collection of fields packed into one flat f32 vector."""
+
+    def __init__(self, fields: Sequence[Field]):
+        names = [f.name for f in fields]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate field names: {dup}")
+        self.fields: List[Field] = list(fields)
+        self.offsets: Dict[str, int] = {}
+        off = 0
+        for f in self.fields:
+            self.offsets[f.name] = off
+            off += f.size
+        self.size = off
+        self._by_name = {f.name: f for f in self.fields}
+
+    def field(self, name: str) -> Field:
+        return self._by_name[name]
+
+    def names(self) -> List[str]:
+        return [f.name for f in self.fields]
+
+    # ------------------------------------------------------------------
+    # jax-side access
+    # ------------------------------------------------------------------
+
+    def read(self, state, name: str):
+        """Slice one field out of the flat state (jax traceable)."""
+        f = self._by_name[name]
+        seg = jax.lax.dynamic_slice(state, (self.offsets[name],), (f.size,))
+        seg = seg.reshape(f.shape)
+        if f.dtype == "u32":
+            seg = jax.lax.bitcast_convert_type(seg, jnp.uint32)
+        return seg
+
+    def unpack(self, state) -> Dict[str, jnp.ndarray]:
+        return {f.name: self.read(state, f.name) for f in self.fields}
+
+    def pack(self, values: Dict[str, jnp.ndarray]):
+        """Concatenate all fields (in layout order) back into a flat f32."""
+        missing = [f.name for f in self.fields if f.name not in values]
+        if missing:
+            raise ValueError(f"pack missing fields: {missing}")
+        parts = []
+        for f in self.fields:
+            v = values[f.name]
+            if f.dtype == "u32":
+                v = jax.lax.bitcast_convert_type(v.astype(jnp.uint32), jnp.float32)
+            parts.append(v.reshape(-1).astype(jnp.float32))
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+    def group(self, values: Dict[str, jnp.ndarray], group: str) -> Dict[str, jnp.ndarray]:
+        return {f.name: values[f.name] for f in self.fields if f.group == group}
+
+    def group_fields(self, group: str) -> List[Field]:
+        return [f for f in self.fields if f.group == group]
+
+    # ------------------------------------------------------------------
+    # numpy-side init (python tests; rust mirrors the same spec semantics)
+    # ------------------------------------------------------------------
+
+    def init_numpy(self, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        out = np.zeros(self.size, dtype=np.float32)
+        for f in self.fields:
+            seg = _init_field(f, rng, seed)
+            if f.dtype == "u32":
+                seg = seg.astype(np.uint32).view(np.float32)
+            out[self.offsets[f.name]:self.offsets[f.name] + f.size] = (
+                seg.astype(np.float32).reshape(-1)
+            )
+        return out
+
+    # ------------------------------------------------------------------
+    # manifest serialization
+    # ------------------------------------------------------------------
+
+    def manifest(self) -> List[dict]:
+        return [
+            {
+                "name": f.name,
+                "offset": self.offsets[f.name],
+                "size": f.size,
+                "shape": list(f.shape),
+                "dtype": f.dtype,
+                "init": f.init,
+                "group": f.group,
+                "per_agent": f.per_agent,
+            }
+            for f in self.fields
+        ]
+
+
+def _init_field(f: Field, rng: np.random.Generator, seed: int) -> np.ndarray:
+    spec = f.init
+    if spec == "zeros":
+        return np.zeros(f.shape, np.float32)
+    if spec == "ones":
+        return np.ones(f.shape, np.float32)
+    if spec == "step":
+        return np.zeros(f.shape, np.uint32)
+    if spec == "key":
+        # Per-agent threefry key material: distinct, deterministic in seed.
+        n = f.size
+        vals = np.arange(n, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(seed)
+        vals ^= vals >> np.uint64(31)
+        return (vals & np.uint64(0xFFFFFFFF)).astype(np.uint32).reshape(f.shape)
+    if spec.startswith("const:"):
+        return np.full(f.shape, float(spec.split(":", 1)[1]), np.float32)
+    if spec.startswith("lecun_uniform:"):
+        fan_in = int(spec.split(":", 1)[1])
+        bound = math.sqrt(3.0 / max(fan_in, 1))
+        return rng.uniform(-bound, bound, f.shape).astype(np.float32)
+    if spec.startswith("uniform:"):
+        lo, hi = (float(v) for v in spec.split(":", 1)[1].split(","))
+        return rng.uniform(lo, hi, f.shape).astype(np.float32)
+    raise ValueError(f"unknown init spec {spec!r} for field {f.name}")

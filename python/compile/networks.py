@@ -1,0 +1,208 @@
+"""L2 network definitions built on the L1 Pallas kernel.
+
+MLPs (TD3/SAC actors and critics) route every affine transform through
+``kernels.pop_linear`` so the Pallas kernel sits on the hot path of both the
+forward and the backward pass. The DQN conv stack uses the grouped-conv
+trick from the paper (``feature_group_count = population``), with a
+``vmap`` variant kept for the ablation bench.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pop_linear as pk
+from .layout import Field
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_fields(prefix: str, pop: int, in_dim: int, hidden: Sequence[int],
+               out_dim: int, group: str, final_uniform: float = 0.0) -> List[Field]:
+    """Layout fields for a population-batched MLP.
+
+    ``final_uniform > 0`` initializes the last layer from U(-b, b) (the
+    small-final-layer convention of TD3/SAC actor/critic heads).
+    """
+    dims = [in_dim] + list(hidden) + [out_dim]
+    fields: List[Field] = []
+    n_layers = len(dims) - 1
+    for li, (i, o) in enumerate(zip(dims[:-1], dims[1:])):
+        last = li == n_layers - 1
+        if last and final_uniform > 0.0:
+            w_init = f"uniform:{-final_uniform},{final_uniform}"
+            b_init = f"uniform:{-final_uniform},{final_uniform}"
+        else:
+            w_init = f"lecun_uniform:{i}"
+            b_init = f"lecun_uniform:{i}"
+        fields.append(Field(f"{prefix}/w{li}", (pop, i, o), "f32", w_init, group))
+        fields.append(Field(f"{prefix}/b{li}", (pop, o), "f32", b_init, group))
+    return fields
+
+
+def mlp_apply(params: Params, prefix: str, x: jnp.ndarray, *,
+              hidden_act: str = "relu", final_act: str = "none") -> jnp.ndarray:
+    """Apply a population-batched MLP. x: [P, B, I] -> [P, B, O]."""
+    layers = sorted(
+        {int(k.rsplit("/w", 1)[1]) for k in params if k.startswith(f"{prefix}/w")}
+    )
+    h = x
+    for li in layers:
+        act = final_act if li == layers[-1] else hidden_act
+        h = pk.pop_linear(h, params[f"{prefix}/w{li}"], params[f"{prefix}/b{li}"], act)
+    return h
+
+
+def mlp_num_layers(params: Params, prefix: str) -> int:
+    return len([k for k in params if k.startswith(f"{prefix}/w")])
+
+
+# ---------------------------------------------------------------------------
+# Conv (DQN)
+# ---------------------------------------------------------------------------
+
+
+def conv_fields(prefix: str, pop: int, in_ch: int, features: int,
+                ksize: int, group: str) -> List[Field]:
+    fan_in = in_ch * ksize * ksize
+    return [
+        Field(f"{prefix}/w", (pop, ksize, ksize, in_ch, features), "f32",
+              f"lecun_uniform:{fan_in}", group),
+        Field(f"{prefix}/b", (pop, features), "f32", f"lecun_uniform:{fan_in}", group),
+    ]
+
+
+def pop_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+             method: str = "group",
+             strides: Tuple[int, int] = (1, 1)) -> jnp.ndarray:
+    """Population-batched 2D valid conv.
+
+    x: [P, B, H, W, C], w: [P, kh, kw, C, F], b: [P, F] -> [P, B, H', W', F]
+
+    ``method='group'`` folds the population into the channel axis and uses
+    ``feature_group_count`` (the trick the paper reports as faster than
+    vmap for convolutions); ``method='vmap'`` is the ablation baseline.
+    """
+    p, bsz, h, wd, c = x.shape
+    _, kh, kw, _, f = w.shape
+    if method == "group":
+        # [P,B,H,W,C] -> [B,H,W,P*C]; filters [kh,kw,C,P*F]
+        xt = x.transpose(1, 2, 3, 0, 4).reshape(bsz, h, wd, p * c)
+        wt = w.transpose(1, 2, 3, 0, 4).reshape(kh, kw, c, p * f)
+        y = jax.lax.conv_general_dilated(
+            xt, wt, window_strides=strides, padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=p,
+        )
+        ho, wo = y.shape[1], y.shape[2]
+        y = y.reshape(bsz, ho, wo, p, f).transpose(3, 0, 1, 2, 4)
+    elif method == "vmap":
+        def one(xi, wi):
+            return jax.lax.conv_general_dilated(
+                xi, wi, window_strides=strides, padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        y = jax.vmap(one)(x, w)
+    else:
+        raise ValueError(f"unknown conv method {method!r}")
+    return y + b[:, None, None, None, :]
+
+
+def conv_out_hw(h: int, w: int, k: int, s: int) -> Tuple[int, int]:
+    """VALID-conv output spatial dims."""
+    return (h - k) // s + 1, (w - k) // s + 1
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-specific heads
+# ---------------------------------------------------------------------------
+
+
+def actor_apply(params: Params, prefix: str, obs: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic tanh actor (TD3): obs [P,B,O] -> actions in [-1,1]."""
+    return mlp_apply(params, prefix, obs, hidden_act="relu", final_act="tanh")
+
+
+def gaussian_actor_apply(params: Params, prefix: str, obs: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SAC squashed-Gaussian actor head: returns (mu, log_std)."""
+    out = mlp_apply(params, prefix, obs, hidden_act="relu", final_act="none")
+    mu, log_std = jnp.split(out, 2, axis=-1)
+    log_std = jnp.clip(log_std, -20.0, 2.0)
+    return mu, log_std
+
+
+def critic_apply(params: Params, prefix: str, obs: jnp.ndarray,
+                 act: jnp.ndarray) -> jnp.ndarray:
+    """Q(s, a) critic: returns [P, B]."""
+    x = jnp.concatenate([obs, act], axis=-1)
+    q = mlp_apply(params, prefix, x, hidden_act="relu", final_act="none")
+    return q[..., 0]
+
+
+def dqn_apply(params: Params, prefix: str, obs: jnp.ndarray, *,
+              conv_method: str = "group") -> jnp.ndarray:
+    """MinAtar-scale DQN: conv(16,3x3) relu -> fc(128) relu -> fc(A).
+
+    obs: [P, B, H, W, C] -> q-values [P, B, A].
+    """
+    h = pop_conv(obs, params[f"{prefix}/conv/w"], params[f"{prefix}/conv/b"],
+                 method=conv_method)
+    h = jnp.maximum(h, 0.0)
+    p, bsz = h.shape[0], h.shape[1]
+    h = h.reshape(p, bsz, -1)
+    return mlp_apply(params, f"{prefix}/head", h,
+                     hidden_act="relu", final_act="none")
+
+
+def dqn_fields(prefix: str, pop: int, h: int, w: int, c: int, n_actions: int,
+               group: str, conv_features: int = 16, fc: int = 128) -> List[Field]:
+    ho, wo = h - 2, w - 2  # 3x3 valid conv
+    flat = ho * wo * conv_features
+    fields = conv_fields(f"{prefix}/conv", pop, c, conv_features, 3, group)
+    fields += mlp_fields(f"{prefix}/head", pop, flat, [fc], n_actions, group)
+    return fields
+
+
+# Mnih et al. (2013/2015) Atari DQN architecture — used for the Fig 2 DQN
+# rows at the paper's original 84x84x4 frame scale: conv(32,8x8,s4) relu,
+# conv(64,4x4,s2) relu, conv(64,3x3,s1) relu, fc(512) relu, fc(A).
+ATARI_CONVS: Tuple[Tuple[int, int, int], ...] = ((32, 8, 4), (64, 4, 2), (64, 3, 1))
+
+
+def dqn_atari_apply(params: Params, prefix: str, obs: jnp.ndarray, *,
+                    conv_method: str = "group") -> jnp.ndarray:
+    """Full Atari DQN stack. obs: [P, B, 84, 84, 4] -> q [P, B, A]."""
+    h = obs
+    for li, (_, k, s) in enumerate(ATARI_CONVS):
+        h = pop_conv(h, params[f"{prefix}/conv{li}/w"],
+                     params[f"{prefix}/conv{li}/b"],
+                     method=conv_method, strides=(s, s))
+        h = jnp.maximum(h, 0.0)
+    p, bsz = h.shape[0], h.shape[1]
+    h = h.reshape(p, bsz, -1)
+    return mlp_apply(params, f"{prefix}/head", h,
+                     hidden_act="relu", final_act="none")
+
+
+def dqn_atari_fields(prefix: str, pop: int, h: int, w: int, c: int,
+                     n_actions: int, group: str, fc: int = 512) -> List[Field]:
+    fields: List[Field] = []
+    ch = c
+    hh, ww = h, w
+    for li, (feats, k, s) in enumerate(ATARI_CONVS):
+        fields += conv_fields(f"{prefix}/conv{li}", pop, ch, feats, k, group)
+        hh, ww = conv_out_hw(hh, ww, k, s)
+        ch = feats
+    flat = hh * ww * ch
+    fields += mlp_fields(f"{prefix}/head", pop, flat, [fc], n_actions, group)
+    return fields

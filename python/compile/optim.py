@@ -1,0 +1,91 @@
+"""Population-vectorized Adam (hand-rolled; optax is not in the image).
+
+The twist over textbook Adam is that the learning rate is a *vector* over
+the population axis — PBT tunes it per agent — and updates can be masked
+per agent (TD3's delayed policy updates, DQN's periodic target copies).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .layout import Field
+
+Params = Dict[str, jnp.ndarray]
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_fields(prefix: str, param_fields: List[Field]) -> List[Field]:
+    """First/second-moment slots mirroring a set of parameter fields."""
+    out: List[Field] = []
+    for f in param_fields:
+        out.append(Field(f"{prefix}/m/{f.name}", f.shape, "f32", "zeros", "opt",
+                         f.per_agent))
+        out.append(Field(f"{prefix}/v/{f.name}", f.shape, "f32", "zeros", "opt",
+                         f.per_agent))
+    return out
+
+
+def _bc(vec: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a per-agent vector [P] against a [P, ...] tensor."""
+    return vec.reshape(vec.shape + (1,) * (like.ndim - vec.ndim))
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    step: jnp.ndarray,       # u32 [P] (or scalar [1] for shared params)
+    lr: jnp.ndarray,         # f32 [P] (or [1])
+    mask: Optional[jnp.ndarray] = None,  # f32 [P] in {0,1}: apply update or not
+    b1: float = ADAM_B1,
+    b2: float = ADAM_B2,
+    eps: float = ADAM_EPS,
+) -> Tuple[Params, Params, Params]:
+    """One (optionally masked) Adam step. Returns (params', m', v').
+
+    Masked members keep params *and* moments unchanged, exactly as if the
+    step had not happened for them — the step counter passed in must then
+    also not advance for those members (callers handle that).
+    """
+    t = (step + 1).astype(jnp.float32)
+    new_p: Params = {}
+    new_m: Params = {}
+    new_v: Params = {}
+    for k, p in params.items():
+        g = grads[k]
+        mk = b1 * m[k] + (1.0 - b1) * g
+        vk = b2 * v[k] + (1.0 - b2) * g * g
+        tb = _bc(t, p)
+        mhat = mk / (1.0 - b1 ** tb)
+        vhat = vk / (1.0 - b2 ** tb)
+        upd = _bc(lr, p) * mhat / (jnp.sqrt(vhat) + eps)
+        if mask is not None:
+            mb = _bc(mask, p)
+            new_p[k] = p - mb * upd
+            new_m[k] = mb * mk + (1.0 - mb) * m[k]
+            new_v[k] = mb * vk + (1.0 - mb) * v[k]
+        else:
+            new_p[k] = p - upd
+            new_m[k] = mk
+            new_v[k] = vk
+    return new_p, new_m, new_v
+
+
+def polyak(target: Params, online: Params, tau: float,
+           mask: Optional[jnp.ndarray] = None) -> Params:
+    """Soft target update, optionally masked per agent."""
+    out: Params = {}
+    for k, tp in target.items():
+        nt = (1.0 - tau) * tp + tau * online[k]
+        if mask is not None:
+            mb = _bc(mask, tp)
+            nt = mb * nt + (1.0 - mb) * tp
+        out[k] = nt
+    return out

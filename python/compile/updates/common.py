@@ -1,0 +1,102 @@
+"""Shared plumbing for the population update-step functions."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..layout import Field, Layout
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchArg:
+    """One batch input of the lowered update function."""
+    name: str
+    shape: Tuple[int, ...]  # per-step shape, WITHOUT the num_steps axis
+    dtype: str = "f32"      # f32 | i32
+
+    def jnp_dtype(self):
+        return {"f32": jnp.float32, "i32": jnp.int32}[self.dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Tensor-shape description of an environment family member."""
+    name: str
+    obs_dim: int = 0
+    act_dim: int = 0
+    # pixel-env extras (DQN)
+    frame: Tuple[int, int, int] = (0, 0, 0)  # H, W, C
+    n_actions: int = 0
+
+
+def split_keys(keys: jnp.ndarray, n: int) -> List[jnp.ndarray]:
+    """Split per-agent threefry keys [P, 2] u32 into n fresh key sets."""
+    splits = jax.vmap(lambda k: jax.random.split(k, n))(keys)  # [P, n, 2]
+    return [splits[:, i, :] for i in range(n)]
+
+
+def pop_normal(keys: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Per-agent standard normals: keys [P,2] -> [P, *shape]."""
+    return jax.vmap(lambda k: jax.random.normal(k, shape))(keys)
+
+
+def pop_uniform(keys: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return jax.vmap(lambda k: jax.random.uniform(k, shape))(keys)
+
+
+def delayed_mask(step: jnp.ndarray, freq: jnp.ndarray) -> jnp.ndarray:
+    """Per-agent {0,1} mask realizing an average update rate ``freq``.
+
+    ``floor((t+1)*f) > floor(t*f)`` fires exactly round(T*f) times in T
+    steps, deterministically — the PBT-tunable analogue of TD3's
+    policy_delay (freq = 1/delay).
+    """
+    t = step.astype(jnp.float32)
+    f = jnp.clip(freq, 1e-6, 1.0)
+    return (jnp.floor((t + 1.0) * f) > jnp.floor(t * f)).astype(jnp.float32)
+
+
+def scan_steps(
+    single_step: Callable[[jnp.ndarray, Tuple[jnp.ndarray, ...]], jnp.ndarray],
+    num_steps: int,
+    state: jnp.ndarray,
+    batches: Sequence[jnp.ndarray],
+) -> jnp.ndarray:
+    """Chain ``num_steps`` update steps inside one lowered computation.
+
+    ``batches`` carry a leading ``num_steps`` axis when num_steps > 1; the
+    whole chain compiles to a single ``lax.scan`` so the paper's
+    "num_steps=50 in one execution call" trick is one artifact.
+    """
+    if num_steps == 1:
+        return single_step(state, tuple(batches))
+
+    def body(carry, xs):
+        return single_step(carry, xs), ()
+
+    out, _ = jax.lax.scan(body, state, tuple(batches), length=num_steps)
+    return out
+
+
+def transition_batch_args(pop: int, batch: int, obs_dim: int, act_dim: int
+                          ) -> List[BatchArg]:
+    """The (s, a, r, s', d) batch of the continuous-control algorithms."""
+    return [
+        BatchArg("obs", (pop, batch, obs_dim)),
+        BatchArg("act", (pop, batch, act_dim)),
+        BatchArg("rew", (pop, batch)),
+        BatchArg("next_obs", (pop, batch, obs_dim)),
+        BatchArg("done", (pop, batch)),
+    ]
+
+
+def hyper_field(name: str, pop: int, default: float) -> Field:
+    return Field(name, (pop,), "f32", f"const:{default}", "hyper")
+
+
+def metric_field(name: str, pop: int) -> Field:
+    return Field(name, (pop,), "f32", "zeros", "metric")

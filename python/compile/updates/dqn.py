@@ -1,0 +1,149 @@
+"""Population-vectorized DQN update step (Mnih et al., 2013).
+
+MinAtar-scale conv net (see DESIGN.md substitutions: one CPU core cannot
+drive 84x84x4 Atari frames, so the pixel pipeline is reproduced at 10x10x4
+with the same conv->fc architecture). Periodic hard target-network copies
+are realized with a per-agent step-mask so the whole population stays
+vectorized.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks, optim
+from ..layout import Field, Layout
+from . import common
+
+TARGET_PERIOD = 200
+
+
+def _arch_for(h: int) -> str:
+    """MinAtar-scale net for small frames; the full Mnih stack at 84x84."""
+    return "atari" if h >= 84 else "minatar"
+
+
+def _fields(prefix, pop, h, w, c, n_actions, group, arch):
+    if arch == "atari":
+        return networks.dqn_atari_fields(prefix, pop, h, w, c, n_actions, group)
+    return networks.dqn_fields(prefix, pop, h, w, c, n_actions, group)
+
+
+def _apply(params, prefix, obs, conv_method, arch):
+    if arch == "atari":
+        return networks.dqn_atari_apply(params, prefix, obs,
+                                        conv_method=conv_method)
+    return networks.dqn_apply(params, prefix, obs, conv_method=conv_method)
+
+
+def build_layout(pop: int, h: int, w: int, c: int, n_actions: int) -> Layout:
+    arch = _arch_for(h)
+    fields: List[Field] = []
+    fields += _fields("q", pop, h, w, c, n_actions, "critic", arch)
+    fields += _fields("q_t", pop, h, w, c, n_actions, "critic_target", arch)
+    fields += optim.adam_fields("adam", [f for f in fields if f.group == "critic"])
+    fields += [
+        common.hyper_field("lr", pop, 1e-4),
+        common.hyper_field("gamma", pop, 0.99),
+        common.hyper_field("eps_greedy", pop, 0.05),
+        Field("rng", (pop, 2), "u32", "key", "rng"),
+        Field("step", (pop,), "u32", "step", "step"),
+        common.metric_field("loss", pop),
+        common.metric_field("q_mean", pop),
+    ]
+    return Layout(fields)
+
+
+def sync_targets_numpy(layout: Layout, flat) -> None:
+    for f in layout.fields:
+        if f.group == "critic_target":
+            src = f.name.replace("q_t/", "q/", 1)
+            so, fo = layout.offsets[src], layout.offsets[f.name]
+            flat[fo:fo + f.size] = flat[so:so + f.size]
+
+
+def batch_args(pop: int, batch: int, h: int, w: int, c: int) -> List[common.BatchArg]:
+    return [
+        common.BatchArg("obs", (pop, batch, h, w, c)),
+        common.BatchArg("act", (pop, batch), "i32"),
+        common.BatchArg("rew", (pop, batch)),
+        common.BatchArg("next_obs", (pop, batch, h, w, c)),
+        common.BatchArg("done", (pop, batch)),
+    ]
+
+
+def make_update(pop: int, h: int, w: int, c: int, n_actions: int, batch: int,
+                num_steps: int = 1, conv_method: str = "group",
+                target_period: int = TARGET_PERIOD):
+    layout = build_layout(pop, h, w, c, n_actions)
+    bargs = batch_args(pop, batch, h, w, c)
+    arch = _arch_for(h)
+
+    def single_step(state, xs):
+        obs, act, rew, next_obs, done = xs
+        s = layout.unpack(state)
+        q_params = layout.group(s, "critic")
+        qt_params = layout.group(s, "critic_target")
+        step = s["step"]
+
+        q_next = _apply(qt_params, "q_t", next_obs, conv_method, arch)
+        target = rew + s["gamma"][:, None] * (1.0 - done) * jnp.max(q_next, axis=-1)
+        target = jax.lax.stop_gradient(target)
+
+        def loss_fn(qp):
+            q_all = _apply(qp, "q", obs, conv_method, arch)
+            onehot = jax.nn.one_hot(act, n_actions, dtype=q_all.dtype)
+            q_sel = jnp.sum(q_all * onehot, axis=-1)
+            td = q_sel - target
+            # Huber (the DQN error-clipping trick)
+            huber = jnp.where(jnp.abs(td) <= 1.0, 0.5 * td ** 2,
+                              jnp.abs(td) - 0.5)
+            per_agent = jnp.mean(huber, axis=1)
+            return jnp.sum(per_agent), (per_agent, jnp.mean(q_sel, axis=1))
+
+        (_, (loss, qmean)), grads = jax.value_and_grad(loss_fn, has_aux=True)(q_params)
+        m = {k[len("adam/m/"):]: v for k, v in s.items() if k.startswith("adam/m/")}
+        v = {k[len("adam/v/"):]: v for k, v in s.items() if k.startswith("adam/v/")}
+        q_params, m, v = optim.adam_update(q_params, grads, m, v, step, s["lr"])
+
+        # periodic hard target copy (per-agent mask keeps it vectorized)
+        copy = ((step + 1) % target_period == 0).astype(jnp.float32)
+        new_t = {}
+        for k, tv in qt_params.items():
+            ok = k.replace("q_t/", "q/", 1)
+            cb = copy.reshape((pop,) + (1,) * (tv.ndim - 1))
+            new_t[k] = cb * q_params[ok] + (1.0 - cb) * tv
+
+        out = dict(s)
+        out.update(q_params)
+        out.update(new_t)
+        for k, val in m.items():
+            out[f"adam/m/{k}"] = val
+        for k, val in v.items():
+            out[f"adam/v/{k}"] = val
+        out["step"] = step + 1
+        out["loss"] = loss
+        out["q_mean"] = qmean
+        return layout.pack(out)
+
+    def update(state, *batches):
+        return common.scan_steps(single_step, num_steps, state, batches)
+
+    return layout, update, bargs
+
+
+def make_q_forward(pop: int, h: int, w: int, c: int, n_actions: int,
+                   batch: int, conv_method: str = "group"):
+    """Greedy-action Q forward (rust-nn conv parity)."""
+    layout = build_layout(pop, h, w, c, n_actions)
+
+    arch = _arch_for(h)
+
+    def forward(state, obs):
+        s = layout.unpack(state)
+        return _apply(layout.group(s, "critic"), "q", obs, conv_method, arch)
+
+    return layout, forward, [common.BatchArg("obs", (pop, batch, h, w, c))]

@@ -1,0 +1,196 @@
+"""Population-vectorized SAC update step (Haarnoja et al., 2018).
+
+Squashed-Gaussian actor, twin critics, learned temperature (one per
+population member). Hyperparameters exposed to PBT match Appendix B.1:
+lr_policy, lr_critic, lr_alpha, target_entropy (as a multiplier of the
+default -|A|), reward_scale, gamma.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks, optim
+from ..layout import Field, Layout
+from . import common
+
+TAU = 0.005
+HIDDEN = (256, 256)
+LOG_EPS = 1e-6
+
+
+def build_layout(pop: int, obs_dim: int, act_dim: int, hidden=HIDDEN) -> Layout:
+    fields: List[Field] = []
+    fields += networks.mlp_fields("policy", pop, obs_dim, hidden, 2 * act_dim,
+                                  "policy", final_uniform=3e-3)
+    for q in ("q1", "q2"):
+        fields += networks.mlp_fields(q, pop, obs_dim + act_dim, hidden, 1,
+                                      "critic", final_uniform=3e-3)
+        fields += networks.mlp_fields(f"{q}_t", pop, obs_dim + act_dim, hidden, 1,
+                                      "critic_target", final_uniform=3e-3)
+    fields.append(Field("log_alpha", (pop,), "f32", "zeros", "alpha"))
+    fields += optim.adam_fields("adam_policy", [f for f in fields if f.group == "policy"])
+    fields += optim.adam_fields("adam_critic", [f for f in fields if f.group == "critic"])
+    fields += optim.adam_fields("adam_alpha", [f for f in fields if f.group == "alpha"])
+    fields += [
+        common.hyper_field("lr_policy", pop, 3e-4),
+        common.hyper_field("lr_critic", pop, 3e-4),
+        common.hyper_field("lr_alpha", pop, 3e-4),
+        common.hyper_field("target_entropy_mult", pop, 1.0),
+        common.hyper_field("reward_scale", pop, 1.0),
+        common.hyper_field("gamma", pop, 0.99),
+        Field("rng", (pop, 2), "u32", "key", "rng"),
+        Field("step", (pop,), "u32", "step", "step"),
+        common.metric_field("critic_loss", pop),
+        common.metric_field("policy_loss", pop),
+        common.metric_field("alpha", pop),
+        common.metric_field("entropy", pop),
+    ]
+    return Layout(fields)
+
+
+def sync_targets_numpy(layout: Layout, flat) -> None:
+    for f in layout.fields:
+        if f.group == "critic_target":
+            src = f.name.replace("_t/", "/", 1)
+            so, fo = layout.offsets[src], layout.offsets[f.name]
+            flat[fo:fo + f.size] = flat[so:so + f.size]
+
+
+def _sample(policy: Dict[str, jnp.ndarray], obs, keys, act_dim: int):
+    """Reparameterized tanh-Gaussian sample + log-prob. -> (a, logp)."""
+    mu, log_std = networks.gaussian_actor_apply(policy, "policy", obs)
+    std = jnp.exp(log_std)
+    eps = common.pop_normal(keys, (obs.shape[1], act_dim))
+    pre = mu + std * eps
+    a = jnp.tanh(pre)
+    logp = -0.5 * (eps ** 2 + 2.0 * log_std + jnp.log(2.0 * jnp.pi))
+    logp = jnp.sum(logp, axis=-1)
+    logp -= jnp.sum(jnp.log(1.0 - a ** 2 + LOG_EPS), axis=-1)
+    return a, logp
+
+
+def make_update(pop: int, obs_dim: int, act_dim: int, batch: int,
+                num_steps: int = 1, hidden=HIDDEN):
+    layout = build_layout(pop, obs_dim, act_dim, hidden)
+    batch_args = common.transition_batch_args(pop, batch, obs_dim, act_dim)
+    default_target_entropy = -float(act_dim)
+
+    def single_step(state, xs):
+        obs, act, rew, next_obs, done = xs
+        s = layout.unpack(state)
+        policy = layout.group(s, "policy")
+        critic = layout.group(s, "critic")
+        critic_t = layout.group(s, "critic_target")
+        step = s["step"]
+        alpha = jnp.exp(s["log_alpha"])
+        rng, k_next, k_pi = common.split_keys(s["rng"], 3)
+        target_entropy = default_target_entropy * s["target_entropy_mult"]
+
+        # ---- critic update -------------------------------------------
+        next_a, next_logp = _sample(policy, next_obs, k_next, act_dim)
+        q1_t = networks.critic_apply(critic_t, "q1_t", next_obs, next_a)
+        q2_t = networks.critic_apply(critic_t, "q2_t", next_obs, next_a)
+        soft_v = jnp.minimum(q1_t, q2_t) - alpha[:, None] * next_logp
+        target = s["reward_scale"][:, None] * rew \
+            + s["gamma"][:, None] * (1.0 - done) * soft_v
+        target = jax.lax.stop_gradient(target)
+
+        def critic_loss_fn(cp):
+            q1 = networks.critic_apply(cp, "q1", obs, act)
+            q2 = networks.critic_apply(cp, "q2", obs, act)
+            per_agent = jnp.mean((q1 - target) ** 2 + (q2 - target) ** 2, axis=1)
+            return jnp.sum(per_agent), per_agent
+
+        (_, closs), cgrads = jax.value_and_grad(critic_loss_fn, has_aux=True)(critic)
+        m_c = _sub(s, "adam_critic/m/")
+        v_c = _sub(s, "adam_critic/v/")
+        critic, m_c, v_c = optim.adam_update(critic, cgrads, m_c, v_c, step,
+                                             s["lr_critic"])
+
+        # ---- policy update -------------------------------------------
+        def policy_loss_fn(pp):
+            a, logp = _sample(pp, obs, k_pi, act_dim)
+            q1 = networks.critic_apply(critic, "q1", obs, a)
+            q2 = networks.critic_apply(critic, "q2", obs, a)
+            q = jnp.minimum(q1, q2)
+            per_agent = jnp.mean(alpha[:, None] * logp - q, axis=1)
+            return jnp.sum(per_agent), (per_agent, jnp.mean(-logp, axis=1))
+
+        (_, (ploss, entropy)), pgrads = jax.value_and_grad(
+            policy_loss_fn, has_aux=True)(policy)
+        m_p = _sub(s, "adam_policy/m/")
+        v_p = _sub(s, "adam_policy/v/")
+        policy, m_p, v_p = optim.adam_update(policy, pgrads, m_p, v_p, step,
+                                             s["lr_policy"])
+
+        # ---- temperature update --------------------------------------
+        def alpha_loss_fn(la):
+            # standard SAC temperature objective, entropy from policy sample
+            return jnp.sum(-la["log_alpha"] * (jax.lax.stop_gradient(
+                -entropy) + target_entropy))
+
+        agrads = jax.grad(alpha_loss_fn)({"log_alpha": s["log_alpha"]})
+        m_a = _sub(s, "adam_alpha/m/")
+        v_a = _sub(s, "adam_alpha/v/")
+        new_alpha, m_a, v_a = optim.adam_update(
+            {"log_alpha": s["log_alpha"]}, agrads, m_a, v_a, step, s["lr_alpha"])
+
+        critic_t = optim.polyak(
+            critic_t,
+            {**_rekey_sub(critic, "q1", "q1_t"), **_rekey_sub(critic, "q2", "q2_t")},
+            TAU)
+
+        out = dict(s)
+        out.update(policy)
+        out.update(critic)
+        out.update(critic_t)
+        out["log_alpha"] = new_alpha["log_alpha"]
+        _write_sub(out, "adam_policy", m_p, v_p)
+        _write_sub(out, "adam_critic", m_c, v_c)
+        _write_sub(out, "adam_alpha", m_a, v_a)
+        out["rng"] = rng
+        out["step"] = step + 1
+        out["critic_loss"] = closs
+        out["policy_loss"] = ploss
+        out["alpha"] = jnp.exp(new_alpha["log_alpha"])
+        out["entropy"] = entropy
+        return layout.pack(out)
+
+    def update(state, *batches):
+        return common.scan_steps(single_step, num_steps, state, batches)
+
+    return layout, update, batch_args
+
+
+def make_policy_forward(pop: int, obs_dim: int, act_dim: int, batch: int,
+                        hidden=HIDDEN):
+    """Deterministic (mean) actor forward for rust-nn parity tests."""
+    layout = build_layout(pop, obs_dim, act_dim, hidden)
+
+    def forward(state, obs):
+        s = layout.unpack(state)
+        mu, _ = networks.gaussian_actor_apply(layout.group(s, "policy"),
+                                              "policy", obs)
+        return jnp.tanh(mu)
+
+    return layout, forward, [common.BatchArg("obs", (pop, batch, obs_dim))]
+
+
+def _sub(s: Dict[str, jnp.ndarray], prefix: str) -> Dict[str, jnp.ndarray]:
+    return {k[len(prefix):]: v for k, v in s.items() if k.startswith(prefix)}
+
+
+def _write_sub(out: Dict[str, jnp.ndarray], prefix: str, m, v) -> None:
+    for k, val in m.items():
+        out[f"{prefix}/m/{k}"] = val
+    for k, val in v.items():
+        out[f"{prefix}/v/{k}"] = val
+
+
+def _rekey_sub(params: Dict[str, jnp.ndarray], old: str, new: str):
+    return {k.replace(f"{old}/", f"{new}/", 1): v for k, v in params.items()
+            if k.startswith(f"{old}/")}

@@ -1,0 +1,340 @@
+"""Shared-critic population TD3 — the CEM-RL update of §4.2 / Fig 4.
+
+CEM-RL (Pourchot & Sigaud, 2019) shares one twin critic across the whole
+population while each member owns its policy. The original ("seq")
+ordering intertwines critic updates between sequential per-agent policy
+updates, which forbids vectorization over the population. The paper's
+second-order modification ("vec") keeps the same number of critic updates
+but pushes each batch through *all* policy networks in parallel and
+averages the critic loss over the population, after which all policy
+updates happen in one vectorized shot.
+
+One lowered "round" performs, for population size P:
+  seq: for i in 0..P: critic step (batch_i, target-policy_i); policy_i step
+  vec: for i in 0..P: critic step (batch_i, loss averaged over all target
+       policies); then one parallel policy step for all P members
+so both variants do P critic updates and P policy updates per round on the
+same data budget — Fig 4 times one round.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks, optim
+from ..layout import Field, Layout
+from . import common
+
+TAU = 0.005
+NOISE_CLIP = 0.5
+HIDDEN = (256, 256)
+
+
+def build_layout(pop: int, obs_dim: int, act_dim: int, hidden=HIDDEN,
+                 with_dvd: bool = False) -> Layout:
+    fields: List[Field] = []
+    fields += networks.mlp_fields("policy", pop, obs_dim, hidden, act_dim,
+                                  "policy", final_uniform=3e-3)
+    fields += networks.mlp_fields("policy_t", pop, obs_dim, hidden, act_dim,
+                                  "policy_target", final_uniform=3e-3)
+    for q in ("q1", "q2"):
+        fields += networks.mlp_fields(q, 1, obs_dim + act_dim, hidden, 1,
+                                      "critic", final_uniform=3e-3)
+        fields += networks.mlp_fields(f"{q}_t", 1, obs_dim + act_dim, hidden, 1,
+                                      "critic_target", final_uniform=3e-3)
+    # the shared critic's leading axis is 1, not the population axis
+    fields = [_shared(f) if f.group in ("critic", "critic_target") else f
+              for f in fields]
+    fields += optim.adam_fields("adam_policy",
+                                [f for f in fields if f.group == "policy"])
+    fields += optim.adam_fields("adam_critic",
+                                [f for f in fields if f.group == "critic"])
+    fields += [
+        common.hyper_field("lr_policy", pop, 3e-4),
+        Field("lr_critic", (1,), "f32", "const:3e-4", "hyper", False),
+        Field("gamma", (1,), "f32", "const:0.99", "hyper", False),
+        Field("noise", (1,), "f32", "const:0.2", "hyper", False),
+        common.hyper_field("expl_noise", pop, 0.1),
+        Field("rng", (pop, 2), "u32", "key", "rng"),
+        Field("step", (pop,), "u32", "step", "step"),
+        Field("cstep", (1,), "u32", "step", "step", False),
+        Field("critic_loss", (1,), "f32", "zeros", "metric", False),
+        common.metric_field("policy_loss", pop),
+        Field("q_mean", (1,), "f32", "zeros", "metric", False),
+    ]
+    if with_dvd:
+        fields += [
+            Field("lambda_div", (1,), "f32", "const:0.1", "hyper", False),
+            Field("div_kernel_len", (1,), "f32", "const:1.0", "hyper", False),
+            Field("div_loss", (1,), "f32", "zeros", "metric", False),
+        ]
+    return Layout(fields)
+
+
+def _shared(f: Field) -> Field:
+    return Field(f.name, f.shape, f.dtype, f.init, f.group, per_agent=False)
+
+
+def sync_targets_numpy(layout: Layout, flat) -> None:
+    for f in layout.fields:
+        if f.group in ("policy_target", "critic_target"):
+            src = f.name.replace("_t/", "/", 1)
+            so, fo = layout.offsets[src], layout.offsets[f.name]
+            flat[fo:fo + f.size] = flat[so:so + f.size]
+
+
+def _critic_q(critic: Dict[str, jnp.ndarray], prefix: str, obs, act):
+    """Shared critic on population-shaped inputs: [P,B,·] -> [P,B]."""
+    p, b = obs.shape[0], obs.shape[1]
+    x = jnp.concatenate([obs, act], axis=-1).reshape(1, p * b, -1)
+    q = networks.mlp_apply(critic, prefix, x, hidden_act="relu",
+                           final_act="none")
+    return q[0, :, 0].reshape(p, b)
+
+
+def _logdet_psd(k):
+    """log-det of a small PSD matrix via hand-rolled Cholesky.
+
+    ``jnp.linalg.slogdet`` lowers to LAPACK typed-FFI custom-calls that
+    xla_extension 0.5.1 (the rust runtime) rejects; an unrolled Cholesky
+    over the (small, static) population size lowers to plain HLO and is
+    differentiable by jax autodiff.
+    """
+    n = k.shape[0]
+    l = jnp.zeros_like(k)
+    logdet = jnp.zeros(())
+    for i in range(n):
+        s = k[i, i] - jnp.sum(l[i, :i] ** 2)
+        lii = jnp.sqrt(jnp.maximum(s, 1e-10))
+        logdet = logdet + 2.0 * jnp.log(lii)
+        l = l.at[i, i].set(lii)
+        if i + 1 < n:
+            col = (k[i + 1:, i] - l[i + 1:, :i] @ l[i, :i]) / lii
+            l = l.at[i + 1:, i].set(col)
+    return logdet
+
+
+def _sub(s, prefix):
+    return {k[len(prefix):]: v for k, v in s.items() if k.startswith(prefix)}
+
+
+def _rekey_sub(params, old, new):
+    return {k.replace(f"{old}/", f"{new}/", 1): v for k, v in params.items()
+            if k.startswith(f"{old}/")}
+
+
+def make_update(pop: int, obs_dim: int, act_dim: int, batch: int,
+                ordering: str = "vec", num_steps: int = 1, hidden=HIDDEN,
+                dvd: bool = False, dvd_probes: int = 20):
+    """Returns (layout, update_fn, batch_args).
+
+    ordering: 'vec' (paper's modification, vectorizable) or 'seq'
+    (original CEM-RL interleaving — the Fig 4 baseline).
+    dvd: add the DvD (Parker-Holder et al., 2020) log-det diversity bonus
+    to the vectorized policy update.
+    """
+    if ordering not in ("vec", "seq"):
+        raise ValueError(f"ordering must be vec|seq, got {ordering!r}")
+    if dvd and ordering != "vec":
+        raise ValueError("DvD requires the vectorized ordering")
+    layout = build_layout(pop, obs_dim, act_dim, hidden, with_dvd=dvd)
+    batch_args = common.transition_batch_args(pop, batch, obs_dim, act_dim)
+
+    def critic_step(critic, m_c, v_c, cstep, critic_t, policy_t, lr_c, gamma,
+                    noise_sigma, key, obs_i, act_i, rew_i, next_obs_i, done_i,
+                    avg_over_pop: bool):
+        """One shared-critic Adam step from one batch.
+
+        avg_over_pop=False: targets from ONE policy (inputs already [1,B,·]).
+        avg_over_pop=True:  batch tiled over all P target policies, loss
+        averaged over the population (the §4.2 modification).
+        """
+        p_eff = policy_t["policy_t/w0"].shape[0] if avg_over_pop else 1
+        nobs = jnp.broadcast_to(next_obs_i, (p_eff,) + next_obs_i.shape[1:]) \
+            if avg_over_pop else next_obs_i
+        noise = jax.random.normal(key, (p_eff,) + (batch, act_dim)) * noise_sigma
+        noise = jnp.clip(noise, -NOISE_CLIP, NOISE_CLIP)
+        next_a = networks.actor_apply(policy_t, "policy_t", nobs)
+        next_a = jnp.clip(next_a + noise, -1.0, 1.0)
+        q1_t = _critic_q(critic_t, "q1_t", nobs, next_a)
+        q2_t = _critic_q(critic_t, "q2_t", nobs, next_a)
+        target = rew_i + gamma * (1.0 - done_i) * jnp.minimum(q1_t, q2_t)
+        target = jax.lax.stop_gradient(target)
+        obs_b = jnp.broadcast_to(obs_i, (p_eff,) + obs_i.shape[1:]) \
+            if avg_over_pop else obs_i
+        act_b = jnp.broadcast_to(act_i, (p_eff,) + act_i.shape[1:]) \
+            if avg_over_pop else act_i
+
+        def loss_fn(cp):
+            q1 = _critic_q(cp, "q1", obs_b, act_b)
+            q2 = _critic_q(cp, "q2", obs_b, act_b)
+            l = jnp.mean((q1 - target) ** 2 + (q2 - target) ** 2)
+            return l, jnp.mean(q1)
+
+        (loss, qm), grads = jax.value_and_grad(loss_fn, has_aux=True)(critic)
+        critic, m_c, v_c = optim.adam_update(
+            critic, grads, m_c, v_c, cstep, lr_c)
+        critic_t = optim.polyak(
+            critic_t,
+            {**_rekey_sub(critic, "q1", "q1_t"),
+             **_rekey_sub(critic, "q2", "q2_t")}, TAU)
+        return critic, m_c, v_c, critic_t, loss, qm
+
+    def policy_step_all(policy, m_p, v_p, step, critic, lr_p, obs,
+                        lam=None, klen=None, probes=None):
+        """Vectorized policy update for all P members (+ optional DvD)."""
+
+        def loss_fn(pp):
+            a = networks.actor_apply(pp, "policy", obs)
+            q = _critic_q(critic, "q1", obs, a)
+            per_agent = -jnp.mean(q, axis=1)
+            total = jnp.sum(per_agent)
+            dloss = jnp.zeros(())
+            if lam is not None:
+                # DvD: embed each member by its actions on shared probe
+                # states; maximize log-det of the RBF kernel matrix.
+                pa = networks.actor_apply(pp, "policy", probes)  # [P,M,A]
+                e = pa.reshape(pa.shape[0], -1)
+                d2 = jnp.sum((e[:, None, :] - e[None, :, :]) ** 2, axis=-1)
+                k = jnp.exp(-d2 / (2.0 * klen ** 2))
+                k = k + 1e-4 * jnp.eye(k.shape[0])
+                dloss = -_logdet_psd(k)
+                total = total + lam * dloss
+            return total, (per_agent, dloss)
+
+        (_, (ploss, dloss)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(policy)
+        policy, m_p, v_p = optim.adam_update(policy, grads, m_p, v_p, step,
+                                             lr_p)
+        return policy, m_p, v_p, ploss, dloss
+
+    def single_step(state, xs):
+        obs, act, rew, next_obs, done = xs
+        s = layout.unpack(state)
+        policy = layout.group(s, "policy")
+        policy_t = layout.group(s, "policy_target")
+        critic = layout.group(s, "critic")
+        critic_t = layout.group(s, "critic_target")
+        m_p, v_p = _sub(s, "adam_policy/m/"), _sub(s, "adam_policy/v/")
+        m_c, v_c = _sub(s, "adam_critic/m/"), _sub(s, "adam_critic/v/")
+        gamma = s["gamma"][0]
+        noise_sigma = s["noise"][0]
+        lr_c = s["lr_critic"]
+        rng, k_crit = common.split_keys(s["rng"], 2)
+
+        if ordering == "vec":
+            # P critic sub-steps, each averaging the loss over the whole
+            # population of target policies (scan keeps the artifact small).
+            def body(carry, xs_i):
+                critic, m_c, v_c, critic_t, cstep, closs, qm = carry
+                obs_i, act_i, rew_i, next_obs_i, done_i, key_i = xs_i
+                critic, m_c, v_c, critic_t, l, q = critic_step(
+                    critic, m_c, v_c, cstep, critic_t, policy_t, lr_c, gamma,
+                    noise_sigma, key_i, obs_i[None], act_i[None], rew_i[None],
+                    next_obs_i[None], done_i[None], avg_over_pop=True)
+                return (critic, m_c, v_c, critic_t, cstep + 1,
+                        closs + l, qm + q), ()
+
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, 7))(k_crit)
+            (critic, m_c, v_c, critic_t, cstep, closs, qm), _ = jax.lax.scan(
+                body,
+                (critic, m_c, v_c, critic_t, s["cstep"], jnp.zeros(()),
+                 jnp.zeros(())),
+                (obs, act, rew, next_obs, done, keys), length=pop)
+            closs, qm = closs / pop, qm / pop
+
+            probes = lam = klen = None
+            if dvd:
+                probes = jnp.broadcast_to(obs[0, :dvd_probes],
+                                          (pop, dvd_probes, obs_dim))
+                lam = s["lambda_div"][0]
+                klen = s["div_kernel_len"][0]
+            policy, m_p, v_p, ploss, dloss = policy_step_all(
+                policy, m_p, v_p, s["step"], critic, s["lr_policy"], obs,
+                lam=lam, klen=klen, probes=probes)
+            policy_t = optim.polyak(
+                policy_t, _rekey_sub(policy, "policy", "policy_t"), TAU)
+            new_step = s["step"] + 1
+        else:
+            # Original CEM-RL interleaving: agent i's critic update uses
+            # agent i's target policy only, then agent i's policy updates.
+            # The row-slicing data dependence is what blocks vectorization.
+            def body(carry, xs_i):
+                (critic, m_c, v_c, critic_t, cstep, policy, m_p, v_p,
+                 policy_t, closs, qm, ploss) = carry
+                obs_i, act_i, rew_i, next_obs_i, done_i, key_i, i = xs_i
+                pt_i = {k: jax.lax.dynamic_slice_in_dim(v, i, 1, 0)
+                        for k, v in policy_t.items()}
+                critic, m_c, v_c, critic_t, l, q = critic_step(
+                    critic, m_c, v_c, cstep, critic_t, pt_i, lr_c, gamma,
+                    noise_sigma, key_i, obs_i[None], act_i[None], rew_i[None],
+                    next_obs_i[None], done_i[None], avg_over_pop=False)
+
+                p_i = {k: jax.lax.dynamic_slice_in_dim(v, i, 1, 0)
+                       for k, v in policy.items()}
+                mp_i = {k: jax.lax.dynamic_slice_in_dim(v, i, 1, 0)
+                        for k, v in m_p.items()}
+                vp_i = {k: jax.lax.dynamic_slice_in_dim(v, i, 1, 0)
+                        for k, v in v_p.items()}
+                step_i = jax.lax.dynamic_slice_in_dim(s["step"], i, 1, 0)
+                lr_i = jax.lax.dynamic_slice_in_dim(s["lr_policy"], i, 1, 0)
+                p_i, mp_i, vp_i, pl, _ = policy_step_all(
+                    p_i, mp_i, vp_i, step_i, critic, lr_i, obs_i[None])
+                policy = {k: jax.lax.dynamic_update_slice_in_dim(
+                    policy[k], p_i[k], i, 0) for k in policy}
+                m_p = {k: jax.lax.dynamic_update_slice_in_dim(
+                    m_p[k], mp_i[k], i, 0) for k in m_p}
+                v_p = {k: jax.lax.dynamic_update_slice_in_dim(
+                    v_p[k], vp_i[k], i, 0) for k in v_p}
+                pt_new = optim.polyak(pt_i, _rekey_sub(p_i, "policy",
+                                                       "policy_t"), TAU)
+                policy_t = {k: jax.lax.dynamic_update_slice_in_dim(
+                    policy_t[k], pt_new[k], i, 0) for k in policy_t}
+                ploss = jax.lax.dynamic_update_slice_in_dim(
+                    ploss, pl, i, 0)
+                return (critic, m_c, v_c, critic_t, cstep + 1, policy, m_p,
+                        v_p, policy_t, closs + l, qm + q, ploss), ()
+
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, 7))(k_crit)
+            init = (critic, m_c, v_c, critic_t, s["cstep"], policy, m_p, v_p,
+                    policy_t, jnp.zeros(()), jnp.zeros(()),
+                    jnp.zeros((pop,), jnp.float32))
+            (critic, m_c, v_c, critic_t, cstep, policy, m_p, v_p, policy_t,
+             closs, qm, ploss), _ = jax.lax.scan(
+                body, init,
+                (obs, act, rew, next_obs, done, keys,
+                 jnp.arange(pop, dtype=jnp.int32)), length=pop)
+            closs, qm = closs / pop, qm / pop
+            dloss = jnp.zeros(())
+            new_step = s["step"] + 1
+
+        out = dict(s)
+        out.update(policy)
+        out.update(policy_t)
+        out.update(critic)
+        out.update(critic_t)
+        for k, val in m_p.items():
+            out[f"adam_policy/m/{k}"] = val
+        for k, val in v_p.items():
+            out[f"adam_policy/v/{k}"] = val
+        for k, val in m_c.items():
+            out[f"adam_critic/m/{k}"] = val
+        for k, val in v_c.items():
+            out[f"adam_critic/v/{k}"] = val
+        out["rng"] = rng
+        out["step"] = new_step
+        out["cstep"] = cstep
+        out["critic_loss"] = closs[None]
+        out["policy_loss"] = ploss
+        out["q_mean"] = qm[None]
+        if dvd:
+            out["div_loss"] = dloss[None]
+        return layout.pack(out)
+
+    def update(state, *batches):
+        return common.scan_steps(single_step, num_steps, state, batches)
+
+    return layout, update, batch_args

@@ -1,0 +1,192 @@
+"""Population-vectorized TD3 update step (Fujimoto et al., 2018).
+
+One lowered call updates all N members of the population: twin critics with
+clipped double-Q targets and target-policy smoothing, delayed policy and
+target updates, per-agent Adam with per-agent (PBT-tunable) hyperparameters.
+
+Hyperparameters exposed to PBT match Appendix B.1 of the paper:
+lr_policy, lr_critic, policy_freq (update frequency w.r.t. the critic),
+noise (target policy smoothing sigma), and gamma. ``expl_noise`` is carried
+in the state for the actors (L3) but unused by the update itself.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks, optim
+from ..layout import Field, Layout
+from . import common
+
+TAU = 0.005
+NOISE_CLIP = 0.5
+HIDDEN = (256, 256)
+
+
+def build_layout(pop: int, obs_dim: int, act_dim: int,
+                 hidden=HIDDEN) -> Layout:
+    fields: List[Field] = []
+    fields += networks.mlp_fields("policy", pop, obs_dim, hidden, act_dim,
+                                  "policy", final_uniform=3e-3)
+    fields += networks.mlp_fields("policy_t", pop, obs_dim, hidden, act_dim,
+                                  "policy_target", final_uniform=3e-3)
+    for q in ("q1", "q2"):
+        fields += networks.mlp_fields(q, pop, obs_dim + act_dim, hidden, 1,
+                                      "critic", final_uniform=3e-3)
+        fields += networks.mlp_fields(f"{q}_t", pop, obs_dim + act_dim, hidden, 1,
+                                      "critic_target", final_uniform=3e-3)
+    fields += optim.adam_fields("adam_policy", [f for f in fields if f.group == "policy"])
+    fields += optim.adam_fields("adam_critic", [f for f in fields if f.group == "critic"])
+    fields += [
+        common.hyper_field("lr_policy", pop, 3e-4),
+        common.hyper_field("lr_critic", pop, 3e-4),
+        common.hyper_field("gamma", pop, 0.99),
+        common.hyper_field("noise", pop, 0.2),
+        common.hyper_field("policy_freq", pop, 0.5),
+        common.hyper_field("expl_noise", pop, 0.1),
+        Field("rng", (pop, 2), "u32", "key", "rng"),
+        Field("step", (pop,), "u32", "step", "step"),
+        common.metric_field("critic_loss", pop),
+        common.metric_field("policy_loss", pop),
+        common.metric_field("q_mean", pop),
+    ]
+    return Layout(fields)
+
+
+def _target_sync(layout: Layout, s: Dict[str, jnp.ndarray]) -> None:
+    """Start targets equal to their online nets (applied at init by L3).
+
+    Target fields get their own random init in the layout; the Rust runtime
+    copies online -> target after init using the manifest groups. Python
+    tests use `sync_targets_numpy`.
+    """
+
+
+def sync_targets_numpy(layout: Layout, flat) -> None:
+    """In-place online->target copy on a numpy flat state (test helper)."""
+    import numpy as np
+
+    for f in layout.fields:
+        if f.group in ("policy_target", "critic_target"):
+            src = f.name.replace("_t/", "/", 1)
+            so, fo = layout.offsets[src], layout.offsets[f.name]
+            flat[fo:fo + f.size] = flat[so:so + f.size]
+
+
+def make_update(pop: int, obs_dim: int, act_dim: int, batch: int,
+                num_steps: int = 1, hidden=HIDDEN):
+    """Returns (layout, update_fn, batch_args)."""
+    layout = build_layout(pop, obs_dim, act_dim, hidden)
+    batch_args = common.transition_batch_args(pop, batch, obs_dim, act_dim)
+
+    def single_step(state, xs):
+        obs, act, rew, next_obs, done = xs
+        s = layout.unpack(state)
+        policy = layout.group(s, "policy")
+        policy_t = layout.group(s, "policy_target")
+        critic = layout.group(s, "critic")
+        critic_t = layout.group(s, "critic_target")
+        step = s["step"]
+        rng, k_noise = common.split_keys(s["rng"], 2)
+
+        # ---- critic update (every step) ------------------------------
+        noise = common.pop_normal(k_noise, (batch, act_dim))
+        noise = jnp.clip(noise * s["noise"][:, None, None],
+                         -NOISE_CLIP, NOISE_CLIP)
+        next_a = networks.actor_apply(policy_t, "policy_t", next_obs)
+        next_a = jnp.clip(next_a + noise, -1.0, 1.0)
+        q1_t = networks.critic_apply(critic_t, "q1_t", next_obs, next_a)
+        q2_t = networks.critic_apply(critic_t, "q2_t", next_obs, next_a)
+        target = rew + s["gamma"][:, None] * (1.0 - done) * jnp.minimum(q1_t, q2_t)
+        target = jax.lax.stop_gradient(target)
+
+        def critic_loss_fn(cp):
+            q1 = networks.critic_apply(cp, "q1", obs, act)
+            q2 = networks.critic_apply(cp, "q2", obs, act)
+            per_agent = jnp.mean((q1 - target) ** 2 + (q2 - target) ** 2, axis=1)
+            # sum over agents: gradients stay per-agent independent
+            return jnp.sum(per_agent), (per_agent, jnp.mean(q1, axis=1))
+
+        (_, (closs, qmean)), cgrads = jax.value_and_grad(
+            critic_loss_fn, has_aux=True)(critic)
+        m_c = {k[len("adam_critic/m/"):]: v for k, v in s.items()
+               if k.startswith("adam_critic/m/")}
+        v_c = {k[len("adam_critic/v/"):]: v for k, v in s.items()
+               if k.startswith("adam_critic/v/")}
+        critic, m_c, v_c = optim.adam_update(
+            critic, cgrads, m_c, v_c, step, s["lr_critic"])
+
+        # ---- delayed policy + target updates -------------------------
+        mask = common.delayed_mask(step, s["policy_freq"])
+
+        def policy_loss_fn(pp):
+            a = networks.actor_apply(pp, "policy", obs)
+            q = networks.critic_apply(critic, "q1", obs, a)
+            per_agent = -jnp.mean(q, axis=1)
+            return jnp.sum(per_agent), per_agent
+
+        (_, ploss), pgrads = jax.value_and_grad(
+            policy_loss_fn, has_aux=True)(policy)
+        m_p = {k[len("adam_policy/m/"):]: v for k, v in s.items()
+               if k.startswith("adam_policy/m/")}
+        v_p = {k[len("adam_policy/v/"):]: v for k, v in s.items()
+               if k.startswith("adam_policy/v/")}
+        policy, m_p, v_p = optim.adam_update(
+            policy, pgrads, m_p, v_p, step, s["lr_policy"], mask=mask)
+
+        policy_t = optim.polyak(
+            {k: policy_t[k] for k in policy_t}, _rekey(policy, "policy", "policy_t"),
+            TAU, mask=mask)
+        critic_t = optim.polyak(
+            {k: critic_t[k] for k in critic_t},
+            {**_rekey_sub(critic, "q1", "q1_t"), **_rekey_sub(critic, "q2", "q2_t")},
+            TAU, mask=mask)
+
+        out = dict(s)
+        out.update(policy)
+        out.update(policy_t)
+        out.update(critic)
+        out.update(critic_t)
+        for k, v in m_p.items():
+            out[f"adam_policy/m/{k}"] = v
+        for k, v in v_p.items():
+            out[f"adam_policy/v/{k}"] = v
+        for k, v in m_c.items():
+            out[f"adam_critic/m/{k}"] = v
+        for k, v in v_c.items():
+            out[f"adam_critic/v/{k}"] = v
+        out["rng"] = rng
+        out["step"] = step + 1
+        out["critic_loss"] = closs
+        out["policy_loss"] = ploss
+        out["q_mean"] = qmean
+        return layout.pack(out)
+
+    def update(state, *batches):
+        return common.scan_steps(single_step, num_steps, state, batches)
+
+    return layout, update, batch_args
+
+
+def _rekey(params: Dict[str, jnp.ndarray], old: str, new: str):
+    return {k.replace(f"{old}/", f"{new}/", 1): v for k, v in params.items()}
+
+
+def _rekey_sub(params: Dict[str, jnp.ndarray], old: str, new: str):
+    return {k.replace(f"{old}/", f"{new}/", 1): v for k, v in params.items()
+            if k.startswith(f"{old}/")}
+
+
+def make_policy_forward(pop: int, obs_dim: int, act_dim: int, batch: int,
+                        hidden=HIDDEN):
+    """Deterministic actor forward over the flat state (rust-nn parity)."""
+    layout = build_layout(pop, obs_dim, act_dim, hidden)
+
+    def forward(state, obs):
+        s = layout.unpack(state)
+        return networks.actor_apply(layout.group(s, "policy"), "policy", obs)
+
+    return layout, forward, [common.BatchArg("obs", (pop, batch, obs_dim))]

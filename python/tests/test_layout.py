@@ -1,0 +1,105 @@
+"""Flat-state layout: pack/unpack round trips, offsets, init specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.layout import Field, Layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def toy_layout():
+    return Layout([
+        Field("w", (2, 3), "f32", "lecun_uniform:3", "policy"),
+        Field("lr", (2,), "f32", "const:0.001", "hyper"),
+        Field("rng", (2, 2), "u32", "key", "rng"),
+        Field("step", (2,), "u32", "step", "step"),
+        Field("loss", (2,), "f32", "zeros", "metric"),
+    ])
+
+
+def test_offsets_are_contiguous():
+    lo = toy_layout()
+    assert lo.offsets["w"] == 0
+    assert lo.offsets["lr"] == 6
+    assert lo.offsets["rng"] == 8
+    assert lo.offsets["step"] == 12
+    assert lo.offsets["loss"] == 14
+    assert lo.size == 16
+
+
+def test_pack_unpack_roundtrip_including_u32():
+    lo = toy_layout()
+    vals = {
+        "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "lr": jnp.asarray([1e-3, 2e-3], jnp.float32),
+        "rng": jnp.asarray([[1, 2], [3, 0xFFFFFFFF]], jnp.uint32),
+        "step": jnp.asarray([7, 9], jnp.uint32),
+        "loss": jnp.asarray([0.5, -0.5], jnp.float32),
+    }
+    flat = lo.pack(vals)
+    assert flat.shape == (16,)
+    out = lo.unpack(flat)
+    for k, v in vals.items():
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(v), err_msg=k)
+        assert out[k].dtype == v.dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_init_numpy_respects_specs(seed):
+    lo = toy_layout()
+    flat = lo.init_numpy(seed)
+    assert flat.dtype == np.float32
+    w = flat[0:6]
+    bound = np.sqrt(3.0 / 3.0)
+    assert np.all(np.abs(w) <= bound)
+    np.testing.assert_allclose(flat[6:8], 1e-3)
+    keys = flat[8:12].view(np.uint32)
+    assert len(set(keys.tolist())) == 4  # distinct key material
+    steps = flat[12:14].view(np.uint32)
+    np.testing.assert_array_equal(steps, 0)
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        Layout([Field("a", (1,)), Field("a", (2,))])
+
+
+def test_pack_missing_field_rejected():
+    lo = toy_layout()
+    with pytest.raises(ValueError, match="missing"):
+        lo.pack({"w": jnp.zeros((2, 3))})
+
+
+def test_group_selection():
+    lo = toy_layout()
+    vals = lo.unpack(jnp.zeros(lo.size))
+    hyper = lo.group(vals, "hyper")
+    assert list(hyper) == ["lr"]
+    assert [f.name for f in lo.group_fields("rng")] == ["rng"]
+
+
+def test_manifest_shape():
+    lo = toy_layout()
+    m = lo.manifest()
+    assert [e["name"] for e in m] == ["w", "lr", "rng", "step", "loss"]
+    e = m[0]
+    assert e["offset"] == 0 and e["size"] == 6 and e["shape"] == [2, 3]
+    assert e["dtype"] == "f32" and e["group"] == "policy"
+
+
+def test_read_inside_jit():
+    lo = toy_layout()
+
+    @jax.jit
+    def get_step(flat):
+        return lo.read(flat, "step")
+
+    flat = jnp.asarray(lo.init_numpy(0))
+    s = get_step(flat)
+    assert s.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(s), [0, 0])

@@ -1,0 +1,338 @@
+"""L2 update-step semantics for all algorithms (small nets, fast).
+
+The decisive checks:
+  * pallas-vs-reference A/B: the whole TD3 update must produce identical
+    states whether pop_linear routes through Pallas or the jnp oracle;
+  * repeated same-batch updates reduce the critic loss (learning signal);
+  * per-agent isolation: one agent's batch never touches another's params;
+  * delayed policy updates, target syncs, masked Adam;
+  * shared-critic seq/vec variants both train; DvD's diversity term
+    pushes policies apart.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pop_linear as pk
+from compile.layout import Layout
+from compile.updates import common, dqn, sac, shared_critic as sc, td3
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def np_batches(bargs, seed=0, num_steps=1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for a in bargs:
+        shape = a.shape if num_steps == 1 else (num_steps,) + a.shape
+        if a.dtype == "i32":
+            out.append(jnp.asarray(rng.integers(0, 3, shape), jnp.int32))
+        elif a.name == "done":
+            out.append(jnp.asarray((rng.random(shape) < 0.1), jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(size=shape), jnp.float32))
+    return out
+
+
+def metric(layout: Layout, state, name):
+    o = layout.offsets[name]
+    f = layout.field(name)
+    return np.asarray(state)[o:o + f.size].reshape(f.shape)
+
+
+# ---------------------------------------------------------------------------
+# TD3
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def td3_setup():
+    layout, update, bargs = td3.make_update(3, 5, 2, 8, hidden=(16, 16))
+    flat = layout.init_numpy(0)
+    td3.sync_targets_numpy(layout, flat)
+    return layout, jax.jit(update), bargs, flat
+
+
+def test_td3_loss_decreases_on_fixed_batch(td3_setup):
+    layout, update, bargs, flat = td3_setup
+    batches = np_batches(bargs, 1)
+    s = update(jnp.asarray(flat), *batches)
+    first = metric(layout, s, "critic_loss").copy()
+    for _ in range(30):
+        s = update(s, *batches)
+    last = metric(layout, s, "critic_loss")
+    assert np.all(np.isfinite(np.asarray(s)))
+    assert np.all(last < first), f"{first} -> {last}"
+
+
+def test_td3_pallas_and_reference_paths_agree(td3_setup):
+    layout, _, bargs, flat = td3_setup
+    _, update_fn, _ = td3.make_update(3, 5, 2, 8, hidden=(16, 16))
+    batches = np_batches(bargs, 2)
+    try:
+        pk.set_use_pallas(False)
+        s_ref = jax.jit(update_fn)(jnp.asarray(flat), *batches)
+        s_ref.block_until_ready()
+    finally:
+        pk.set_use_pallas(True)
+    s_pal = jax.jit(update_fn)(jnp.asarray(flat), *batches)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_td3_agents_are_isolated(td3_setup):
+    layout, update, bargs, flat = td3_setup
+    b1 = np_batches(bargs, 3)
+    # change ONLY agent 2's batch
+    b2 = [b.at[2].add(1.0) if b.ndim >= 2 else b for b in b1]
+    # two steps so the delayed policy update fires at least once
+    s1 = update(update(jnp.asarray(flat), *b1), *b1)
+    s2 = update(update(jnp.asarray(flat), *b2), *b2)
+    for name in ("policy/w0", "q1/w0"):
+        f = layout.field(name)
+        a1 = metric(layout, s1, name)
+        a2 = metric(layout, s2, name)
+        np.testing.assert_array_equal(a1[0], a2[0], err_msg=f"{name} agent0")
+        np.testing.assert_array_equal(a1[1], a2[1], err_msg=f"{name} agent1")
+        assert not np.allclose(a1[2], a2[2]), f"{name} agent2 should differ"
+
+
+def test_td3_delayed_policy_update_respects_freq(td3_setup):
+    layout, update, bargs, flat = td3_setup
+    # freq=1: policy moves every step; freq->0: policy frozen
+    f = layout.field("policy_freq")
+    o = layout.offsets["policy_freq"]
+    frozen = flat.copy()
+    frozen[o:o + f.size] = 1e-7
+    batches = np_batches(bargs, 4)
+    s = update(jnp.asarray(frozen), *batches)
+    w_before = flat[layout.offsets["policy/w0"]:
+                    layout.offsets["policy/w0"] + layout.field("policy/w0").size]
+    w_after = metric(layout, s, "policy/w0").reshape(-1)
+    np.testing.assert_array_equal(w_after, w_before)
+    # critic still trains
+    assert np.all(metric(layout, s, "critic_loss") > 0)
+
+
+def test_td3_step_counter_and_rng_advance(td3_setup):
+    layout, update, bargs, flat = td3_setup
+    batches = np_batches(bargs, 5)
+    s1 = update(jnp.asarray(flat), *batches)
+    s2 = update(s1, *batches)
+    assert np.all(metric(layout, s2, "step").view(np.uint32) == 2)
+    k1 = metric(layout, s1, "rng").view(np.uint32)
+    k2 = metric(layout, s2, "rng").view(np.uint32)
+    assert not np.array_equal(k1, k2)
+
+
+def test_td3_num_steps_scan_equals_sequential_calls():
+    layout, upd1, bargs = td3.make_update(2, 4, 2, 6, hidden=(8, 8))
+    _, updk, _ = td3.make_update(2, 4, 2, 6, num_steps=3, hidden=(8, 8))
+    flat = layout.init_numpy(1)
+    td3.sync_targets_numpy(layout, flat)
+    bk = np_batches(bargs, 6, num_steps=3)
+    s_scan = jax.jit(updk)(jnp.asarray(flat), *bk)
+    s_seq = jnp.asarray(flat)
+    ju = jax.jit(upd1)
+    for i in range(3):
+        s_seq = ju(s_seq, *[b[i] for b in bk])
+    np.testing.assert_allclose(np.asarray(s_scan), np.asarray(s_seq),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_td3_policy_forward_in_range():
+    layout, fwd, bargs = td3.make_policy_forward(2, 4, 3, 5, hidden=(8, 8))
+    flat = layout.init_numpy(2)
+    obs = np_batches(bargs, 7)[0]
+    a = jax.jit(fwd)(jnp.asarray(flat), obs)
+    assert a.shape == (2, 5, 3)
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+
+
+# ---------------------------------------------------------------------------
+# SAC
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sac_setup():
+    layout, update, bargs = sac.make_update(2, 5, 2, 8, hidden=(16, 16))
+    flat = layout.init_numpy(0)
+    sac.sync_targets_numpy(layout, flat)
+    return layout, jax.jit(update), bargs, flat
+
+
+def test_sac_trains_and_stays_finite(sac_setup):
+    layout, update, bargs, flat = sac_setup
+    # freeze the temperature so the critic target is quasi-stationary and
+    # the loss trend is a meaningful learning signal
+    frozen = flat.copy()
+    o = layout.offsets["lr_alpha"]
+    frozen[o:o + layout.field("lr_alpha").size] = 0.0
+    batches = np_batches(bargs, 8)
+    s = update(jnp.asarray(frozen), *batches)
+    first = metric(layout, s, "critic_loss").copy()
+    losses = []
+    for _ in range(40):
+        s = update(s, *batches)
+        losses.append(metric(layout, s, "critic_loss").copy())
+    assert np.all(np.isfinite(np.asarray(s)))
+    # the loss must have meaningfully dipped below its starting point
+    min_loss = np.min(np.stack(losses), axis=0)
+    assert np.all(min_loss < 0.9 * first), f"{first} -> min {min_loss}"
+
+
+def test_sac_alpha_responds_to_entropy_target(sac_setup):
+    layout, update, bargs, flat = sac_setup
+    batches = np_batches(bargs, 9)
+    s = jnp.asarray(flat)
+    for _ in range(10):
+        s = update(s, *batches)
+    alpha = metric(layout, s, "alpha")
+    assert np.all(alpha > 0)
+    ent = metric(layout, s, "entropy")
+    assert np.all(np.isfinite(ent))
+
+
+def test_sac_reward_scale_changes_targets(sac_setup):
+    layout, update, bargs, flat = sac_setup
+    scaled = flat.copy()
+    o = layout.offsets["reward_scale"]
+    scaled[o:o + 2] = 10.0
+    batches = np_batches(bargs, 10)
+    s1 = update(jnp.asarray(flat), *batches)
+    s2 = update(jnp.asarray(scaled), *batches)
+    assert not np.allclose(metric(layout, s1, "critic_loss"),
+                           metric(layout, s2, "critic_loss"))
+
+
+# ---------------------------------------------------------------------------
+# DQN
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dqn_setup():
+    layout, update, bargs = dqn.make_update(2, 6, 6, 2, 3, 4, target_period=5)
+    flat = layout.init_numpy(0)
+    dqn.sync_targets_numpy(layout, flat)
+    return layout, jax.jit(update), bargs, flat
+
+
+def test_dqn_trains(dqn_setup):
+    layout, update, bargs, flat = dqn_setup
+    batches = np_batches(bargs, 11)
+    s = update(jnp.asarray(flat), *batches)
+    first = metric(layout, s, "loss").copy()
+    for _ in range(20):
+        s = update(s, *batches)
+    assert np.all(np.isfinite(np.asarray(s)))
+    assert np.all(metric(layout, s, "loss") <= first)
+
+
+def test_dqn_hard_target_copy_happens_at_period(dqn_setup):
+    layout, update, bargs, flat = dqn_setup
+    batches = np_batches(bargs, 12)
+    s = jnp.asarray(flat)
+    name_on, name_t = "q/conv/w", "q_t/conv/w"
+    for step in range(1, 7):
+        s = update(s, *batches)
+        on = metric(layout, s, name_on)
+        tg = metric(layout, s, name_t)
+        if step % 5 == 0:
+            np.testing.assert_array_equal(on, tg)
+        else:
+            assert not np.array_equal(on, tg), f"step {step}: target stale copy"
+
+
+def test_dqn_conv_group_and_vmap_agree():
+    l1, u1, bargs = dqn.make_update(2, 6, 6, 2, 3, 4, conv_method="group")
+    _, u2, _ = dqn.make_update(2, 6, 6, 2, 3, 4, conv_method="vmap")
+    flat = l1.init_numpy(3)
+    dqn.sync_targets_numpy(l1, flat)
+    batches = np_batches(bargs, 13)
+    s1 = jax.jit(u1)(jnp.asarray(flat), *batches)
+    s2 = jax.jit(u2)(jnp.asarray(flat), *batches)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Shared critic (CEM-RL) + DvD
+# ---------------------------------------------------------------------------
+
+
+def test_shared_critic_both_orderings_train():
+    for ordering in ("vec", "seq"):
+        layout, update, bargs = sc.make_update(3, 5, 2, 6, ordering=ordering,
+                                               hidden=(8, 8))
+        flat = layout.init_numpy(0)
+        sc.sync_targets_numpy(layout, flat)
+        batches = np_batches(bargs, 14)
+        ju = jax.jit(update)
+        s = ju(jnp.asarray(flat), *batches)
+        first = metric(layout, s, "critic_loss").copy()
+        for _ in range(10):
+            s = ju(s, *batches)
+        assert np.all(np.isfinite(np.asarray(s))), ordering
+        assert metric(layout, s, "critic_loss")[0] < first[0], ordering
+
+
+def test_shared_critic_counts_match_population():
+    layout, update, bargs = sc.make_update(4, 5, 2, 6, ordering="vec",
+                                           hidden=(8, 8))
+    flat = layout.init_numpy(1)
+    sc.sync_targets_numpy(layout, flat)
+    s = jax.jit(update)(jnp.asarray(flat), *np_batches(bargs, 15))
+    # one round = P critic sub-updates
+    cstep = metric(layout, s, "cstep").view(np.uint32)
+    assert cstep[0] == 4
+    step = metric(layout, s, "step").view(np.uint32)
+    np.testing.assert_array_equal(step, 1)
+
+
+def test_dvd_diversity_term_separates_policies():
+    def run(dvd):
+        layout, update, bargs = sc.make_update(
+            3, 5, 2, 6, ordering="vec", hidden=(8, 8), dvd=dvd, dvd_probes=4)
+        flat = layout.init_numpy(7)
+        sc.sync_targets_numpy(layout, flat)
+        if dvd:
+            o = layout.offsets["lambda_div"]
+            flat[o] = 5.0  # strong diversity pressure
+        batches = np_batches(bargs, 16)
+        ju = jax.jit(update)
+        s = jnp.asarray(flat)
+        for _ in range(15):
+            s = ju(s, *batches)
+        # pairwise distance between policy weight rows
+        w = metric(layout, s, "policy/w0")
+        d = 0.0
+        for i in range(3):
+            for j in range(i + 1, 3):
+                d += float(np.sum((w[i] - w[j]) ** 2))
+        return d, s
+
+    d_plain, _ = run(False)
+    d_dvd, s = run(True)
+    assert np.all(np.isfinite(np.asarray(s)))
+    assert d_dvd > d_plain, f"diversity {d_dvd} should exceed plain {d_plain}"
+
+
+def test_dvd_logdet_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(5, 5)).astype(np.float32)
+    k = a @ a.T + 5.0 * np.eye(5, dtype=np.float32)
+    ours = float(sc._logdet_psd(jnp.asarray(k)))
+    expected = float(np.linalg.slogdet(k)[1])
+    assert abs(ours - expected) < 1e-3
+
+
+def test_delayed_mask_average_rate():
+    step = jnp.arange(1000, dtype=jnp.uint32)
+    for freq in (0.2, 0.5, 1.0):
+        m = common.delayed_mask(step, jnp.full((1000,), freq))
+        rate = float(jnp.mean(m))
+        assert abs(rate - freq) < 0.01, f"freq {freq}: rate {rate}"

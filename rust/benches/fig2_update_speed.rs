@@ -1,0 +1,191 @@
+//! Fig 2: population update-step time vs population size for the three
+//! implementation strategies the paper compares, across TD3 / SAC / DQN.
+//!
+//!   Sequential  — run the single-agent (P=1) executable N times
+//!   Vectorized  — run the population-batched (P=N) executable once
+//!   Parallel    — N threads, each owning a P=1 executable + state,
+//!                 sharing the one accelerator concurrently
+//!
+//! Plus the paper's `num_steps` variant (k update steps chained in one
+//! execution call, no host copies in between — paper uses 50/10, we lower
+//! k=10 artifacts). Batches are preloaded on the device before timing, as
+//! in the paper's protocol. Speedups are reported w.r.t. Sequential —
+//! the analogue of the paper's Torch (Sequential) baseline (no torch in
+//! this image; see DESIGN.md "Substitutions").
+//!
+//! Requires `make bench-artifacts` for the full sweep; falls back to
+//! whatever pops exist.
+
+use fastpbrl::bench_support::data::{available_pops, random_batches, require_artifacts};
+use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
+use fastpbrl::manifest::Manifest;
+use fastpbrl::runtime::{Runtime, TrainState};
+use fastpbrl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 12, max_seconds: 25.0 }
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rng = Rng::new(0);
+
+    for (algo, env) in [
+        ("td3", "halfcheetah"),
+        ("sac", "halfcheetah"),
+        ("dqn", "minatar"),
+        ("td3ref", "halfcheetah"), // L1 ablation: jnp-ref kernel lowering
+    ] {
+        let pops = available_pops(&manifest, algo, env, 1);
+        if !require_artifacts(&pops, &format!("{algo}/{env} k=1")) {
+            continue;
+        }
+        let p1 = manifest.find(algo, env, 1, Some(1));
+        for &pop in &pops {
+            // ---- vectorized: one P=pop execution -------------------------
+            let art = manifest.find(algo, env, pop, Some(1))?;
+            let exe = rt.load(art)?;
+            let mut ts = TrainState::init(&rt, art, &mut rng, 1)?;
+            let batches = random_batches(&rt, art, &mut rng)?;
+            let refs: Vec<&xla::PjRtBuffer> = batches.iter().collect();
+            results.push(bench.run(&format!("{algo}_vectorized_p{pop}"), || {
+                ts.step(&exe, &refs).unwrap();
+                // force completion: read back one scalar
+                let _ = ts.fence().unwrap();
+            }));
+
+            // ---- sequential: pop executions of the P=1 artifact -----------
+            if let Ok(a1) = p1.as_ref() {
+                let exe1 = rt.load(a1)?;
+                let mut states: Vec<TrainState> = (0..pop)
+                    .map(|i| TrainState::init(&rt, a1, &mut rng, i as u64).unwrap())
+                    .collect();
+                let b1 = random_batches(&rt, a1, &mut rng)?;
+                let r1: Vec<&xla::PjRtBuffer> = b1.iter().collect();
+                results.push(bench.run(&format!("{algo}_sequential_p{pop}"), || {
+                    for ts in states.iter_mut() {
+                        ts.step(&exe1, &r1).unwrap();
+                    }
+                    let _ = states[0].fence().unwrap();
+                }));
+
+                // ---- parallel: pop concurrent client threads --------------
+                // The PJRT client is not Send (Rc internally), so each
+                // thread creates its OWN client + executable + state —
+                // which is exactly the paper's one-process-per-agent
+                // strategy sharing the accelerator. Setup (client create +
+                // compile) happens before the barrier; we time steady-state
+                // update throughput only.
+                let iters = bench.iters.min(8);
+                let barrier = std::sync::Barrier::new(pop + 1);
+                let mut wall_ms = f64::NAN;
+                std::thread::scope(|scope| {
+                    for i in 0..pop {
+                        let a1c = (*a1).clone();
+                        let barrier = &barrier;
+                        scope.spawn(move || {
+                            let mut rng = Rng::new(900 + i as u64);
+                            let rt = Runtime::cpu().unwrap();
+                            let exe = rt.load(&a1c).unwrap();
+                            let mut ts =
+                                TrainState::init(&rt, &a1c, &mut rng, i as u64).unwrap();
+                            let b = random_batches(&rt, &a1c, &mut rng).unwrap();
+                            let r: Vec<&xla::PjRtBuffer> = b.iter().collect();
+                            barrier.wait(); // start together
+                            for _ in 0..iters {
+                                ts.step(&exe, &r).unwrap();
+                            }
+                            let _ = ts.fence().unwrap();
+                            barrier.wait(); // finish together
+                        });
+                    }
+                    barrier.wait();
+                    let sw = fastpbrl::util::timer::Stopwatch::start();
+                    barrier.wait();
+                    wall_ms = sw.elapsed_ms();
+                });
+                let per_iter = wall_ms / iters as f64;
+                results.push(BenchResult {
+                    name: format!("{algo}_parallel_p{pop}"),
+                    iters,
+                    mean_ms: per_iter,
+                    std_ms: 0.0,
+                    p50_ms: per_iter,
+                    p90_ms: per_iter,
+                    min_ms: per_iter,
+                });
+            }
+        }
+
+        // ---- num_steps variant: k chained updates in one call -----------
+        let pops_k = available_pops(&manifest, algo, env, 10);
+        for &pop in &pops_k {
+            let art = manifest.find(algo, env, pop, Some(10))?;
+            let exe = rt.load(art)?;
+            let mut ts = TrainState::init(&rt, art, &mut rng, 2)?;
+            let batches = random_batches(&rt, art, &mut rng)?;
+            let refs: Vec<&xla::PjRtBuffer> = batches.iter().collect();
+            let r = bench.run(&format!("{algo}_vectorized_k10_p{pop}"), || {
+                ts.step(&exe, &refs).unwrap();
+                let _ = ts.fence().unwrap();
+            });
+            // normalize to per-update-step time for comparability
+            results.push(BenchResult {
+                name: format!("{algo}_vectorized_k10_p{pop}_per_step"),
+                mean_ms: r.mean_ms / 10.0,
+                std_ms: r.std_ms / 10.0,
+                p50_ms: r.p50_ms / 10.0,
+                p90_ms: r.p90_ms / 10.0,
+                min_ms: r.min_ms / 10.0,
+                ..r
+            });
+        }
+    }
+
+    report("fig2_update_speed", &results)?;
+
+    // ---- speedup table (the paper's reported metric) ---------------------
+    println!("\nSpeedup factors w.r.t. Sequential (same population size):");
+    println!("{:<10} {:>5} {:>12} {:>12} {:>12}", "algo", "pop", "vectorized", "parallel", "vec_k10");
+    for (algo, env) in [("td3", "halfcheetah"), ("sac", "halfcheetah"), ("dqn", "minatar")] {
+        for &pop in &available_pops(&manifest, algo, env, 1) {
+            let find = |pat: String| {
+                results.iter().find(|r| r.name == pat).map(|r| r.mean_ms)
+            };
+            let seq = find(format!("{algo}_sequential_p{pop}"));
+            let vec_ = find(format!("{algo}_vectorized_p{pop}"));
+            let par = find(format!("{algo}_parallel_p{pop}"));
+            let k10 = find(format!("{algo}_vectorized_k10_p{pop}_per_step"));
+            if let (Some(s), Some(v)) = (seq, vec_) {
+                println!(
+                    "{:<10} {:>5} {:>11.2}x {:>11.2}x {:>11.2}x",
+                    algo,
+                    pop,
+                    s / v,
+                    par.map(|p| s / p).unwrap_or(f64::NAN),
+                    k10.map(|k| s / k).unwrap_or(f64::NAN),
+                );
+            }
+        }
+    }
+
+    // ---- L1 ablation: pallas-interpret vs jnp-reference lowering ---------
+    let ablation: Vec<usize> = available_pops(&manifest, "td3ref", "halfcheetah", 1);
+    if !ablation.is_empty() {
+        println!("\nL1 kernel ablation (vectorized TD3 update, pallas vs jnp-ref lowering):");
+        println!("{:>5} {:>12} {:>12} {:>10}", "pop", "pallas_ms", "ref_ms", "ratio");
+        for &pop in &ablation {
+            let get = |n: String| results.iter().find(|r| r.name == n).map(|r| r.mean_ms);
+            if let (Some(p), Some(r)) = (
+                get(format!("td3_vectorized_p{pop}")),
+                get(format!("td3ref_vectorized_p{pop}")),
+            ) {
+                println!("{:>5} {:>12.3} {:>12.3} {:>9.2}x", pop, p, r, p / r);
+            }
+        }
+    }
+    Ok(())
+}

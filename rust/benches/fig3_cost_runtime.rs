@@ -1,0 +1,85 @@
+//! Fig 3 (+ Table 1): comparative cost and runtime of training a
+//! population on one accelerator (vectorized) vs allocating one CPU core
+//! per agent, as a function of population size.
+//!
+//! Method (see DESIGN.md "Substitutions"): the accelerator measurements
+//! come from this machine's PJRT CPU backend running the *vectorized*
+//! artifact; the CPU-per-agent baseline is the measured single-agent
+//! update time (its wall time is constant in population size — one core
+//! per agent — while its cost scales linearly). Costs use the paper's
+//! Table 1 posted prices verbatim, applied per accelerator model so the
+//! qualitative crossovers of Fig 3 can be read off. Absolute GPU runtimes
+//! are not measurable in this image; the runtime axis therefore reports
+//! our substrate's vectorized-vs-sequential ratio.
+
+use fastpbrl::bench_support::cost::{fig3_ratios, PRICES};
+use fastpbrl::bench_support::data::{available_pops, random_batches, require_artifacts};
+use fastpbrl::bench_support::harness::Bench;
+use fastpbrl::manifest::Manifest;
+use fastpbrl::runtime::{Runtime, TrainState};
+use fastpbrl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 10, max_seconds: 20.0 }
+    };
+    let mut rng = Rng::new(0);
+
+    println!("Table 1 — accelerator prices ($/h, averaged posted prices):");
+    for (name, price) in PRICES {
+        println!("  {name:<10} {price:.3}");
+    }
+
+    let (algo, env) = ("td3", "halfcheetah");
+    let pops = available_pops(&manifest, algo, env, 1);
+    if !require_artifacts(&pops, "td3/halfcheetah k=1") {
+        return Ok(());
+    }
+
+    // CPU-per-agent baseline: single-agent update time on one core.
+    let a1 = manifest.find(algo, env, 1, Some(1))?;
+    let exe1 = rt.load(a1)?;
+    let mut ts1 = TrainState::init(&rt, a1, &mut rng, 0)?;
+    let b1 = random_batches(&rt, a1, &mut rng)?;
+    let r1: Vec<&xla::PjRtBuffer> = b1.iter().collect();
+    let base = bench.run("cpu_per_agent_baseline", || {
+        ts1.step(&exe1, &r1).unwrap();
+        let _ = ts1.fence().unwrap();
+    });
+    println!("\nCPU-per-agent baseline update time: {:.3} ms (constant in pop size)",
+             base.mean_ms);
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("accelerator,pop,vec_ms,runtime_ratio,cost_ratio\n");
+    println!("\nFig 3 — runtime and cost vs one-CPU-core-per-agent (ratios < 1 favor the accelerator):");
+    println!("{:<12} {:>5} {:>10} {:>14} {:>12}", "accelerator", "pop", "vec_ms",
+             "runtime_ratio", "cost_ratio");
+    for &pop in &pops {
+        let art = manifest.find(algo, env, pop, Some(1))?;
+        let exe = rt.load(art)?;
+        let mut ts = TrainState::init(&rt, art, &mut rng, 1)?;
+        let batches = random_batches(&rt, art, &mut rng)?;
+        let refs: Vec<&xla::PjRtBuffer> = batches.iter().collect();
+        let v = bench.run(&format!("vec_p{pop}"), || {
+            ts.step(&exe, &refs).unwrap();
+            let _ = ts.fence().unwrap();
+        });
+        for (acc, _) in PRICES.iter().filter(|(n, _)| *n != "CPU_CORE") {
+            if let Some((rt_ratio, cost_ratio)) =
+                fig3_ratios(acc, v.mean_ms / 1e3, base.mean_ms / 1e3, pop)
+            {
+                println!("{:<12} {:>5} {:>10.3} {:>14.3} {:>12.3}",
+                         acc, pop, v.mean_ms, rt_ratio, cost_ratio);
+                csv.push_str(&format!("{acc},{pop},{:.4},{:.4},{:.4}\n",
+                                      v.mean_ms, rt_ratio, cost_ratio));
+            }
+        }
+    }
+    std::fs::write("results/fig3_cost_runtime.csv", csv)?;
+    println!("-> results/fig3_cost_runtime.csv");
+    Ok(())
+}

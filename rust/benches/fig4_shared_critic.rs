@@ -1,0 +1,60 @@
+//! Fig 4: runtime of one shared-critic TD3 update round vs population
+//! size — the original CEM-RL sequential interleaving ("seq", which
+//! cannot vectorize over the population because each critic update
+//! depends on the previous agent's policy update) against the paper's
+//! §4.2 vectorizable modification ("vec"). One round = P critic updates +
+//! P policy updates in both variants (same data budget).
+
+use fastpbrl::bench_support::data::{available_pops, random_batches, require_artifacts};
+use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
+use fastpbrl::manifest::Manifest;
+use fastpbrl::runtime::{Runtime, TrainState};
+use fastpbrl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 10, max_seconds: 25.0 }
+    };
+    let mut rng = Rng::new(0);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let env = "halfcheetah";
+    let mut pops = available_pops(&manifest, "cem", env, 1);
+    let pops_seq = available_pops(&manifest, "cemseq", env, 1);
+    pops.retain(|p| pops_seq.contains(p));
+    if !require_artifacts(&pops, "cem+cemseq/halfcheetah") {
+        return Ok(());
+    }
+
+    for &pop in &pops {
+        for algo in ["cem", "cemseq"] {
+            let art = manifest.find(algo, env, pop, Some(1))?;
+            let exe = rt.load(art)?;
+            let mut ts = TrainState::init(&rt, art, &mut rng, 3)?;
+            let batches = random_batches(&rt, art, &mut rng)?;
+            let refs: Vec<&xla::PjRtBuffer> = batches.iter().collect();
+            results.push(bench.run(&format!("{algo}_round_p{pop}"), || {
+                ts.step(&exe, &refs).unwrap();
+                let _ = ts.fence().unwrap();
+            }));
+        }
+    }
+    report("fig4_shared_critic", &results)?;
+
+    println!("\nVectorized (\u{a7}4.2) speedup over the original sequential ordering:");
+    println!("{:>5} {:>12} {:>12} {:>10}", "pop", "seq_ms", "vec_ms", "speedup");
+    for &pop in &pops {
+        let get = |n: String| results.iter().find(|r| r.name == n).map(|r| r.mean_ms);
+        if let (Some(s), Some(v)) = (
+            get(format!("cemseq_round_p{pop}")),
+            get(format!("cem_round_p{pop}")),
+        ) {
+            println!("{:>5} {:>12.3} {:>12.3} {:>9.2}x", pop, s, v, s / v);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table 3: initial compilation time for a population-20 update step
+//! (TD3 + SAC). In the paper this is jax JIT compilation on each GPU; in
+//! this stack the analogue is PJRT compilation of the AOT-lowered HLO at
+//! artifact load (jax tracing/lowering already happened at `make
+//! artifacts` and its time is recorded in the manifest as
+//! `lower_seconds`).
+
+use fastpbrl::manifest::Manifest;
+use fastpbrl::runtime::Runtime;
+use fastpbrl::util::stats::Running;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let reps = if std::env::var("BENCH_QUICK").is_ok() { 1 } else { 3 };
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("algo,pop,compile_s_mean,compile_s_std\n");
+    println!("Table 3 — initial compilation time (s), largest available pops:");
+    println!("{:<8} {:>5} {:>16}", "algo", "pop", "compile_s");
+    for algo in ["td3", "sac", "dqn", "cem", "cemseq"] {
+        // largest pop available for the canonical env
+        let art = manifest
+            .artifacts
+            .values()
+            .filter(|a| a.algo == algo && a.output == "state" && a.num_steps == 1)
+            .max_by_key(|a| a.pop);
+        let Some(art) = art else { continue };
+        let mut stats = Running::new();
+        for _ in 0..reps {
+            // fresh Runtime each rep: defeat the executable cache so we
+            // measure a cold compile, as the paper does
+            let rt = Runtime::cpu()?;
+            let exe = rt.load(art)?;
+            stats.push(exe.compile_seconds);
+        }
+        println!("{:<8} {:>5} {:>11.2} ±{:.2}", algo, art.pop, stats.mean(), stats.std());
+        csv.push_str(&format!("{algo},{},{:.3},{:.3}\n", art.pop, stats.mean(),
+                              stats.std()));
+    }
+    std::fs::write("results/table3_compile_time.csv", csv)?;
+    println!("-> results/table3_compile_time.csv");
+    println!(
+        "\n(paper Table 3: 4.8–9.5 s on K80..A100 for pop 20 with 50 chained \
+         steps; jax lower times for our artifacts are in artifacts/manifest.json)"
+    );
+    Ok(())
+}

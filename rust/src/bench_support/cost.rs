@@ -1,0 +1,69 @@
+//! Cloud-cost model (paper Table 1): averaged posted $/h over three cloud
+//! platforms for every accelerator the paper benchmarks, plus the
+//! CPU-core baseline. Fig 3 divides measured runtimes by these prices.
+
+/// (name, dollars per hour) — paper Table 1, verbatim.
+pub const PRICES: &[(&str, f64)] = &[
+    ("K80", 0.45),
+    ("T4", 0.34),
+    ("V100", 2.61),
+    ("A100", 2.98),
+    ("CPU_CORE", 0.062), // one Intel Xeon 2.80GHz core with 2GB RAM
+];
+
+pub fn price_per_hour(accelerator: &str) -> Option<f64> {
+    PRICES.iter().find(|(n, _)| *n == accelerator).map(|(_, p)| *p)
+}
+
+/// Dollars spent running `seconds` of wall time on `accelerator`.
+pub fn cost_of(accelerator: &str, seconds: f64) -> Option<f64> {
+    price_per_hour(accelerator).map(|p| p * seconds / 3600.0)
+}
+
+/// Relative speedup-per-dollar of accelerator vs the CPU-per-agent
+/// baseline (Fig 3's two panels: runtime ratio and cost ratio).
+///
+/// * `acc_seconds`: measured update-step time on the accelerator
+///   (whole population, vectorized).
+/// * `cpu_seconds`: measured update-step time of ONE agent on one core
+///   (the baseline allocates one core per agent, so its wall time is
+///   constant in population size while its cost scales with it).
+pub fn fig3_ratios(accelerator: &str, acc_seconds: f64, cpu_seconds: f64,
+                   pop: usize) -> Option<(f64, f64)> {
+    let acc_price = price_per_hour(accelerator)?;
+    let cpu_price = price_per_hour("CPU_CORE")?;
+    let runtime_ratio = acc_seconds / cpu_seconds;
+    let acc_cost = acc_price * acc_seconds;
+    let cpu_cost = cpu_price * cpu_seconds * pop as f64;
+    Some((runtime_ratio, acc_cost / cpu_cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_prices_present() {
+        for name in ["K80", "T4", "V100", "A100", "CPU_CORE"] {
+            assert!(price_per_hour(name).is_some(), "{name}");
+        }
+        assert_eq!(price_per_hour("TPU"), None);
+        assert!((price_per_hour("T4").unwrap() - 0.34).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_scales_linearly() {
+        let c1 = cost_of("A100", 3600.0).unwrap();
+        assert!((c1 - 2.98).abs() < 1e-9);
+        let c2 = cost_of("A100", 1800.0).unwrap();
+        assert!((c1 / c2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig3_cpu_baseline_cost_grows_with_pop() {
+        // same measured times, doubling pop halves relative accel cost
+        let (_, cost_ratio_10) = fig3_ratios("T4", 1.0, 1.0, 10).unwrap();
+        let (_, cost_ratio_20) = fig3_ratios("T4", 1.0, 1.0, 20).unwrap();
+        assert!((cost_ratio_10 / cost_ratio_20 - 2.0).abs() < 1e-9);
+    }
+}

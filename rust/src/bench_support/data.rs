@@ -1,0 +1,67 @@
+//! Shared helpers for the bench binaries: synthetic preloaded batches and
+//! artifact-sweep utilities.
+
+use crate::manifest::{Artifact, Dtype, Manifest};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Upload one set of random batches for an artifact (the paper's protocol
+/// preloads training data on the accelerator before timing update steps).
+pub fn random_batches(rt: &Runtime, art: &Artifact, rng: &mut Rng)
+                      -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+    let mut out = Vec::new();
+    for inp in &art.inputs[1..] {
+        let n = inp.numel();
+        let buf = match inp.dtype {
+            Dtype::I32 => {
+                let data: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+                rt.upload_i32(&data, &inp.shape)?
+            }
+            _ => {
+                let mut data = vec![0.0f32; n];
+                if inp.name == "done" {
+                    for v in data.iter_mut() {
+                        *v = (rng.below(10) == 0) as u8 as f32;
+                    }
+                } else {
+                    rng.fill_normal(&mut data, 0.5);
+                }
+                rt.upload_f32(&data, &inp.shape)?
+            }
+        };
+        out.push(buf);
+    }
+    Ok(out)
+}
+
+/// The paper's network size — sweeps are restricted to artifacts with
+/// this hidden geometry so population sizes are comparable.
+pub const PAPER_HIDDEN: &[usize] = &[256, 256];
+
+/// All pops for which an (algo, env, num_steps) artifact with the paper's
+/// hidden sizes exists, sorted.
+pub fn available_pops(m: &Manifest, algo: &str, env: &str, num_steps: usize)
+                      -> Vec<usize> {
+    let mut pops: Vec<usize> = m
+        .artifacts
+        .values()
+        .filter(|a| a.algo == algo && a.env == env && a.num_steps == num_steps
+                && a.output == "state" && a.hidden == PAPER_HIDDEN)
+        .map(|a| a.pop)
+        .collect();
+    pops.sort_unstable();
+    pops.dedup();
+    pops
+}
+
+/// Warn once when a sweep is empty because bench artifacts are missing.
+pub fn require_artifacts(pops: &[usize], what: &str) -> bool {
+    if pops.is_empty() {
+        eprintln!(
+            "[bench] no artifacts for {what}; run `make bench-artifacts` first \
+             (skipping this sweep)"
+        );
+        return false;
+    }
+    true
+}

@@ -1,0 +1,118 @@
+//! Micro-benchmark harness (criterion is not in the image): warmup +
+//! timed iterations with mean/std/percentiles, CSV-friendly reporting.
+
+use crate::util::stats::{percentile, Running};
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn csv_header() -> &'static str {
+        "name,iters,mean_ms,std_ms,p50_ms,p90_ms,min_ms"
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            self.name, self.iters, self.mean_ms, self.std_ms, self.p50_ms,
+            self.p90_ms, self.min_ms
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Stop early once this much wall time was spent measuring (0 = never).
+    pub max_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, iters: 20, max_seconds: 30.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, iters: 5, max_seconds: 10.0 }
+    }
+
+    /// Time `f` (one call = one measured iteration).
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let mut stats = Running::new();
+        let total = Stopwatch::start();
+        for _ in 0..self.iters {
+            let sw = Stopwatch::start();
+            f();
+            let ms = sw.elapsed_ms();
+            samples.push(ms);
+            stats.push(ms);
+            if self.max_seconds > 0.0 && total.elapsed_s() > self.max_seconds {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ms: stats.mean(),
+            std_ms: stats.std(),
+            p50_ms: percentile(&samples, 50.0),
+            p90_ms: percentile(&samples, 90.0),
+            min_ms: samples[0],
+        }
+    }
+}
+
+/// Write results to stdout (pretty) and `results/<file>.csv`.
+pub fn report(file: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{file}.csv");
+    let mut text = String::from(BenchResult::csv_header());
+    text.push('\n');
+    println!("\n== {file} ==");
+    println!("{:<48} {:>8} {:>10} {:>10}", "name", "iters", "mean_ms", "p50_ms");
+    for r in results {
+        println!("{:<48} {:>8} {:>10.3} {:>10.3}", r.name, r.iters, r.mean_ms, r.p50_ms);
+        text.push_str(&r.csv_row());
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    println!("-> {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bench { warmup_iters: 1, iters: 5, max_seconds: 0.0 };
+        let r = b.run("sleep", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 1.5, "mean {}", r.mean_ms);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p90_ms);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let b = Bench { warmup_iters: 0, iters: 1000, max_seconds: 0.05 };
+        let r = b.run("sleep", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(r.iters < 1000);
+    }
+}

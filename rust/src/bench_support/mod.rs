@@ -1,0 +1,4 @@
+//! Benchmark harness + cost model (criterion is not in the image).
+pub mod cost;
+pub mod data;
+pub mod harness;

@@ -1,0 +1,394 @@
+//! CEM-RL (Pourchot & Sigaud, 2019; paper §5.2).
+//!
+//! The Cross-Entropy Method maintains a diagonal Gaussian over *policy
+//! parameter vectors*. Each iteration: sample a population from the
+//! distribution, let half of it undergo TD3 updates against the shared
+//! critic (the vectorized §4.2 artifact — the non-trained half simply gets
+//! a zero policy learning rate), evaluate everyone, and refit the
+//! distribution on the top half.
+
+use crate::coordinator::population::Population;
+use crate::manifest::Manifest;
+use crate::nn::from_state::mlp_from_state;
+use crate::nn::mlp::Activation;
+use crate::replay::ReplayBuffer;
+use crate::runtime::Runtime;
+use crate::util::log::CsvLogger;
+use crate::util::rng::Rng;
+use crate::util::stats::{argsort_desc, mean};
+use crate::util::timer::PhaseTimer;
+
+/// Diagonal-Gaussian CEM over flat parameter vectors.
+#[derive(Clone, Debug)]
+pub struct Cem {
+    pub mu: Vec<f32>,
+    pub var: Vec<f32>,
+    /// Extra exploration noise added to the variance, decayed each update
+    /// (CEM-RL's eps; the paper bumps the initial value to 1e-2).
+    pub noise: f64,
+    pub noise_decay: f64,
+    pub noise_floor: f64,
+    /// Fraction of the population used to refit (CEM-RL: one half).
+    pub elite_frac: f64,
+}
+
+impl Cem {
+    pub fn new(mu: Vec<f32>, init_var: f64, elite_frac: f64) -> Self {
+        let n = mu.len();
+        Cem {
+            mu,
+            var: vec![init_var as f32; n],
+            noise: 1e-2, // paper B.2: increased from CEM-RL's 1e-3
+            noise_decay: 0.999,
+            noise_floor: 1e-6,
+            elite_frac,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn sample_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim());
+        for i in 0..out.len() {
+            out[i] = self.mu[i] + (self.var[i].max(0.0)).sqrt() * rng.normal() as f32;
+        }
+    }
+
+    /// Refit on elites (best-first order not required; plain average).
+    pub fn update(&mut self, elites: &[&[f32]]) {
+        assert!(!elites.is_empty());
+        let n = self.dim();
+        let m = elites.len() as f32;
+        for i in 0..n {
+            let mu = elites.iter().map(|e| e[i]).sum::<f32>() / m;
+            // variance around the NEW mean + exploration noise
+            let var = elites.iter().map(|e| (e[i] - mu) * (e[i] - mu)).sum::<f32>() / m;
+            self.mu[i] = mu;
+            self.var[i] = var + self.noise as f32;
+        }
+        self.noise = (self.noise * self.noise_decay).max(self.noise_floor);
+    }
+}
+
+pub struct CemRlConfig {
+    pub env: String,
+    pub pop: usize,
+    /// Update rounds between evaluations (each round = P critic updates +
+    /// one parallel policy update — see updates/shared_critic.py).
+    pub rounds_per_iter: usize,
+    pub iters: usize,
+    pub warmup_steps: usize,
+    pub steps_per_iter: usize,
+    pub replay_capacity: usize,
+    pub eval_episodes: usize,
+    pub seed: u64,
+    pub csv_path: String,
+    pub max_seconds: f64,
+    /// "vec" (paper's §4.2 modification) or "seq" (original CEM-RL order).
+    pub ordering: String,
+}
+
+impl Default for CemRlConfig {
+    fn default() -> Self {
+        CemRlConfig {
+            env: "halfcheetah".into(),
+            pop: 10,
+            rounds_per_iter: 10,
+            iters: 10,
+            warmup_steps: 1000,
+            steps_per_iter: 1000,
+            replay_capacity: 200_000,
+            eval_episodes: 1,
+            seed: 0,
+            csv_path: String::new(),
+            max_seconds: 0.0,
+            ordering: "vec".into(),
+        }
+    }
+}
+
+pub struct CemRlSummary {
+    pub best_return: f64,
+    pub mean_return: f64,
+    pub mu_return: f64,
+    pub wall_seconds: f64,
+    pub env_steps: u64,
+    pub updates: u64,
+    pub timers: PhaseTimer,
+}
+
+/// Full CEM-RL training driver (single-threaded data collection; one CPU
+/// core is the whole machine here, and CEM-RL's sample->train->eval cycle
+/// is easier to audit without actor races).
+pub fn run_cemrl(manifest: &Manifest, cfg: &CemRlConfig) -> anyhow::Result<CemRlSummary> {
+    let algo = if cfg.ordering == "seq" { "cemseq" } else { "cem" };
+    let artifact = manifest.find(algo, &cfg.env, cfg.pop, None)?.clone();
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(&artifact)?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut population = Population::init(&rt, &artifact, &mut rng, cfg.seed ^ 0xCE, None, 8)?;
+    let mut timers = PhaseTimer::new();
+
+    // CEM distribution seeded at agent 0's initial policy.
+    let host0 = population.view.with(|h| h.to_vec());
+    let mu0 = artifact.agent_vector(&host0, &["policy"], 0);
+    let mut cem = Cem::new(mu0, 1e-3, 0.5);
+
+    let mut replay = ReplayBuffer::new(
+        cfg.replay_capacity,
+        artifact.env_desc.obs_dim,
+        artifact.env_desc.act_dim,
+    );
+    let mut env = crate::envs::make_env(&cfg.env)?;
+    let (od, ad) = (env.obs_dim(), env.act_dim());
+    let mut csv = if cfg.csv_path.is_empty() {
+        None
+    } else {
+        Some(CsvLogger::create(
+            &cfg.csv_path,
+            &["wall_s", "iter", "env_steps", "updates", "best_return",
+              "mean_return", "mu_return"],
+        )?)
+    };
+
+    // warmup with random actions
+    let mut obs = vec![0.0f32; od];
+    let mut act = vec![0.0f32; ad];
+    let mut next_obs = vec![0.0f32; od];
+    env.reset(&mut rng, &mut obs);
+    let mut ep_steps = 0usize;
+    for _ in 0..cfg.warmup_steps {
+        rng.fill_uniform(&mut act, -1.0, 1.0);
+        let (r, done) = env.step(&act, &mut next_obs);
+        replay.push(&obs, &act, r, &next_obs, done);
+        obs.copy_from_slice(&next_obs);
+        ep_steps += 1;
+        if done || ep_steps >= env.horizon() {
+            env.reset(&mut rng, &mut obs);
+            ep_steps = 0;
+        }
+    }
+    let mut env_steps = cfg.warmup_steps as u64;
+    let mut updates = 0u64;
+    let start = std::time::Instant::now();
+
+    // staging buffers for one round's batches [P, B, ...]
+    let (pop, batch) = (artifact.pop, artifact.batch);
+    let mut stage_obs = vec![0.0f32; pop * batch * od];
+    let mut stage_act = vec![0.0f32; pop * batch * ad];
+    let mut stage_rew = vec![0.0f32; pop * batch];
+    let mut stage_next = vec![0.0f32; pop * batch * od];
+    let mut stage_done = vec![0.0f32; pop * batch];
+    let mut genomes: Vec<Vec<f32>> = vec![vec![0.0; cem.dim()]; pop];
+    let mut best = f64::NEG_INFINITY;
+    let mut mean_ret = f64::NEG_INFINITY;
+    let mut mu_ret = f64::NEG_INFINITY;
+
+    for iter in 0..cfg.iters {
+        if cfg.max_seconds > 0.0 && start.elapsed().as_secs_f64() > cfg.max_seconds {
+            break;
+        }
+        // ---- sample new population from the CEM distribution ------------
+        let mut host = population.train_state.to_host()?;
+        for (i, g) in genomes.iter_mut().enumerate() {
+            cem.sample_into(&mut rng, g);
+            artifact.set_agent_vector(&mut host, &["policy"], i, g);
+            artifact.set_agent_vector(&mut host, &["policy_target"], i, g);
+        }
+        // fresh policy optimizer state + zero lr for the eval-only half
+        for f in &artifact.fields {
+            if f.group == "opt" && f.name.starts_with("adam_policy/") {
+                host[f.offset..f.offset + f.size].fill(0.0);
+            }
+        }
+        if let Ok(f) = artifact.field("step") {
+            host[f.offset..f.offset + f.size].fill(0.0);
+        }
+        if let Ok(f) = artifact.field("lr_policy") {
+            for i in 0..pop {
+                host[f.offset + i] = if i < pop / 2 { 3e-4 } else { 0.0 };
+            }
+        }
+        population.load_host(&rt, host)?;
+
+        // ---- collect environment interactions (all members) -------------
+        timers.time("collect", || -> anyhow::Result<()> {
+            let host = population.view.with(|h| h.to_vec());
+            let steps_per_agent = cfg.steps_per_iter / pop.max(1);
+            for agent in 0..pop {
+                let mut mlp = mlp_from_state(&artifact, &host, "policy", agent,
+                                             Activation::Relu, Activation::Tanh)?;
+                env.reset(&mut rng, &mut obs);
+                let mut eps = 0usize;
+                for _ in 0..steps_per_agent {
+                    mlp.forward(&obs, &mut act);
+                    for a in act.iter_mut() {
+                        *a = (*a + 0.1 * rng.normal() as f32).clamp(-1.0, 1.0);
+                    }
+                    let (r, done) = env.step(&act, &mut next_obs);
+                    replay.push(&obs, &act, r, &next_obs, done);
+                    obs.copy_from_slice(&next_obs);
+                    eps += 1;
+                    if done || eps >= env.horizon() {
+                        env.reset(&mut rng, &mut obs);
+                        eps = 0;
+                    }
+                }
+                env_steps += steps_per_agent as u64;
+            }
+            Ok(())
+        })?;
+
+        // ---- TD3 updates through the shared-critic artifact --------------
+        timers.time("train", || -> anyhow::Result<()> {
+            for _ in 0..cfg.rounds_per_iter {
+                for agent in 0..pop {
+                    replay.sample_into(
+                        &mut rng,
+                        batch,
+                        &mut stage_obs[agent * batch * od..(agent + 1) * batch * od],
+                        &mut stage_act[agent * batch * ad..(agent + 1) * batch * ad],
+                        &mut stage_rew[agent * batch..(agent + 1) * batch],
+                        &mut stage_next[agent * batch * od..(agent + 1) * batch * od],
+                        &mut stage_done[agent * batch..(agent + 1) * batch],
+                    );
+                }
+                let bufs = [
+                    rt.upload_f32(&stage_obs, &[pop, batch, od])?,
+                    rt.upload_f32(&stage_act, &[pop, batch, ad])?,
+                    rt.upload_f32(&stage_rew, &[pop, batch])?,
+                    rt.upload_f32(&stage_next, &[pop, batch, od])?,
+                    rt.upload_f32(&stage_done, &[pop, batch])?,
+                ];
+                let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+                population.train_state.step(&exe, &refs)?;
+                updates += pop as u64; // each round performs P critic updates
+            }
+            Ok(())
+        })?;
+
+        // ---- evaluate everyone + the distribution mean -------------------
+        let host = population.sync_to_host()?;
+        let mut rets = vec![0.0f64; pop];
+        timers.time("eval", || -> anyhow::Result<()> {
+            for agent in 0..pop {
+                let mut mlp = mlp_from_state(&artifact, &host, "policy", agent,
+                                             Activation::Relu, Activation::Tanh)?;
+                let mut total = 0.0;
+                for _ in 0..cfg.eval_episodes {
+                    let (ret, _) = crate::envs::rollout(env.as_mut(), &mut rng,
+                                                        |o, a| mlp.forward(o, a));
+                    total += ret;
+                }
+                rets[agent] = total / cfg.eval_episodes as f64;
+            }
+            Ok(())
+        })?;
+        // genome of each agent AFTER training (trained half moved)
+        for (i, g) in genomes.iter_mut().enumerate() {
+            *g = artifact.agent_vector(&host, &["policy"], i);
+        }
+        let ranked = argsort_desc(&rets);
+        let n_elite = ((pop as f64 * cem.elite_frac).round() as usize).clamp(1, pop);
+        let elites: Vec<&[f32]> = ranked[..n_elite]
+            .iter()
+            .map(|&i| genomes[i].as_slice())
+            .collect();
+        cem.update(&elites);
+
+        // evaluate the distribution mean (the CEM-RL reporting convention)
+        mu_ret = {
+            let mut host_mu = host.clone();
+            artifact.set_agent_vector(&mut host_mu, &["policy"], 0, &cem.mu);
+            let mut mlp = mlp_from_state(&artifact, &host_mu, "policy", 0,
+                                         Activation::Relu, Activation::Tanh)?;
+            let (ret, _) = crate::envs::rollout(env.as_mut(), &mut rng,
+                                                |o, a| mlp.forward(o, a));
+            ret
+        };
+        best = best.max(rets.iter().copied().fold(f64::NEG_INFINITY, f64::max));
+        mean_ret = mean(&rets);
+        if let Some(csv) = csv.as_mut() {
+            csv.row(&[
+                start.elapsed().as_secs_f64(),
+                iter as f64,
+                env_steps as f64,
+                updates as f64,
+                best,
+                mean_ret,
+                mu_ret,
+            ])?;
+            csv.flush()?;
+        }
+    }
+
+    Ok(CemRlSummary {
+        best_return: best,
+        mean_return: mean_ret,
+        mu_return: mu_ret,
+        wall_seconds: start.elapsed().as_secs_f64(),
+        env_steps,
+        updates,
+        timers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cem_converges_on_sphere() {
+        // maximize -||x - target||^2 by CEM alone
+        let target = [1.0f32, -2.0, 0.5];
+        let mut cem = Cem::new(vec![0.0; 3], 1.0, 0.5);
+        cem.noise = 1e-4;
+        let mut rng = Rng::new(0);
+        let popn = 32;
+        let mut samples = vec![vec![0.0f32; 3]; popn];
+        for _ in 0..60 {
+            let mut scores = vec![0.0f64; popn];
+            for (i, s) in samples.iter_mut().enumerate() {
+                cem.sample_into(&mut rng, s);
+                scores[i] = -s
+                    .iter()
+                    .zip(&target)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+            }
+            let ranked = argsort_desc(&scores);
+            let elites: Vec<&[f32]> =
+                ranked[..16].iter().map(|&i| samples[i].as_slice()).collect();
+            cem.update(&elites);
+        }
+        for (m, t) in cem.mu.iter().zip(&target) {
+            assert!((m - t).abs() < 0.15, "mu={:?}", cem.mu);
+        }
+    }
+
+    #[test]
+    fn cem_noise_decays_to_floor() {
+        let mut cem = Cem::new(vec![0.0; 2], 0.1, 0.5);
+        cem.noise = 1e-2;
+        cem.noise_decay = 0.5;
+        cem.noise_floor = 1e-3;
+        let e = [0.0f32, 0.0];
+        for _ in 0..20 {
+            cem.update(&[&e]);
+        }
+        assert!((cem.noise - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_reflects_elite_spread() {
+        let mut cem = Cem::new(vec![0.0; 1], 1.0, 0.5);
+        cem.noise = 0.0;
+        let a = [2.0f32];
+        let b = [4.0f32];
+        cem.update(&[&a, &b]);
+        assert!((cem.mu[0] - 3.0).abs() < 1e-6);
+        assert!((cem.var[0] - 1.0).abs() < 1e-6); // var of {2,4} around 3
+    }
+}

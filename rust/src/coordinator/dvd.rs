@@ -1,0 +1,91 @@
+//! DvD (Parker-Holder et al., 2020; paper §5.3).
+//!
+//! DvD is the shared-critic population TD3 plus an explicit diversity
+//! bonus: the log-determinant of an RBF kernel matrix over policy
+//! "behavioral embeddings" (their actions on probe states). The loss term
+//! lives in the L2 artifact (`updates/shared_critic.py` with `dvd=True`);
+//! the coordinator's contribution is the diversity-weight schedule — the
+//! paper replaces DvD's multi-armed bandit with a schedule (Appendix B.2),
+//! which this controller implements.
+
+use crate::coordinator::trainer::{Controller, EvolveCtx};
+
+/// Piecewise-linear schedule on the `lambda_div` state field.
+pub struct DvdLambdaSchedule {
+    /// (update_step, lambda) knots, sorted by step.
+    pub knots: Vec<(u64, f64)>,
+}
+
+impl DvdLambdaSchedule {
+    /// The default B.2-style schedule: start exploratory, anneal to mild.
+    pub fn default_for(total_updates: u64) -> Self {
+        DvdLambdaSchedule {
+            knots: vec![
+                (0, 0.5),
+                (total_updates / 2, 0.2),
+                (total_updates, 0.05),
+            ],
+        }
+    }
+
+    pub fn value_at(&self, step: u64) -> f64 {
+        if self.knots.is_empty() {
+            return 0.0;
+        }
+        if step <= self.knots[0].0 {
+            return self.knots[0].1;
+        }
+        for w in self.knots.windows(2) {
+            let (s0, v0) = w[0];
+            let (s1, v1) = w[1];
+            if step <= s1 {
+                let t = (step - s0) as f64 / (s1 - s0).max(1) as f64;
+                return v0 + t * (v1 - v0);
+            }
+        }
+        self.knots.last().unwrap().1
+    }
+}
+
+impl Controller for DvdLambdaSchedule {
+    fn name(&self) -> &'static str {
+        "dvd"
+    }
+
+    fn on_sync(&mut self, ctx: &mut EvolveCtx<'_>) -> anyhow::Result<()> {
+        let lam = self.value_at(ctx.updates_done) as f32;
+        if let Ok(f) = ctx.artifact.field("lambda_div") {
+            let cur = ctx.host[f.offset];
+            if (cur - lam).abs() > 1e-9 {
+                ctx.host[f.offset] = lam;
+                ctx.mutated = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_interpolates_and_clamps() {
+        let s = DvdLambdaSchedule { knots: vec![(0, 1.0), (100, 0.0)] };
+        assert_eq!(s.value_at(0), 1.0);
+        assert!((s.value_at(50) - 0.5).abs() < 1e-12);
+        assert_eq!(s.value_at(100), 0.0);
+        assert_eq!(s.value_at(10_000), 0.0);
+    }
+
+    #[test]
+    fn default_schedule_monotone_decreasing() {
+        let s = DvdLambdaSchedule::default_for(1000);
+        let mut prev = f64::INFINITY;
+        for step in [0u64, 100, 400, 500, 800, 1000] {
+            let v = s.value_at(step);
+            assert!(v <= prev + 1e-12);
+            prev = v;
+        }
+    }
+}

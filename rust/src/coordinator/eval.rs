@@ -1,0 +1,160 @@
+//! Evaluation protocol + aggregate metrics.
+//!
+//! The paper (citing Agarwal et al., 2021, "Deep RL at the edge of the
+//! statistical precipice") argues population runs double as many-seed
+//! benchmarking. This module implements that reporting style: periodic
+//! deterministic evaluation episodes, and the rliable-recommended
+//! aggregates — interquartile mean (IQM) and stratified-bootstrap
+//! confidence intervals — over a population's returns.
+
+use crate::envs::{make_env, rollout};
+use crate::manifest::Artifact;
+use crate::nn::from_state::{mlp_from_state, policy_activations};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Deterministic evaluation of every population member: `episodes`
+/// rollouts each with the mean/greedy policy. Returns per-agent means.
+pub fn evaluate_population(
+    artifact: &Artifact,
+    host_state: &[f32],
+    env_name: &str,
+    episodes: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<f64>> {
+    let (ha, fa) = policy_activations(&artifact.algo);
+    let sac = artifact.algo.starts_with("sac");
+    let mut env = make_env(env_name)?;
+    let mut out = Vec::with_capacity(artifact.pop);
+    for agent in 0..artifact.pop {
+        let mut mlp = mlp_from_state(artifact, host_state, "policy", agent, ha, fa)?;
+        let act_dim = env.act_dim();
+        let mut total = 0.0;
+        for _ in 0..episodes.max(1) {
+            let (ret, _) = rollout(env.as_mut(), rng, |obs, act| {
+                if sac {
+                    // gaussian head: deterministic mean action = tanh(mu)
+                    let mut raw = vec![0.0f32; 2 * act_dim];
+                    mlp.forward(obs, &mut raw);
+                    for (a, &m) in act.iter_mut().zip(&raw[..act_dim]) {
+                        *a = m.tanh();
+                    }
+                } else {
+                    mlp.forward(obs, act);
+                }
+            });
+            total += ret;
+        }
+        out.push(total / episodes.max(1) as f64);
+    }
+    Ok(out)
+}
+
+/// Interquartile mean: the mean of the middle 50% of the sample — robust
+/// to stragglers and lucky seeds (rliable's headline aggregate).
+pub fn iqm(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = percentile(&v, 25.0);
+    let q3 = percentile(&v, 75.0);
+    let mid: Vec<f64> = v.iter().copied().filter(|&x| x >= q1 && x <= q3).collect();
+    if mid.is_empty() {
+        crate::util::stats::mean(&v)
+    } else {
+        crate::util::stats::mean(&mid)
+    }
+}
+
+/// Percentile-bootstrap confidence interval of an aggregate statistic.
+pub fn bootstrap_ci(
+    values: &[f64],
+    stat: impl Fn(&[f64]) -> f64,
+    resamples: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    assert!(!values.is_empty());
+    let mut stats = Vec::with_capacity(resamples);
+    let mut sample = vec![0.0; values.len()];
+    for _ in 0..resamples {
+        for s in sample.iter_mut() {
+            *s = values[rng.below(values.len())];
+        }
+        stats.push(stat(&sample));
+    }
+    stats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(&stats, 100.0 * alpha / 2.0),
+        percentile(&stats, 100.0 * (1.0 - alpha / 2.0)),
+    )
+}
+
+/// One-line population report: `IQM [lo, hi] (best b, mean m, n=k)`.
+pub fn population_report(returns: &[f64], rng: &mut Rng) -> String {
+    let finite: Vec<f64> = returns.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return "no finished episodes yet".into();
+    }
+    let iqm_v = iqm(&finite);
+    let (lo, hi) = bootstrap_ci(&finite, iqm, 500, 0.05, rng);
+    let best = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    format!(
+        "IQM {:.1} [{:.1}, {:.1}] (best {:.1}, mean {:.1}, n={})",
+        iqm_v,
+        lo,
+        hi,
+        best,
+        crate::util::stats::mean(&finite),
+        finite.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iqm_discards_tails() {
+        // one huge outlier must not move the IQM much
+        let clean = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let outlier = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 1e9];
+        assert!((iqm(&clean) - 4.5).abs() < 0.6);
+        assert!(iqm(&outlier) < 100.0);
+    }
+
+    #[test]
+    fn iqm_of_constant_is_constant() {
+        assert_eq!(iqm(&[3.0; 10]), 3.0);
+        assert_eq!(iqm(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_the_statistic() {
+        let mut rng = Rng::new(0);
+        let values: Vec<f64> = (0..50).map(|_| rng.normal() * 2.0 + 10.0).collect();
+        let point = iqm(&values);
+        let (lo, hi) = bootstrap_ci(&values, iqm, 1000, 0.05, &mut rng);
+        assert!(lo <= point && point <= hi, "{lo} <= {point} <= {hi}");
+        assert!(hi - lo < 3.0, "CI too wide: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn ci_narrows_with_sample_size() {
+        let mut rng = Rng::new(1);
+        let small: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let large: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let (lo_s, hi_s) = bootstrap_ci(&small, iqm, 500, 0.05, &mut rng);
+        let (lo_l, hi_l) = bootstrap_ci(&large, iqm, 500, 0.05, &mut rng);
+        assert!(hi_l - lo_l < hi_s - lo_s);
+    }
+
+    #[test]
+    fn report_handles_empty_and_infinite() {
+        let mut rng = Rng::new(2);
+        assert!(population_report(&[f64::NEG_INFINITY], &mut rng)
+            .contains("no finished"));
+        let r = population_report(&[1.0, 2.0, f64::NEG_INFINITY, 3.0], &mut rng);
+        assert!(r.contains("n=3"), "{r}");
+    }
+}

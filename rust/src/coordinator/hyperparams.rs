@@ -1,0 +1,207 @@
+//! Per-agent hyperparameter spaces (paper Appendix B.1).
+//!
+//! PBT samples each tunable hyperparameter from a prior distribution at
+//! population init and re-samples (or perturbs) it when an agent is
+//! replaced. Hyperparameters live *inside* the flat train state (group
+//! "hyper"), so mutating them is a host-side write through the manifest.
+
+use crate::manifest::Artifact;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// U(lo, hi)
+    Uniform(f64, f64),
+    /// exp(U(ln lo, ln hi)) — learning-rate prior
+    LogUniform(f64, f64),
+    /// Fixed value (not tuned, but kept explicit)
+    Fixed(f64),
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Uniform(lo, hi) => rng.uniform_in(lo, hi),
+            Dist::LogUniform(lo, hi) => rng.log_uniform_in(lo, hi),
+            Dist::Fixed(v) => v,
+        }
+    }
+
+    /// PBT "explore" perturbation: multiply by 0.8 or 1.25, clipped to the
+    /// prior's support (Jaderberg et al., 2017).
+    pub fn perturb(&self, value: f64, rng: &mut Rng) -> f64 {
+        let factor = if rng.below(2) == 0 { 0.8 } else { 1.25 };
+        match *self {
+            Dist::Uniform(lo, hi) => (value * factor).clamp(lo, hi),
+            Dist::LogUniform(lo, hi) => (value * factor).clamp(lo, hi),
+            Dist::Fixed(v) => v,
+        }
+    }
+
+    pub fn support(&self) -> (f64, f64) {
+        match *self {
+            Dist::Uniform(lo, hi) | Dist::LogUniform(lo, hi) => (lo, hi),
+            Dist::Fixed(v) => (v, v),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HyperSpec {
+    /// (state field name, prior)
+    pub entries: Vec<(String, Dist)>,
+}
+
+impl HyperSpec {
+    /// TD3 search space from Appendix B.1: policy/critic lrs log-uniform
+    /// [3e-5, 3e-3]; policy update frequency U(0.2, 1); smoothing noise
+    /// U(0, 1); discount U(0.9, 1).
+    pub fn td3() -> HyperSpec {
+        HyperSpec {
+            entries: vec![
+                ("lr_policy".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("lr_critic".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("policy_freq".into(), Dist::Uniform(0.2, 1.0)),
+                ("noise".into(), Dist::Uniform(0.0, 1.0)),
+                ("gamma".into(), Dist::Uniform(0.9, 1.0)),
+            ],
+        }
+    }
+
+    /// SAC search space from Appendix B.1: three lrs log-uniform
+    /// [3e-5, 3e-3]; target entropy multiplier U(0.2, 2); reward scale
+    /// U(0.1, 10); discount U(0.9, 1).
+    pub fn sac() -> HyperSpec {
+        HyperSpec {
+            entries: vec![
+                ("lr_policy".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("lr_critic".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("lr_alpha".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("target_entropy_mult".into(), Dist::Uniform(0.2, 2.0)),
+                ("reward_scale".into(), Dist::Uniform(0.1, 10.0)),
+                ("gamma".into(), Dist::Uniform(0.9, 1.0)),
+            ],
+        }
+    }
+
+    /// DQN space (lr + discount + epsilon; the paper only benchmarks DQN
+    /// update speed, this space powers the optional dqn PBT example).
+    pub fn dqn() -> HyperSpec {
+        HyperSpec {
+            entries: vec![
+                ("lr".into(), Dist::LogUniform(3e-5, 3e-3)),
+                ("gamma".into(), Dist::Uniform(0.9, 1.0)),
+                ("eps_greedy".into(), Dist::Uniform(0.01, 0.2)),
+            ],
+        }
+    }
+
+    pub fn for_algo(algo: &str) -> anyhow::Result<HyperSpec> {
+        Ok(match algo {
+            "td3" => Self::td3(),
+            "sac" => Self::sac(),
+            "dqn" => Self::dqn(),
+            other => anyhow::bail!("no hyperparameter space for algo {other:?}"),
+        })
+    }
+
+    /// Sample fresh values for agent `agent` into the host state. Fields
+    /// missing from the artifact are skipped (spec is a superset).
+    pub fn sample_into(&self, artifact: &Artifact, state: &mut [f32], agent: usize,
+                       rng: &mut Rng) {
+        for (name, dist) in &self.entries {
+            if let Ok(f) = artifact.field(name) {
+                if f.per_agent && agent < f.shape[0] {
+                    let stride = f.agent_stride();
+                    state[f.offset + agent * stride] = dist.sample(rng) as f32;
+                }
+            }
+        }
+    }
+
+    /// Perturb agent's current values (PBT explore-by-perturbation).
+    pub fn perturb_into(&self, artifact: &Artifact, state: &mut [f32], agent: usize,
+                        rng: &mut Rng) {
+        for (name, dist) in &self.entries {
+            if let Ok(f) = artifact.field(name) {
+                if f.per_agent && agent < f.shape[0] {
+                    let stride = f.agent_stride();
+                    let idx = f.offset + agent * stride;
+                    state[idx] = dist.perturb(state[idx] as f64, rng) as f32;
+                }
+            }
+        }
+    }
+
+    /// Read agent's current values (for logging).
+    pub fn read(&self, artifact: &Artifact, state: &[f32], agent: usize)
+                -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (name, _) in &self.entries {
+            if let Ok(f) = artifact.field(name) {
+                if f.per_agent && agent < f.shape[0] {
+                    let stride = f.agent_stride();
+                    out.push((name.clone(), state[f.offset + agent * stride] as f64));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_within_support() {
+        let mut rng = Rng::new(0);
+        for dist in [Dist::Uniform(0.2, 1.0), Dist::LogUniform(3e-5, 3e-3)] {
+            let (lo, hi) = dist.support();
+            for _ in 0..200 {
+                let v = dist.sample(&mut rng);
+                assert!((lo..=hi).contains(&v), "{dist:?} -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn perturb_stays_in_support() {
+        let mut rng = Rng::new(1);
+        let d = Dist::Uniform(0.2, 1.0);
+        let mut v = 0.95;
+        for _ in 0..50 {
+            v = d.perturb(v, &mut rng);
+            assert!((0.2..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn fixed_is_inert() {
+        let mut rng = Rng::new(2);
+        let d = Dist::Fixed(0.5);
+        assert_eq!(d.sample(&mut rng), 0.5);
+        assert_eq!(d.perturb(99.0, &mut rng), 0.5);
+    }
+
+    #[test]
+    fn specs_exist_for_all_algos() {
+        for algo in ["td3", "sac", "dqn"] {
+            let spec = HyperSpec::for_algo(algo).unwrap();
+            assert!(!spec.entries.is_empty());
+        }
+        assert!(HyperSpec::for_algo("cem").is_err());
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut rng = Rng::new(3);
+        let d = Dist::LogUniform(3e-5, 3e-3);
+        let n = 2000;
+        let below_mid = (0..n)
+            .filter(|_| d.sample(&mut rng) < 3e-4)
+            .count() as f64 / n as f64;
+        // log-uniform puts ~half the mass below the geometric midpoint
+        assert!((below_mid - 0.5).abs() < 0.06, "got {below_mid}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Population-based training coordinators (PBT, CEM-RL, DvD).
+pub mod cem;
+pub mod eval;
+pub mod dvd;
+pub mod hyperparams;
+pub mod pbt;
+pub mod population;
+pub mod trainer;

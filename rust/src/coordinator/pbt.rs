@@ -1,0 +1,234 @@
+//! Population Based Training controller (Jaderberg et al., 2017; paper
+//! §5.1 + Appendix B.1).
+//!
+//! Every `interval_updates` update steps: rank agents by the mean of their
+//! last `k` episode returns, replace the bottom `frac` with copies of
+//! agents sampled uniformly from the top `frac` (parameters, targets,
+//! optimizer state and step counters — everything in
+//! [`AGENT_STATE_GROUPS`]), and give the clones fresh hyperparameters —
+//! re-sampled from the prior (B.1) or perturbed (the classic PBT explore).
+
+use crate::coordinator::hyperparams::HyperSpec;
+use crate::coordinator::trainer::{Controller, EvolveCtx, AGENT_STATE_GROUPS};
+use crate::util::stats::argsort_desc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Explore {
+    /// Re-sample from the prior distribution (paper Appendix B.1).
+    Resample,
+    /// Perturb the parent's value by x0.8 / x1.25 (Jaderberg et al.).
+    Perturb,
+}
+
+pub struct PbtController {
+    pub spec: HyperSpec,
+    /// Evolve every this many update steps (paper B.1 uses 100k).
+    pub interval_updates: u64,
+    /// Fraction replaced / fraction considered elite (paper: 30%).
+    pub frac: f64,
+    pub explore: Explore,
+    last_evolve: u64,
+    /// (generation, replaced agent, parent) log for tests/inspection.
+    pub history: Vec<(u64, usize, usize)>,
+}
+
+impl PbtController {
+    pub fn new(spec: HyperSpec, interval_updates: u64, frac: f64, explore: Explore) -> Self {
+        assert!(frac > 0.0 && frac < 0.5, "truncation fraction in (0, 0.5)");
+        PbtController { spec, interval_updates, frac, explore, last_evolve: 0, history: Vec::new() }
+    }
+}
+
+impl Controller for PbtController {
+    fn name(&self) -> &'static str {
+        "pbt"
+    }
+
+    fn on_sync(&mut self, ctx: &mut EvolveCtx<'_>) -> anyhow::Result<()> {
+        if ctx.updates_done < self.last_evolve + self.interval_updates {
+            return Ok(());
+        }
+        // need at least one finished episode per agent to rank fairly
+        if ctx.fitness.iter().any(|f| !f.is_finite()) {
+            return Ok(());
+        }
+        let pop = ctx.artifact.pop;
+        let m = ((pop as f64 * self.frac).floor() as usize).max(1);
+        if 2 * m > pop {
+            return Ok(());
+        }
+        self.last_evolve = ctx.updates_done;
+
+        let ranked = argsort_desc(ctx.fitness); // best first
+        let top = &ranked[..m];
+        let bottom = &ranked[pop - m..];
+        for &loser in bottom {
+            let parent = top[ctx.rng.below(top.len())];
+            // exploit: copy the parent's full training state row
+            ctx.artifact.copy_agent(ctx.host, AGENT_STATE_GROUPS, parent, loser);
+            // explore: new hyperparameters for the clone
+            match self.explore {
+                Explore::Resample => {
+                    self.spec.sample_into(ctx.artifact, ctx.host, loser, ctx.rng)
+                }
+                Explore::Perturb => {
+                    // clone inherits the parent's hypers, then perturbs
+                    ctx.artifact.copy_agent(ctx.host, &["hyper"], parent, loser);
+                    self.spec.perturb_into(ctx.artifact, ctx.host, loser, ctx.rng)
+                }
+            }
+            ctx.reset_returns.push(loser);
+            self.history.push((ctx.updates_done, loser, parent));
+        }
+        ctx.mutated = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Artifact, Dtype, EnvDesc, Field};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn toy_artifact(pop: usize) -> Artifact {
+        let mut fields = Vec::new();
+        let mut off = 0;
+        let push = |name: &str, shape: Vec<usize>, group: &str, init: &str,
+                        fields: &mut Vec<Field>, off: &mut usize| {
+            let size: usize = shape.iter().product();
+            fields.push(Field {
+                name: name.into(),
+                offset: *off,
+                size,
+                shape,
+                dtype: Dtype::F32,
+                init: init.into(),
+                group: group.into(),
+                per_agent: true,
+            });
+            *off += size;
+        };
+        push("policy/w0", vec![pop, 2, 2], "policy", "lecun_uniform:2", &mut fields, &mut off);
+        push("lr_policy", vec![pop], "hyper", "const:0.0003", &mut fields, &mut off);
+        push("gamma", vec![pop], "hyper", "const:0.99", &mut fields, &mut off);
+        Artifact::new(
+            "toy".into(),
+            PathBuf::new(),
+            "td3".into(),
+            "pendulum".into(),
+            EnvDesc::default(),
+            pop,
+            1,
+            4,
+            vec![],
+            off,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        )
+    }
+
+    fn evolve_once(explore: Explore) -> (Vec<f32>, PbtController, Vec<usize>) {
+        let art = toy_artifact(4);
+        let mut seed_rng = Rng::new(9);
+        let mut host = art.init_state(&mut seed_rng, 0); // hypers at defaults
+        // distinct policy rows: agent i filled with i
+        for agent in 0..4 {
+            let f = art.field("policy/w0").unwrap();
+            let stride = f.agent_stride();
+            for v in &mut host[f.offset + agent * stride..f.offset + (agent + 1) * stride] {
+                *v = agent as f32;
+            }
+        }
+        let fitness = vec![0.1, 3.0, 2.0, -1.0]; // best = 1, worst = 3
+        let mut rng = Rng::new(0);
+        let mut ctrl = PbtController::new(HyperSpec::td3(), 10, 0.26, explore);
+        let mut ctx = EvolveCtx {
+            artifact: &art,
+            host: &mut host,
+            fitness: &fitness,
+            rng: &mut rng,
+            updates_done: 100,
+            env_steps: 100,
+            mutated: false,
+            reset_returns: Vec::new(),
+        };
+        ctrl.on_sync(&mut ctx).unwrap();
+        assert!(ctx.mutated);
+        let resets = ctx.reset_returns.clone();
+        drop(ctx);
+        (host, ctrl, resets)
+    }
+
+    #[test]
+    fn worst_agent_becomes_clone_of_best() {
+        let (host, ctrl, resets) = evolve_once(Explore::Resample);
+        let art = toy_artifact(4);
+        // agent 3 (worst) must now hold agent 1's weights (only top-1 elite)
+        let w3 = art.read_agent(&host, "policy/w0", 3).unwrap();
+        assert!(w3.iter().all(|&v| v == 1.0), "clone mismatch: {w3:?}");
+        assert_eq!(resets, vec![3]);
+        assert_eq!(ctrl.history.len(), 1);
+        assert_eq!(ctrl.history[0].1, 3);
+        assert_eq!(ctrl.history[0].2, 1);
+    }
+
+    #[test]
+    fn resample_draws_from_prior_support() {
+        let (host, _, _) = evolve_once(Explore::Resample);
+        let art = toy_artifact(4);
+        let lr = art.read_agent(&host, "lr_policy", 3).unwrap()[0];
+        assert!((3e-5..=3e-3).contains(&(lr as f64)));
+        let gamma = art.read_agent(&host, "gamma", 3).unwrap()[0];
+        assert!((0.9..=1.0).contains(&(gamma as f64)));
+    }
+
+    #[test]
+    fn perturb_inherits_then_nudges() {
+        let (host, _, _) = evolve_once(Explore::Perturb);
+        let art = toy_artifact(4);
+        let lr = art.read_agent(&host, "lr_policy", 3).unwrap()[0] as f64;
+        // parent lr was 3e-4; perturbation is x0.8 or x1.25
+        assert!((lr - 3e-4 * 0.8).abs() < 1e-9 || (lr - 3e-4 * 1.25).abs() < 1e-9,
+                "lr={lr}");
+    }
+
+    #[test]
+    fn no_evolution_before_interval_or_without_fitness() {
+        let art = toy_artifact(4);
+        let mut host = vec![0.0f32; art.state_size];
+        let mut rng = Rng::new(0);
+        let mut ctrl = PbtController::new(HyperSpec::td3(), 1000, 0.26, Explore::Resample);
+        let fitness = vec![1.0, 2.0, 3.0, 4.0];
+        let mut ctx = EvolveCtx {
+            artifact: &art,
+            host: &mut host,
+            fitness: &fitness,
+            rng: &mut rng,
+            updates_done: 100, // < interval
+            env_steps: 0,
+            mutated: false,
+            reset_returns: Vec::new(),
+        };
+        ctrl.on_sync(&mut ctx).unwrap();
+        assert!(!ctx.mutated);
+        drop(ctx);
+        // infinite fitness (no finished episodes) also blocks
+        let fitness = vec![1.0, f64::NEG_INFINITY, 3.0, 4.0];
+        let mut ctx = EvolveCtx {
+            artifact: &art,
+            host: &mut host,
+            fitness: &fitness,
+            rng: &mut rng,
+            updates_done: 5000,
+            env_steps: 0,
+            mutated: false,
+            reset_returns: Vec::new(),
+        };
+        ctrl.on_sync(&mut ctx).unwrap();
+        assert!(!ctx.mutated);
+    }
+}

@@ -1,0 +1,193 @@
+//! Population state management: one device-resident vectorized train
+//! state + host bookkeeping (recent returns, hyperparameters, actors'
+//! parameter view).
+
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::hyperparams::HyperSpec;
+use crate::manifest::Artifact;
+use crate::runtime::{Runtime, TrainState};
+use crate::util::rng::Rng;
+
+/// Shared, versioned host copy of the flat state for non-blocking actor
+/// parameter sync (paper Appendix A: new parameters are published to
+/// shared memory while the accelerator keeps running).
+#[derive(Clone)]
+pub struct ParamView {
+    inner: Arc<RwLock<(u64, Vec<f32>)>>,
+}
+
+impl ParamView {
+    pub fn new(state: Vec<f32>) -> Self {
+        ParamView { inner: Arc::new(RwLock::new((1, state))) }
+    }
+
+    pub fn publish(&self, state: Vec<f32>) {
+        let mut g = self.inner.write().unwrap();
+        g.0 += 1;
+        g.1 = state;
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.read().unwrap().0
+    }
+
+    /// Copy out if the version advanced past `seen`; returns new version.
+    pub fn fetch_if_newer(&self, seen: u64, out: &mut Vec<f32>) -> u64 {
+        let g = self.inner.read().unwrap();
+        if g.0 > seen {
+            out.clear();
+            out.extend_from_slice(&g.1);
+        }
+        g.0
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
+        let g = self.inner.read().unwrap();
+        f(&g.1)
+    }
+}
+
+/// Recent-episode-return tracker (PBT ranks on the mean of the last k).
+#[derive(Clone, Debug)]
+pub struct ReturnWindow {
+    window: usize,
+    values: Vec<f64>,
+    pub episodes: u64,
+}
+
+impl ReturnWindow {
+    pub fn new(window: usize) -> Self {
+        ReturnWindow { window, values: Vec::new(), episodes: 0 }
+    }
+
+    pub fn push(&mut self, ret: f64) {
+        if self.values.len() == self.window {
+            self.values.remove(0);
+        }
+        self.values.push(ret);
+        self.episodes += 1;
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.values.is_empty() {
+            None
+        } else {
+            Some(self.values.iter().sum::<f64>() / self.values.len() as f64)
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.values.clear();
+    }
+}
+
+/// A population of N agents training through one vectorized artifact.
+pub struct Population {
+    pub artifact: Artifact,
+    pub train_state: TrainState,
+    pub view: ParamView,
+    pub returns: Vec<ReturnWindow>,
+    pub hyper_spec: Option<HyperSpec>,
+}
+
+impl Population {
+    /// Initialize with per-agent random params; if a hyper spec is given,
+    /// every agent's tunables are sampled from the priors (PBT init).
+    pub fn init(
+        rt: &Runtime,
+        artifact: &Artifact,
+        rng: &mut Rng,
+        seed_tag: u64,
+        hyper_spec: Option<HyperSpec>,
+        return_window: usize,
+    ) -> anyhow::Result<Population> {
+        let mut host = artifact.init_state(rng, seed_tag);
+        if let Some(spec) = &hyper_spec {
+            for agent in 0..artifact.pop {
+                spec.sample_into(artifact, &mut host, agent, rng);
+            }
+        }
+        let train_state = TrainState::from_host(rt, artifact, &host)?;
+        Ok(Population {
+            artifact: artifact.clone(),
+            train_state,
+            view: ParamView::new(host),
+            returns: (0..artifact.pop).map(|_| ReturnWindow::new(return_window)).collect(),
+            hyper_spec,
+        })
+    }
+
+    pub fn pop(&self) -> usize {
+        self.artifact.pop
+    }
+
+    /// Download the device state and publish it to the actors.
+    pub fn sync_to_host(&mut self) -> anyhow::Result<Vec<f32>> {
+        let host = self.train_state.to_host()?;
+        self.view.publish(host.clone());
+        Ok(host)
+    }
+
+    /// Push a (possibly mutated) host state back to the device and to the
+    /// actors (evolution points).
+    pub fn load_host(&mut self, rt: &Runtime, host: Vec<f32>) -> anyhow::Result<()> {
+        self.train_state.load_host(rt, &host)?;
+        self.view.publish(host);
+        Ok(())
+    }
+
+    /// Mean recent return per agent; agents with no finished episode yet
+    /// rank lowest.
+    pub fn fitness(&self) -> Vec<f64> {
+        self.returns
+            .iter()
+            .map(|w| w.mean().unwrap_or(f64::NEG_INFINITY))
+            .collect()
+    }
+
+    pub fn best_agent(&self) -> (usize, f64) {
+        let f = self.fitness();
+        let mut best = 0;
+        for i in 1..f.len() {
+            if f[i] > f[best] {
+                best = i;
+            }
+        }
+        (best, f[best])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn return_window_slides() {
+        let mut w = ReturnWindow::new(3);
+        assert_eq!(w.mean(), None);
+        for r in [1.0, 2.0, 3.0, 4.0] {
+            w.push(r);
+        }
+        assert_eq!(w.mean(), Some(3.0)); // (2+3+4)/3
+        assert_eq!(w.episodes, 4);
+    }
+
+    #[test]
+    fn param_view_versions() {
+        let v = ParamView::new(vec![1.0]);
+        let mut buf = Vec::new();
+        let ver = v.fetch_if_newer(0, &mut buf);
+        assert_eq!(ver, 1);
+        assert_eq!(buf, vec![1.0]);
+        // no change: buffer untouched
+        buf.clear();
+        let ver2 = v.fetch_if_newer(ver, &mut buf);
+        assert_eq!(ver2, ver);
+        assert!(buf.is_empty());
+        v.publish(vec![2.0, 3.0]);
+        let ver3 = v.fetch_if_newer(ver2, &mut buf);
+        assert_eq!(ver3, ver2 + 1);
+        assert_eq!(buf, vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,422 @@
+//! The generic population training loop: actors feed replay buffers, the
+//! learner drives the vectorized update-step artifact on device-resident
+//! state, parameters are published to the actors every `sync_every`
+//! updates (the paper's "50 update steps in a row without copying to host"
+//! trick), and a pluggable [`Controller`] evolves the population at sync
+//! points (PBT truncation, CEM distribution updates, DvD schedules).
+
+use std::time::Instant;
+
+use crate::coordinator::population::Population;
+use crate::data::pipeline::{ActorConfig, ActorMsg, ActorPool, PolicyKind, Throttle};
+use crate::manifest::{Artifact, Dtype, Manifest};
+use crate::replay::{RatioGate, ReplayBuffer};
+use crate::runtime::Runtime;
+use crate::util::log::CsvLogger;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::timer::PhaseTimer;
+
+/// Groups copied wholesale when one agent replaces another.
+pub const AGENT_STATE_GROUPS: &[&str] = &[
+    "policy", "policy_target", "critic", "critic_target", "opt", "alpha", "step",
+];
+
+pub struct TrainerConfig {
+    pub env: String,
+    pub algo: String,
+    /// Population size (must match an available artifact).
+    pub pop: usize,
+    /// Prefer the artifact with this many chained steps per execution.
+    pub num_steps: Option<usize>,
+    pub total_updates: u64,
+    /// Publish parameters to actors every this many update *executions*.
+    pub sync_every: u64,
+    pub warmup_steps: usize,
+    pub replay_capacity: usize,
+    /// Update:env-step ratio target (1.0 = SOTA default).
+    pub ratio: f64,
+    pub ratio_slack: f64,
+    /// One shared replay buffer (CEM-RL/DvD) instead of one per agent.
+    pub shared_replay: bool,
+    pub n_actor_threads: usize,
+    pub seed: u64,
+    /// CSV output path ("" = no logging).
+    pub csv_path: String,
+    /// Stop after this many wall-clock seconds (0 = no limit).
+    pub max_seconds: f64,
+    pub return_window: usize,
+    pub hyper_spec: Option<crate::coordinator::hyperparams::HyperSpec>,
+    /// Write an integrity-checked checkpoint here at every sync point
+    /// ("" = off); restored automatically at startup when present.
+    pub checkpoint_path: String,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            env: "pendulum".into(),
+            algo: "td3".into(),
+            pop: 4,
+            num_steps: None,
+            total_updates: 2_000,
+            sync_every: 50,
+            warmup_steps: 500,
+            replay_capacity: 100_000,
+            ratio: 1.0,
+            ratio_slack: 64.0,
+            shared_replay: false,
+            n_actor_threads: 1,
+            seed: 0,
+            csv_path: String::new(),
+            max_seconds: 0.0,
+            return_window: 10,
+            hyper_spec: None,
+            checkpoint_path: String::new(),
+        }
+    }
+}
+
+/// Everything a controller may inspect/mutate at a sync point.
+pub struct EvolveCtx<'a> {
+    pub artifact: &'a Artifact,
+    pub host: &'a mut Vec<f32>,
+    pub fitness: &'a [f64],
+    pub rng: &'a mut Rng,
+    pub updates_done: u64,
+    pub env_steps: u64,
+    /// Set true when `host` was mutated (trainer re-uploads it).
+    pub mutated: bool,
+    /// Episode-return windows to clear for replaced agents.
+    pub reset_returns: Vec<usize>,
+}
+
+pub trait Controller {
+    fn on_sync(&mut self, ctx: &mut EvolveCtx<'_>) -> anyhow::Result<()>;
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// No-op controller (plain population training).
+pub struct NoController;
+
+impl Controller for NoController {
+    fn on_sync(&mut self, _ctx: &mut EvolveCtx<'_>) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+pub struct Summary {
+    pub wall_seconds: f64,
+    pub updates: u64,
+    pub env_steps: u64,
+    pub best_return: f64,
+    pub mean_return: f64,
+    pub timers: PhaseTimer,
+}
+
+pub struct Trainer {
+    pub cfg: TrainerConfig,
+    pub rt: Runtime,
+    pub population: Population,
+    exe: std::sync::Arc<crate::runtime::Executable>,
+    replays: Vec<ReplayBuffer>,
+    gate: RatioGate,
+    rng: Rng,
+    // reusable host staging buffers, one per batch input
+    staging_f32: Vec<Vec<f32>>,
+    staging_i32: Vec<Vec<i32>>,
+}
+
+impl Trainer {
+    pub fn new(manifest: &Manifest, cfg: TrainerConfig) -> anyhow::Result<Trainer> {
+        let artifact = manifest
+            .find(&cfg.algo, &cfg.env, cfg.pop, cfg.num_steps)
+            .or_else(|_| manifest.find(&cfg.algo, &cfg.env, cfg.pop, None))?
+            .clone();
+        anyhow::ensure!(
+            artifact.env_desc.obs_dim > 0,
+            "Trainer drives continuous-control artifacts; the DQN/pixel \
+             pipeline is exercised by examples/dqn_minatar.rs"
+        );
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(&artifact)?;
+        let mut rng = Rng::new(cfg.seed);
+        let population = Population::init(
+            &rt,
+            &artifact,
+            &mut rng,
+            cfg.seed ^ 0xF00D,
+            cfg.hyper_spec.clone(),
+            cfg.return_window,
+        )?;
+        let (od, ad) = (artifact.env_desc.obs_dim, artifact.env_desc.act_dim);
+        let n_buffers = if cfg.shared_replay { 1 } else { artifact.pop };
+        let replays = (0..n_buffers)
+            .map(|_| ReplayBuffer::new(cfg.replay_capacity, od, ad))
+            .collect();
+        let staging_f32 = artifact.inputs[1..]
+            .iter()
+            .map(|i| {
+                if i.dtype == Dtype::F32 { vec![0.0f32; i.numel()] } else { Vec::new() }
+            })
+            .collect();
+        let staging_i32 = artifact.inputs[1..]
+            .iter()
+            .map(|i| {
+                if i.dtype == Dtype::I32 { vec![0i32; i.numel()] } else { Vec::new() }
+            })
+            .collect();
+        // The gate counts *global* env steps but *per-agent* update steps
+        // (one vectorized execution = 1 update for each of the P agents),
+        // so the per-agent target ratio divides by the population size.
+        let gate = RatioGate::new(
+            cfg.ratio / artifact.pop.max(1) as f64,
+            cfg.ratio_slack,
+            (cfg.warmup_steps * artifact.pop) as u64,
+        );
+        let mut trainer =
+            Trainer { cfg, rt, population, exe, replays, gate, rng, staging_f32, staging_i32 };
+        // resume from checkpoint when one exists for this artifact
+        let ckpt = trainer.cfg.checkpoint_path.clone();
+        if !ckpt.is_empty() && std::path::Path::new(&ckpt).exists() {
+            let c = crate::runtime::checkpoint::Checkpoint::load(&ckpt)?;
+            trainer.population.train_state =
+                c.restore(&trainer.rt, &trainer.population.artifact)?;
+            trainer.population.view.publish(c.state);
+            crate::util::log::info(&format!(
+                "resumed from {ckpt} at {} updates", c.updates_done
+            ));
+        }
+        Ok(trainer)
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.population.artifact
+    }
+
+    fn buffer_for(&self, agent: usize) -> usize {
+        if self.cfg.shared_replay {
+            0
+        } else {
+            agent
+        }
+    }
+
+    /// Fill all staging buffers from replay: for every chained step (the
+    /// leading `k` axis when num_steps > 1) and every agent, draw a batch.
+    fn fill_batches(&mut self) {
+        let art = &self.population.artifact;
+        let (pop, batch) = (art.pop, art.batch);
+        let (od, ad) = (art.env_desc.obs_dim, art.env_desc.act_dim);
+        let k = art.num_steps;
+        // input order fixed by transition_batch_args: obs, act, rew,
+        // next_obs, done — each [k?, P, B, ...]
+        for step in 0..k {
+            for agent in 0..pop {
+                let buf = &self.replays[if self.cfg.shared_replay { 0 } else { agent }];
+                let base = step * pop + agent;
+                let (s0, rest) = self.staging_f32.split_at_mut(1);
+                let (s1, rest) = rest.split_at_mut(1);
+                let (s2, rest) = rest.split_at_mut(1);
+                let (s3, s4) = rest.split_at_mut(1);
+                buf.sample_into(
+                    &mut self.rng,
+                    batch,
+                    &mut s0[0][base * batch * od..(base + 1) * batch * od],
+                    &mut s1[0][base * batch * ad..(base + 1) * batch * ad],
+                    &mut s2[0][base * batch..(base + 1) * batch],
+                    &mut s3[0][base * batch * od..(base + 1) * batch * od],
+                    &mut s4[0][base * batch..(base + 1) * batch],
+                );
+            }
+        }
+    }
+
+    fn upload_and_step(&mut self, timers: &mut PhaseTimer) -> anyhow::Result<()> {
+        let art = self.population.artifact.clone();
+        let t0 = Instant::now();
+        let mut bufs = Vec::with_capacity(art.inputs.len() - 1);
+        for (i, inp) in art.inputs[1..].iter().enumerate() {
+            let b = match inp.dtype {
+                Dtype::I32 => self.rt.upload_i32(&self.staging_i32[i], &inp.shape)?,
+                _ => self.rt.upload_f32(&self.staging_f32[i], &inp.shape)?,
+            };
+            bufs.push(b);
+        }
+        timers.add("upload", t0.elapsed().as_secs_f64());
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let t1 = Instant::now();
+        self.population.train_state.step(&self.exe, &refs)?;
+        timers.add("update_exec", t1.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Run the full loop with the given controller.
+    pub fn run(&mut self, controller: &mut dyn Controller) -> anyhow::Result<Summary> {
+        let art = self.population.artifact.clone();
+        let k = art.num_steps as u64;
+        let mut timers = PhaseTimer::new();
+        let mut csv = if self.cfg.csv_path.is_empty() {
+            None
+        } else {
+            Some(CsvLogger::create(
+                &self.cfg.csv_path,
+                &[
+                    "wall_s", "updates", "env_steps", "best_return", "mean_return",
+                    "episodes", "critic_loss", "policy_loss",
+                ],
+            )?)
+        };
+
+        let throttle = Throttle::new();
+        let pool = ActorPool::spawn(
+            &art,
+            self.population.view.clone(),
+            ActorConfig {
+                env: self.cfg.env.clone(),
+                policy: PolicyKind::for_algo(&self.cfg.algo),
+                warmup_steps: self.cfg.warmup_steps,
+                expl_noise: 0.1,
+                queue_cap: 8192,
+                seed: self.cfg.seed ^ 0xAC70,
+                ratio: self.cfg.ratio / art.pop.max(1) as f64,
+                lead_steps: 4 * art.batch as u64 * art.pop as u64,
+            },
+            self.cfg.n_actor_threads,
+            throttle.clone(),
+        )?;
+
+        let start = Instant::now();
+        let mut updates: u64 = 0;
+        let mut episodes: u64 = 0;
+        let mut since_sync: u64 = 0;
+        let result = (|| -> anyhow::Result<()> {
+            while updates < self.cfg.total_updates {
+                if self.cfg.max_seconds > 0.0
+                    && start.elapsed().as_secs_f64() > self.cfg.max_seconds
+                {
+                    break;
+                }
+                // ---- drain actor messages --------------------------------
+                let t0 = Instant::now();
+                let mut drained = 0u64;
+                while let Ok(msg) = pool.rx.try_recv() {
+                    match msg {
+                        ActorMsg::Step(tr) => {
+                            let b = self.buffer_for(tr.agent);
+                            self.replays[b].push(&tr.obs, &tr.act, tr.rew, &tr.next_obs,
+                                                 tr.done);
+                            self.gate.on_env_steps(1);
+                            drained += 1;
+                        }
+                        ActorMsg::Episode { agent, ret, .. } => {
+                            self.population.returns[agent].push(ret);
+                            episodes += 1;
+                        }
+                    }
+                    if drained > 16 * 1024 {
+                        break; // bounded drain per iteration
+                    }
+                }
+                timers.add("drain", t0.elapsed().as_secs_f64());
+
+                // ---- update step -----------------------------------------
+                let min_fill = self.replays.iter().map(|r| r.len()).min().unwrap_or(0);
+                if min_fill >= art.batch && self.gate.may_update(k) {
+                    let t1 = Instant::now();
+                    self.fill_batches();
+                    timers.add("sample", t1.elapsed().as_secs_f64());
+                    self.upload_and_step(&mut timers)?;
+                    self.gate.on_update_steps(k);
+                    throttle.updates.fetch_add(k, std::sync::atomic::Ordering::Relaxed);
+                    updates += k;
+                    since_sync += 1;
+                } else {
+                    std::thread::yield_now();
+                }
+
+                // ---- sync + evolve ---------------------------------------
+                if since_sync >= self.cfg.sync_every.max(1)
+                    || (since_sync > 0 && updates >= self.cfg.total_updates)
+                {
+                    since_sync = 0;
+                    let t2 = Instant::now();
+                    let mut host = self.population.sync_to_host()?;
+                    timers.add("host_sync", t2.elapsed().as_secs_f64());
+                    let fitness = self.population.fitness();
+                    let mut ctx = EvolveCtx {
+                        artifact: &art,
+                        host: &mut host,
+                        fitness: &fitness,
+                        rng: &mut self.rng,
+                        updates_done: updates,
+                        env_steps: self.gate.env_steps(),
+                        mutated: false,
+                        reset_returns: Vec::new(),
+                    };
+                    controller.on_sync(&mut ctx)?;
+                    let mutated = ctx.mutated;
+                    let reset_returns = std::mem::take(&mut ctx.reset_returns);
+                    drop(ctx);
+                    for agent in reset_returns {
+                        self.population.returns[agent].clear();
+                    }
+                    if mutated {
+                        let t3 = Instant::now();
+                        self.population.load_host(&self.rt, host)?;
+                        timers.add("evolve_upload", t3.elapsed().as_secs_f64());
+                    }
+                    if !self.cfg.checkpoint_path.is_empty() {
+                        let c = crate::runtime::checkpoint::Checkpoint::capture(
+                            &self.population.train_state)?;
+                        c.save(&self.cfg.checkpoint_path)?;
+                    }
+                    if let Some(csv) = csv.as_mut() {
+                        let f = self.population.fitness();
+                        let finite: Vec<f64> =
+                            f.iter().copied().filter(|v| v.is_finite()).collect();
+                        let best = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                        let metric_mean = |name: &str| -> f64 {
+                            self.population
+                                .view
+                                .with(|h| {
+                                    art.read(h, name).ok().map(|v| {
+                                        v.iter().map(|&x| x as f64).sum::<f64>()
+                                            / v.len().max(1) as f64
+                                    })
+                                })
+                                .unwrap_or(f64::NAN)
+                        };
+                        csv.row(&[
+                            start.elapsed().as_secs_f64(),
+                            updates as f64,
+                            self.gate.env_steps() as f64,
+                            if best.is_finite() { best } else { f64::NAN },
+                            stats::mean(&finite),
+                            episodes as f64,
+                            metric_mean("critic_loss"),
+                            metric_mean("policy_loss"),
+                        ])?;
+                        csv.flush()?;
+                    }
+                }
+            }
+            Ok(())
+        })();
+        pool.stop();
+        result?;
+
+        let fitness = self.population.fitness();
+        let finite: Vec<f64> = fitness.iter().copied().filter(|v| v.is_finite()).collect();
+        Ok(Summary {
+            wall_seconds: start.elapsed().as_secs_f64(),
+            updates,
+            env_steps: self.gate.env_steps(),
+            best_return: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            mean_return: stats::mean(&finite),
+            timers,
+        })
+    }
+}

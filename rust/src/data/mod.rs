@@ -1,0 +1,2 @@
+//! Actor/learner data pipeline (paper Appendix A).
+pub mod pipeline;

@@ -1,0 +1,352 @@
+//! Actor/learner data pipeline (paper Appendix A).
+//!
+//! Actor threads own their environment copies and native policy networks;
+//! they publish transitions through a bounded channel (the paper's queue
+//! with a maximum size — actors block when the learner lags) and refresh
+//! their weights from the shared [`ParamView`] whenever the learner
+//! publishes a new version (non-blocking for the learner).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::population::ParamView;
+use crate::envs::make_env;
+use crate::manifest::Artifact;
+use crate::nn::from_state::{mlp_from_state, sync_mlp_from_state};
+use crate::nn::mlp::Activation;
+use crate::util::rng::Rng;
+
+/// One environment transition from agent `agent`.
+pub struct Transition {
+    pub agent: usize,
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub rew: f32,
+    pub next_obs: Vec<f32>,
+    pub done: bool,
+}
+
+pub enum ActorMsg {
+    Step(Transition),
+    /// An episode finished with this undiscounted return.
+    Episode { agent: usize, ret: f64, steps: usize },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Deterministic tanh policy + additive N(0, expl_noise) exploration.
+    Td3,
+    /// Squashed-Gaussian head `[mu, log_std]`; exploration = sampling.
+    Sac,
+}
+
+impl PolicyKind {
+    pub fn for_algo(algo: &str) -> PolicyKind {
+        if algo.starts_with("sac") {
+            PolicyKind::Sac
+        } else {
+            PolicyKind::Td3
+        }
+    }
+}
+
+pub struct ActorConfig {
+    pub env: String,
+    pub policy: PolicyKind,
+    /// Uniform-random actions for this many initial steps per agent.
+    pub warmup_steps: usize,
+    /// TD3 exploration noise std (read from state field "expl_noise" when
+    /// present, this is the fallback).
+    pub expl_noise: f32,
+    /// Bounded queue size (backpressure).
+    pub queue_cap: usize,
+    pub seed: u64,
+    /// Update:env-step ratio target for actor throttling (0 = unthrottled).
+    pub ratio: f64,
+    /// Extra env steps actors may run ahead of `updates / ratio`.
+    pub lead_steps: u64,
+}
+
+impl Default for ActorConfig {
+    fn default() -> Self {
+        ActorConfig {
+            env: "pendulum".into(),
+            policy: PolicyKind::Td3,
+            warmup_steps: 500,
+            expl_noise: 0.1,
+            queue_cap: 4096,
+            seed: 0,
+            ratio: 1.0,
+            lead_steps: 2048,
+        }
+    }
+}
+
+/// Shared counters for actor throttling (paper Appendix A: "agents are
+/// blocked ... if the process handling the accelerator is lagging behind").
+#[derive(Clone, Default)]
+pub struct Throttle {
+    /// Update steps completed by the learner.
+    pub updates: Arc<AtomicU64>,
+    /// Environment steps taken by all actors.
+    pub env_steps: Arc<AtomicU64>,
+}
+
+impl Throttle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// May actors take another environment step?
+    fn may_step(&self, cfg: &ActorConfig, pop: u64) -> bool {
+        if cfg.ratio <= 0.0 {
+            return true;
+        }
+        let env = self.env_steps.load(Ordering::Relaxed);
+        let upd = self.updates.load(Ordering::Relaxed);
+        let warmup = cfg.warmup_steps as u64 * pop;
+        env < warmup + (upd as f64 / cfg.ratio) as u64 + cfg.lead_steps
+    }
+}
+
+pub struct ActorPool {
+    pub rx: Receiver<ActorMsg>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ActorPool {
+    /// Spawn `n_threads` actor threads covering all `artifact.pop` agents.
+    pub fn spawn(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: ActorConfig,
+        n_threads: usize,
+        throttle: Throttle,
+    ) -> anyhow::Result<ActorPool> {
+        let pop = artifact.pop;
+        let n_threads = n_threads.clamp(1, pop);
+        let (tx, rx) = std::sync::mpsc::sync_channel(cfg.queue_cap);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let agents: Vec<usize> = (0..pop).filter(|a| a % n_threads == t).collect();
+            let tx = tx.clone();
+            let stop2 = stop.clone();
+            let view2 = view.clone();
+            let art = artifact.clone();
+            let th = throttle.clone();
+            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..clone_cfg(&cfg) };
+            handles.push(std::thread::spawn(move || {
+                actor_loop(&art, view2, &cfg2, &agents, tx, stop2, th);
+            }));
+        }
+        Ok(ActorPool { rx, stop, handles })
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // drain so blocked senders can observe the stop flag
+        while self.rx.try_recv().is_ok() {}
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn clone_cfg(c: &ActorConfig) -> ActorConfig {
+    ActorConfig {
+        env: c.env.clone(),
+        policy: c.policy,
+        warmup_steps: c.warmup_steps,
+        expl_noise: c.expl_noise,
+        queue_cap: c.queue_cap,
+        seed: c.seed,
+        ratio: c.ratio,
+        lead_steps: c.lead_steps,
+    }
+}
+
+fn actor_loop(
+    artifact: &Artifact,
+    view: ParamView,
+    cfg: &ActorConfig,
+    agents: &[usize],
+    tx: SyncSender<ActorMsg>,
+    stop: Arc<AtomicBool>,
+    throttle: Throttle,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut envs: Vec<_> = agents.iter().map(|_| make_env(&cfg.env).unwrap()).collect();
+    let (ha, fa) = match cfg.policy {
+        PolicyKind::Td3 => (Activation::Relu, Activation::Tanh),
+        PolicyKind::Sac => (Activation::Relu, Activation::None),
+    };
+    let mut host = Vec::new();
+    let mut version = view.fetch_if_newer(0, &mut host);
+    let mut mlps: Vec<_> = agents
+        .iter()
+        .map(|&a| mlp_from_state(artifact, &host, "policy", a, ha, fa).unwrap())
+        .collect();
+
+    let obs_dim = envs[0].obs_dim();
+    let act_dim = envs[0].act_dim();
+    let mut obs: Vec<Vec<f32>> = envs
+        .iter_mut()
+        .map(|e| {
+            let mut o = vec![0.0; obs_dim];
+            e.reset(&mut rng, &mut o);
+            o
+        })
+        .collect();
+    let mut ep_ret = vec![0.0f64; agents.len()];
+    let mut ep_steps = vec![0usize; agents.len()];
+    let mut steps_taken = vec![0usize; agents.len()];
+    let mut raw = vec![0.0f32; mlps[0].out_dim()];
+    let mut act = vec![0.0f32; act_dim];
+    let mut next_obs = vec![0.0f32; obs_dim];
+
+    let pop_total = artifact.pop as u64;
+    'outer: loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Ratio throttling: wait while actors are too far ahead of the
+        // learner (paper Appendix A blocking rule).
+        if !throttle.may_step(cfg, pop_total) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            continue;
+        }
+        // Non-blocking parameter refresh.
+        let v2 = view.fetch_if_newer(version, &mut host);
+        if v2 > version {
+            version = v2;
+            for (k, &a) in agents.iter().enumerate() {
+                let _ = sync_mlp_from_state(artifact, &host, "policy", a, &mut mlps[k]);
+            }
+        }
+        for (k, &agent) in agents.iter().enumerate() {
+            // action selection
+            if steps_taken[k] < cfg.warmup_steps {
+                rng.fill_uniform(&mut act, -1.0, 1.0);
+            } else {
+                mlps[k].forward(&obs[k], &mut raw);
+                select_action(cfg.policy, &raw, &mut act, expl_noise_for(
+                    artifact, &host, agent, cfg.expl_noise), &mut rng);
+            }
+            let (rew, done) = envs[k].step(&act, &mut next_obs);
+            ep_ret[k] += rew as f64;
+            ep_steps[k] += 1;
+            steps_taken[k] += 1;
+            throttle.env_steps.fetch_add(1, Ordering::Relaxed);
+            let horizon_hit = ep_steps[k] >= envs[k].horizon();
+            let msg = ActorMsg::Step(Transition {
+                agent,
+                obs: obs[k].clone(),
+                act: act.clone(),
+                rew,
+                next_obs: next_obs.clone(),
+                done,
+            });
+            if send_blocking(&tx, msg, &stop).is_err() {
+                break 'outer;
+            }
+            obs[k].copy_from_slice(&next_obs);
+            if done || horizon_hit {
+                let ep = ActorMsg::Episode { agent, ret: ep_ret[k], steps: ep_steps[k] };
+                if send_blocking(&tx, ep, &stop).is_err() {
+                    break 'outer;
+                }
+                ep_ret[k] = 0.0;
+                ep_steps[k] = 0;
+                envs[k].reset(&mut rng, &mut obs[k]);
+            }
+        }
+    }
+}
+
+/// Per-agent exploration noise from the state when the field exists.
+fn expl_noise_for(artifact: &Artifact, host: &[f32], agent: usize, fallback: f32) -> f32 {
+    match artifact.field("expl_noise") {
+        Ok(f) if f.per_agent && agent < f.shape[0] && !host.is_empty() => {
+            host[f.offset + agent * f.agent_stride()]
+        }
+        _ => fallback,
+    }
+}
+
+fn select_action(kind: PolicyKind, raw: &[f32], act: &mut [f32], noise: f32, rng: &mut Rng) {
+    match kind {
+        PolicyKind::Td3 => {
+            for (a, &r) in act.iter_mut().zip(raw) {
+                *a = (r + (rng.normal() as f32) * noise).clamp(-1.0, 1.0);
+            }
+        }
+        PolicyKind::Sac => {
+            let half = raw.len() / 2;
+            for i in 0..act.len() {
+                let mu = raw[i];
+                let log_std = raw[half + i].clamp(-20.0, 2.0);
+                let eps = rng.normal() as f32;
+                act[i] = (mu + log_std.exp() * eps).tanh();
+            }
+        }
+    }
+}
+
+/// Bounded-channel send that keeps checking the stop flag (so shutdown
+/// never deadlocks against a full queue).
+fn send_blocking(
+    tx: &SyncSender<ActorMsg>,
+    mut msg: ActorMsg,
+    stop: &AtomicBool,
+) -> Result<(), ()> {
+    loop {
+        match tx.try_send(msg) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(m)) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(());
+                }
+                msg = m;
+                std::thread::yield_now();
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_action_td3_clamps() {
+        let mut rng = Rng::new(0);
+        let raw = [0.99f32, -0.99];
+        let mut act = [0.0f32; 2];
+        for _ in 0..100 {
+            select_action(PolicyKind::Td3, &raw, &mut act, 0.5, &mut rng);
+            assert!(act.iter().all(|a| (-1.0..=1.0).contains(a)));
+        }
+    }
+
+    #[test]
+    fn select_action_sac_uses_both_halves() {
+        let mut rng = Rng::new(1);
+        // mu = 0, log_std = -20 (≈ deterministic): action ≈ tanh(0) = 0
+        let raw = [0.0f32, 0.0, -20.0, -20.0];
+        let mut act = [9.0f32; 2];
+        select_action(PolicyKind::Sac, &raw, &mut act, 0.0, &mut rng);
+        assert!(act.iter().all(|a| a.abs() < 1e-3));
+    }
+
+    #[test]
+    fn policy_kind_from_algo() {
+        assert_eq!(PolicyKind::for_algo("sac"), PolicyKind::Sac);
+        assert_eq!(PolicyKind::for_algo("td3"), PolicyKind::Td3);
+        assert_eq!(PolicyKind::for_algo("cem"), PolicyKind::Td3);
+    }
+}

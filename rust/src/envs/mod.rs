@@ -1,0 +1,118 @@
+//! Environment substrate.
+//!
+//! The paper trains on MuJoCo Gym locomotion tasks and Atari 2600 games;
+//! neither is available in this image, so we implement substitutes that
+//! preserve what the paper's claims depend on (DESIGN.md "Substitutions"):
+//! matching observation/action tensor shapes, ~millisecond CPU step times
+//! (paper Table 2), dense learnable rewards, and episodic structure.
+//!
+//! * [`locomotion`]: a deterministic torque-driven N-segment locomotor ODE,
+//!   instantiated with the dimensionalities of HalfCheetah/Hopper/Walker2d/
+//!   Ant/Humanoid/Swimmer.
+//! * [`pendulum`]: the classic swing-up task (fast; used by tests and the
+//!   quickstart example).
+//! * [`minatar`]: a MinAtar-style 10x10x4 Breakout for the DQN pipeline.
+
+pub mod locomotion;
+pub mod minatar;
+pub mod minatar_extra;
+pub mod normalize;
+pub mod pendulum;
+
+use crate::util::rng::Rng;
+
+/// A continuous-control environment (actions in [-1, 1]^act_dim).
+pub trait Env: Send {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Episode length cap.
+    fn horizon(&self) -> usize;
+    /// Reset and write the initial observation.
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]);
+    /// Advance one step; writes the next observation, returns (reward, done).
+    /// `done` excludes the horizon cap (the caller tracks step counts).
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> (f32, bool);
+    fn name(&self) -> &'static str;
+}
+
+/// A discrete-action pixel environment (DQN path).
+pub trait PixelEnv: Send {
+    /// Frame shape (H, W, C); observations are HWC-flattened f32 in [0,1].
+    fn frame(&self) -> (usize, usize, usize);
+    fn n_actions(&self) -> usize;
+    fn horizon(&self) -> usize;
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]);
+    fn step(&mut self, action: usize, rng: &mut Rng, obs: &mut [f32]) -> (f32, bool);
+    fn name(&self) -> &'static str;
+}
+
+/// Construct a continuous env by its registry name.
+pub fn make_env(name: &str) -> anyhow::Result<Box<dyn Env>> {
+    match name {
+        "pendulum" => Ok(Box::new(pendulum::Pendulum::new())),
+        "halfcheetah" | "hopper" | "walker2d" | "ant" | "humanoid" | "swimmer" => {
+            Ok(Box::new(locomotion::Locomotion::by_name(name)?))
+        }
+        other => anyhow::bail!("unknown env {other:?}"),
+    }
+}
+
+/// Construct a pixel env by its registry name.
+pub fn make_pixel_env(name: &str) -> anyhow::Result<Box<dyn PixelEnv>> {
+    match name {
+        "minatar" | "breakout" => Ok(Box::new(minatar::Breakout::new())),
+        "asterix" => Ok(Box::new(minatar_extra::Asterix::new())),
+        "spaceinvaders" => Ok(Box::new(minatar_extra::SpaceInvaders::new())),
+        other => anyhow::bail!("unknown pixel env {other:?}"),
+    }
+}
+
+pub fn env_names() -> &'static [&'static str] {
+    &["pendulum", "halfcheetah", "hopper", "walker2d", "ant", "humanoid", "swimmer"]
+}
+
+/// Roll out a policy for one episode; returns (return, steps).
+pub fn rollout(
+    env: &mut dyn Env,
+    rng: &mut Rng,
+    mut policy: impl FnMut(&[f32], &mut [f32]),
+) -> (f64, usize) {
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut act = vec![0.0f32; env.act_dim()];
+    env.reset(rng, &mut obs);
+    let mut ret = 0.0f64;
+    for t in 0..env.horizon() {
+        policy(&obs, &mut act);
+        let (r, done) = env.step(&act, &mut obs);
+        ret += r as f64;
+        if done {
+            return (ret, t + 1);
+        }
+    }
+    (ret, env.horizon())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_all() {
+        for name in env_names() {
+            let env = make_env(name).unwrap();
+            assert!(env.obs_dim() > 0);
+            assert!(env.act_dim() > 0);
+            assert_eq!(env.name(), *name);
+        }
+        assert!(make_env("nope").is_err());
+    }
+
+    #[test]
+    fn rollout_zero_policy_terminates() {
+        let mut env = make_env("pendulum").unwrap();
+        let mut rng = Rng::new(0);
+        let (ret, steps) = rollout(env.as_mut(), &mut rng, |_, a| a.fill(0.0));
+        assert!(steps <= env.horizon());
+        assert!(ret.is_finite());
+    }
+}

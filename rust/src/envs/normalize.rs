@@ -1,0 +1,168 @@
+//! Running observation normalization (Welford over env streams).
+//!
+//! Locomotion RL implementations commonly standardize observations with
+//! running statistics shared between actors and the learner. The wrapper
+//! keeps the paper's Env interface so it can be slotted into the actor
+//! pipeline via config; statistics are snapshotted so the learner's
+//! batches and the actors' observations stay consistent.
+
+use super::Env;
+use crate::util::rng::Rng;
+
+/// Running per-dimension mean/variance (Welford, merge-free single stream).
+#[derive(Clone, Debug)]
+pub struct RunningNorm {
+    count: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    pub clip: f32,
+}
+
+impl RunningNorm {
+    pub fn new(dim: usize, clip: f32) -> Self {
+        RunningNorm { count: 0.0, mean: vec![0.0; dim], m2: vec![0.0; dim], clip }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn update(&mut self, obs: &[f32]) {
+        debug_assert_eq!(obs.len(), self.mean.len());
+        self.count += 1.0;
+        for (i, &x) in obs.iter().enumerate() {
+            let d = x as f64 - self.mean[i];
+            self.mean[i] += d / self.count;
+            self.m2[i] += d * (x as f64 - self.mean[i]);
+        }
+    }
+
+    pub fn normalize(&self, obs: &mut [f32]) {
+        if self.count < 2.0 {
+            return;
+        }
+        for (i, o) in obs.iter_mut().enumerate() {
+            let var = (self.m2[i] / (self.count - 1.0)).max(1e-8);
+            let z = ((*o as f64 - self.mean[i]) / var.sqrt()) as f32;
+            *o = z.clamp(-self.clip, self.clip);
+        }
+    }
+}
+
+/// Env wrapper applying (and updating) running normalization.
+pub struct NormalizedEnv {
+    inner: Box<dyn Env>,
+    pub norm: RunningNorm,
+    /// Freeze statistics (evaluation mode).
+    pub frozen: bool,
+}
+
+impl NormalizedEnv {
+    pub fn new(inner: Box<dyn Env>, clip: f32) -> Self {
+        let dim = inner.obs_dim();
+        NormalizedEnv { inner, norm: RunningNorm::new(dim, clip), frozen: false }
+    }
+}
+
+impl Env for NormalizedEnv {
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn act_dim(&self) -> usize {
+        self.inner.act_dim()
+    }
+
+    fn horizon(&self) -> usize {
+        self.inner.horizon()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]) {
+        self.inner.reset(rng, obs);
+        if !self.frozen {
+            self.norm.update(obs);
+        }
+        self.norm.normalize(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> (f32, bool) {
+        let (r, d) = self.inner.step(action, obs);
+        if !self.frozen {
+            self.norm.update(obs);
+        }
+        self.norm.normalize(obs);
+        (r, d)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::make_env;
+
+    #[test]
+    fn running_norm_matches_batch_stats() {
+        let mut rng = Rng::new(0);
+        let mut norm = RunningNorm::new(2, 10.0);
+        let mut xs = Vec::new();
+        for _ in 0..2000 {
+            let x = [rng.normal_scaled(5.0, 2.0) as f32, rng.normal_scaled(-3.0, 0.5) as f32];
+            norm.update(&x);
+            xs.push(x);
+        }
+        let mut probe = [5.0f32, -3.0];
+        norm.normalize(&mut probe);
+        // the distribution means normalize to ~0
+        assert!(probe[0].abs() < 0.1, "{probe:?}");
+        assert!(probe[1].abs() < 0.15, "{probe:?}");
+        // a +1-sigma point normalizes to ~1
+        let mut hi = [7.0f32, -2.5];
+        norm.normalize(&mut hi);
+        assert!((hi[0] - 1.0).abs() < 0.1, "{hi:?}");
+        assert!((hi[1] - 1.0).abs() < 0.15, "{hi:?}");
+    }
+
+    #[test]
+    fn clipping_bounds_output() {
+        let mut norm = RunningNorm::new(1, 2.0);
+        for i in 0..100 {
+            norm.update(&[(i % 3) as f32]);
+        }
+        let mut extreme = [1e9f32];
+        norm.normalize(&mut extreme);
+        assert!(extreme[0] <= 2.0);
+    }
+
+    #[test]
+    fn wrapper_normalizes_env_stream() {
+        let mut env = NormalizedEnv::new(make_env("halfcheetah").unwrap(), 5.0);
+        let mut rng = Rng::new(1);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        env.reset(&mut rng, &mut obs);
+        let act = vec![0.3; env.act_dim()];
+        for _ in 0..500 {
+            env.step(&act, &mut obs);
+            assert!(obs.iter().all(|v| v.is_finite() && v.abs() <= 5.0));
+        }
+        // frozen mode stops updating statistics
+        env.frozen = true;
+        let count_before = env.norm.count;
+        env.step(&act, &mut obs);
+        assert_eq!(env.norm.count, count_before);
+    }
+
+    #[test]
+    fn degenerate_dimensions_do_not_blow_up() {
+        let mut norm = RunningNorm::new(1, 3.0);
+        for _ in 0..50 {
+            norm.update(&[42.0]); // zero variance
+        }
+        let mut x = [42.0f32];
+        norm.normalize(&mut x);
+        assert!(x[0].is_finite());
+    }
+}

@@ -1,0 +1,119 @@
+//! Classic pendulum swing-up (Gym `Pendulum-v1` dynamics, action rescaled
+//! to [-1, 1]). Fast and quickly learnable — the default env for tests and
+//! the quickstart end-to-end example.
+
+use super::Env;
+use crate::util::rng::Rng;
+
+const MAX_SPEED: f64 = 8.0;
+const MAX_TORQUE: f64 = 2.0;
+const DT: f64 = 0.05;
+const G: f64 = 10.0;
+const M: f64 = 1.0;
+const L: f64 = 1.0;
+
+pub struct Pendulum {
+    theta: f64,
+    theta_dot: f64,
+}
+
+impl Pendulum {
+    pub fn new() -> Self {
+        Pendulum { theta: 0.0, theta_dot: 0.0 }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.theta.cos() as f32;
+        obs[1] = self.theta.sin() as f32;
+        obs[2] = self.theta_dot as f32;
+    }
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn angle_normalize(x: f64) -> f64 {
+    let two_pi = 2.0 * std::f64::consts::PI;
+    ((x + std::f64::consts::PI).rem_euclid(two_pi)) - std::f64::consts::PI
+}
+
+impl Env for Pendulum {
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn horizon(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]) {
+        self.theta = rng.uniform_in(-std::f64::consts::PI, std::f64::consts::PI);
+        self.theta_dot = rng.uniform_in(-1.0, 1.0);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> (f32, bool) {
+        let u = (action[0].clamp(-1.0, 1.0) as f64) * MAX_TORQUE;
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+        let acc = 3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u;
+        self.theta_dot = (self.theta_dot + acc * DT).clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += self.theta_dot * DT;
+        self.write_obs(obs);
+        (-cost as f32, false)
+    }
+
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_is_best_upright() {
+        let mut env = Pendulum::new();
+        env.theta = std::f64::consts::PI; // gym convention: 0 is upright...
+        env.theta_dot = 0.0;
+        let mut obs = [0.0f32; 3];
+        let (r_down, _) = env.step(&[0.0], &mut obs);
+        let mut env2 = Pendulum::new();
+        env2.theta = 0.0;
+        env2.theta_dot = 0.0;
+        let (r_up, _) = env2.step(&[0.0], &mut obs);
+        assert!(r_up > r_down);
+        assert!(r_up <= 0.0); // cost-based reward is non-positive
+    }
+
+    #[test]
+    fn speed_is_clamped() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(0);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        for _ in 0..500 {
+            env.step(&[1.0], &mut obs);
+        }
+        assert!(env.theta_dot.abs() <= MAX_SPEED);
+        assert!(obs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn angle_normalize_wraps() {
+        assert!((angle_normalize(2.0 * std::f64::consts::PI)).abs() < 1e-12);
+        // 3π wraps to ±π (both represent the same angle)
+        assert!((angle_normalize(3.0 * std::f64::consts::PI).abs()
+            - std::f64::consts::PI)
+            .abs()
+            < 1e-9);
+    }
+}

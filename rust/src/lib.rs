@@ -1,0 +1,33 @@
+//! # FastPBRL
+//!
+//! Rust + JAX + Pallas reproduction of *"Fast Population-Based
+//! Reinforcement Learning on a Single Machine"* (Flajolet et al., ICML
+//! 2022): train a population of N RL agents on one machine with one
+//! accelerator at barely more than the cost of a single agent, by
+//! vectorizing the update step over the population.
+//!
+//! Architecture (see `DESIGN.md`):
+//! * **L1** — Pallas population-batched linear kernel (build time,
+//!   `python/compile/kernels/`).
+//! * **L2** — jax population update steps for TD3/SAC/DQN/CEM-RL/DvD over
+//!   a flat train-state vector, AOT-lowered to HLO text
+//!   (`python/compile/updates/`, `aot.py`).
+//! * **L3** — this crate: the coordinator that owns environments, replay,
+//!   actors, PBT/CEM/DvD controllers, and executes the lowered update
+//!   steps through PJRT with device-resident state.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod envs;
+pub mod manifest;
+pub mod nn;
+pub mod replay;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Default results directory for benches/examples.
+pub const RESULTS_DIR: &str = "results";

@@ -1,0 +1,234 @@
+//! `fastpbrl` launcher: the single self-contained binary that drives every
+//! training mode of the reproduction (python never runs at request time).
+//!
+//! Subcommands:
+//!   list                       show available AOT artifacts
+//!   train  [--pbt-interval N]  (PBT-)population training (TD3/SAC)
+//!   cemrl  ...                 CEM-RL with the shared critic (§5.2)
+//!   dvd    ...                 DvD diversity training (§5.3)
+
+use fastpbrl::coordinator::cem::{run_cemrl, CemRlConfig};
+use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
+use fastpbrl::coordinator::hyperparams::HyperSpec;
+use fastpbrl::coordinator::pbt::{Explore, PbtController};
+use fastpbrl::coordinator::trainer::{Controller, NoController, Trainer, TrainerConfig};
+use fastpbrl::manifest::Manifest;
+use fastpbrl::util::cli::Cli;
+use fastpbrl::util::config::Config;
+use fastpbrl::util::log::info;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "list" => list(rest),
+        "train" => train(rest),
+        "cemrl" => cemrl(rest),
+        "dvd" => dvd(rest),
+        "report" => report(rest),
+        _ => {
+            println!(
+                "fastpbrl — Fast Population-Based RL on a Single Machine (ICML 2022)\n\n\
+                 Usage: fastpbrl <list|train|cemrl|dvd|report> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Render results CSVs as terminal charts (Fig 5/6-style curves).
+fn report(argv: &[String]) -> anyhow::Result<()> {
+    use fastpbrl::util::plot::{ascii_chart, parse_csv, series};
+    let cli = Cli::new("fastpbrl report", "plot results/*.csv in the terminal")
+        .opt("x", "wall_s", "x column (wall_s | env_steps | updates)")
+        .opt("y", "best_return", "y column")
+        .opt("width", "72", "chart width")
+        .opt("height", "16", "chart height");
+    let args = cli.parse(argv)?;
+    let files: Vec<String> = if args.positional.is_empty() {
+        let mut v: Vec<String> = std::fs::read_dir("results")
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path().display().to_string())
+                    .filter(|p| p.ends_with(".csv"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort();
+        v
+    } else {
+        args.positional.clone()
+    };
+    anyhow::ensure!(!files.is_empty(), "no CSV files found (run an example first)");
+    for f in files {
+        let Ok(text) = std::fs::read_to_string(&f) else { continue };
+        let Ok((header, cols)) = parse_csv(&text) else { continue };
+        let (x, y) = (args.get("x"), args.get("y"));
+        if !header.iter().any(|h| h == x) || !header.iter().any(|h| h == y) {
+            continue; // bench CSVs have different columns; skip silently
+        }
+        let s = series(&header, &cols, x, y)?;
+        println!("\n== {f} ==");
+        print!("{}", ascii_chart(&[(y, &s)],
+                                  args.get_usize("width")?,
+                                  args.get_usize("height")?, x, y));
+    }
+    Ok(())
+}
+
+fn list(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("fastpbrl list", "show available AOT artifacts")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let args = cli.parse(argv)?;
+    let m = Manifest::load(args.get("artifacts"))?;
+    println!("{:<44} {:>5} {:>3} {:>6} {:>10}", "artifact", "pop", "k", "batch", "state");
+    for (name, a) in &m.artifacts {
+        println!(
+            "{:<44} {:>5} {:>3} {:>6} {:>10}",
+            name, a.pop, a.num_steps, a.batch, a.state_size
+        );
+    }
+    Ok(())
+}
+
+fn base_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "", "optional config file (key = value)")
+        .opt("env", "pendulum", "environment name")
+        .opt("pop", "4", "population size")
+        .opt("updates", "2000", "total update steps")
+        .opt("seed", "0", "random seed")
+        .opt("csv", "", "CSV metrics output path")
+        .opt("max-seconds", "0", "wall-clock budget (0 = unlimited)")
+}
+
+fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
+                       -> anyhow::Result<TrainerConfig> {
+    let mut cfg = TrainerConfig {
+        env: args.get("env").to_string(),
+        algo: algo.to_string(),
+        pop: args.get_usize("pop")?,
+        total_updates: args.get_u64("updates")?,
+        seed: args.get_u64("seed")?,
+        csv_path: args.get("csv").to_string(),
+        max_seconds: args.get_f64("max-seconds")?,
+        ..TrainerConfig::default()
+    };
+    // optional config file refinements
+    let path = args.get("config");
+    if !path.is_empty() {
+        let file = Config::load(path)?;
+        cfg.sync_every = file.get_usize("train.sync_every", cfg.sync_every as usize)? as u64;
+        cfg.warmup_steps = file.get_usize("train.warmup_steps", cfg.warmup_steps)?;
+        cfg.replay_capacity = file.get_usize("train.replay_capacity", cfg.replay_capacity)?;
+        cfg.ratio = file.get_f64("train.ratio", cfg.ratio)?;
+        cfg.n_actor_threads =
+            file.get_usize("train.actor_threads", cfg.n_actor_threads)?;
+    }
+    Ok(cfg)
+}
+
+fn train(argv: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("fastpbrl train", "population training (TD3/SAC), optional PBT")
+        .opt("algo", "td3", "td3 | sac")
+        .opt("pbt-interval", "0", "PBT evolution interval in updates (0 = no PBT)")
+        .opt("pbt-frac", "0.3", "PBT truncation fraction")
+        .opt("explore", "resample", "PBT explore: resample | perturb");
+    let args = cli.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let algo = args.get("algo").to_string();
+    let mut cfg = trainer_config_from(&args, &algo)?;
+    let interval = args.get_u64("pbt-interval")?;
+    let mut controller: Box<dyn Controller> = if interval > 0 {
+        cfg.hyper_spec = Some(HyperSpec::for_algo(&algo)?);
+        let explore = match args.get("explore") {
+            "perturb" => Explore::Perturb,
+            _ => Explore::Resample,
+        };
+        Box::new(PbtController::new(
+            HyperSpec::for_algo(&algo)?,
+            interval,
+            args.get_f64("pbt-frac")?,
+            explore,
+        ))
+    } else {
+        Box::new(NoController)
+    };
+    let mut trainer = Trainer::new(&manifest, cfg)?;
+    info(&format!(
+        "training {} pop={} env={} ({} updates)",
+        algo,
+        trainer.artifact().pop,
+        trainer.artifact().env,
+        trainer.cfg.total_updates
+    ));
+    let summary = trainer.run(controller.as_mut())?;
+    info(&format!(
+        "done: {:.1}s wall, {} updates, {} env steps, best return {:.1}, mean {:.1}",
+        summary.wall_seconds, summary.updates, summary.env_steps,
+        summary.best_return, summary.mean_return
+    ));
+    print!("{}", summary.timers.report());
+    Ok(())
+}
+
+fn cemrl(argv: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("fastpbrl cemrl", "CEM-RL with shared critic (§5.2)")
+        .opt("ordering", "vec", "update ordering: vec (ours) | seq (original)")
+        .opt("iters", "10", "CEM iterations")
+        .opt("rounds", "10", "update rounds per iteration")
+        .opt("steps-per-iter", "1000", "env steps collected per iteration");
+    let args = cli.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let cfg = CemRlConfig {
+        env: args.get("env").to_string(),
+        pop: args.get_usize("pop")?,
+        iters: args.get_usize("iters")?,
+        rounds_per_iter: args.get_usize("rounds")?,
+        steps_per_iter: args.get_usize("steps-per-iter")?,
+        seed: args.get_u64("seed")?,
+        csv_path: args.get("csv").to_string(),
+        max_seconds: args.get_f64("max-seconds")?,
+        ordering: args.get("ordering").to_string(),
+        ..CemRlConfig::default()
+    };
+    let summary = run_cemrl(&manifest, &cfg)?;
+    info(&format!(
+        "cemrl done: {:.1}s wall, {} updates, best {:.1}, mean {:.1}, mu {:.1}",
+        summary.wall_seconds, summary.updates, summary.best_return,
+        summary.mean_return, summary.mu_return
+    ));
+    print!("{}", summary.timers.report());
+    Ok(())
+}
+
+fn dvd(argv: &[String]) -> anyhow::Result<()> {
+    let cli = base_cli("fastpbrl dvd", "DvD diversity training (§5.3)");
+    let args = cli.parse(argv)?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let mut cfg = trainer_config_from(&args, "dvd")?;
+    cfg.shared_replay = true;
+    let total = cfg.total_updates;
+    let mut controller = DvdLambdaSchedule::default_for(total);
+    let mut trainer = Trainer::new(&manifest, cfg)?;
+    info(&format!(
+        "dvd training pop={} env={} ({} updates)",
+        trainer.artifact().pop, trainer.artifact().env, total
+    ));
+    let summary = trainer.run(&mut controller)?;
+    info(&format!(
+        "dvd done: {:.1}s wall, {} updates, best return {:.1}, mean {:.1}",
+        summary.wall_seconds, summary.updates, summary.best_return, summary.mean_return
+    ));
+    Ok(())
+}

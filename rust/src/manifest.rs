@@ -1,0 +1,540 @@
+//! Artifact manifest: the rust mirror of `python/compile/layout.py`.
+//!
+//! `artifacts/manifest.json` describes every AOT-lowered computation: the
+//! flat-state field layout (offset/shape/dtype/init/group), batch inputs,
+//! and env dims. This module parses it and implements the *same* init-spec
+//! semantics as the python side so the coordinator can initialize, read
+//! and mutate train states without any Python at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    U32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "u32" => Dtype::U32,
+            "i32" => Dtype::I32,
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub init: String,
+    pub group: String,
+    pub per_agent: bool,
+}
+
+impl Field {
+    /// Size of one agent's slice (leading axis = population).
+    pub fn agent_stride(&self) -> usize {
+        if self.per_agent && !self.shape.is_empty() && self.shape[0] > 0 {
+            self.size / self.shape[0]
+        } else {
+            self.size
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchInput {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl BatchInput {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EnvDesc {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub frame: Option<(usize, usize, usize)>,
+    pub n_actions: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub algo: String,
+    pub env: String,
+    pub env_desc: EnvDesc,
+    pub pop: usize,
+    pub num_steps: usize,
+    pub batch: usize,
+    pub hidden: Vec<usize>,
+    pub state_size: usize,
+    /// "state" for update steps; "actions"/"qvalues" for forward passes.
+    pub output: String,
+    pub sync_target_groups: Vec<String>,
+    pub fields: Vec<Field>,
+    pub inputs: Vec<BatchInput>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Artifact {
+    /// Construct an artifact description directly (used by manifest
+    /// parsing and by tests that build synthetic layouts).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        file: PathBuf,
+        algo: String,
+        env: String,
+        env_desc: EnvDesc,
+        pop: usize,
+        num_steps: usize,
+        batch: usize,
+        hidden: Vec<usize>,
+        state_size: usize,
+        output: String,
+        sync_target_groups: Vec<String>,
+        fields: Vec<Field>,
+        inputs: Vec<BatchInput>,
+    ) -> Artifact {
+        let by_name = fields
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (f.name.clone(), i))
+            .collect();
+        Artifact {
+            name,
+            file,
+            algo,
+            env,
+            env_desc,
+            pop,
+            num_steps,
+            batch,
+            hidden,
+            state_size,
+            output,
+            sync_target_groups,
+            fields,
+            inputs,
+            by_name,
+        }
+    }
+
+    pub fn field(&self, name: &str) -> anyhow::Result<&Field> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.fields[i])
+            .ok_or_else(|| anyhow::anyhow!("artifact {} has no field {name:?}", self.name))
+    }
+
+    pub fn group_fields(&self, group: &str) -> Vec<&Field> {
+        self.fields.iter().filter(|f| f.group == group).collect()
+    }
+
+    /// Initialize a flat state following the manifest init specs — the
+    /// rust mirror of `Layout.init_numpy`, but with per-call seeding.
+    pub fn init_state(&self, rng: &mut Rng, seed_tag: u64) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.state_size];
+        for f in &self.fields {
+            let seg = &mut out[f.offset..f.offset + f.size];
+            init_field(f, seg, rng, seed_tag);
+        }
+        // targets start equal to their online nets
+        self.sync_targets(&mut out);
+        out
+    }
+
+    /// Copy online params onto their `_t/` target twins.
+    pub fn sync_targets(&self, state: &mut [f32]) {
+        for f in &self.fields {
+            if f.group == "policy_target" || f.group == "critic_target" {
+                let src_name = f.name.replacen("_t/", "/", 1);
+                if let Ok(src) = self.field(&src_name) {
+                    debug_assert_eq!(src.size, f.size);
+                    let (so, fo, n) = (src.offset, f.offset, f.size);
+                    // split to copy within one slice
+                    if so < fo {
+                        let (a, b) = state.split_at_mut(fo);
+                        b[..n].copy_from_slice(&a[so..so + n]);
+                    } else {
+                        let (a, b) = state.split_at_mut(so);
+                        a[fo..fo + n].copy_from_slice(&b[..n]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Read a field's raw f32 lane out of a host state copy.
+    pub fn read<'a>(&self, state: &'a [f32], name: &str) -> anyhow::Result<&'a [f32]> {
+        let f = self.field(name)?;
+        Ok(&state[f.offset..f.offset + f.size])
+    }
+
+    pub fn read_mut<'a>(&self, state: &'a mut [f32], name: &str)
+                        -> anyhow::Result<&'a mut [f32]> {
+        let f = self.field(name)?;
+        Ok(&mut state[f.offset..f.offset + f.size])
+    }
+
+    /// Read one agent's slice of a per-agent field.
+    pub fn read_agent<'a>(&self, state: &'a [f32], name: &str, agent: usize)
+                          -> anyhow::Result<&'a [f32]> {
+        let f = self.field(name)?;
+        anyhow::ensure!(f.per_agent, "field {name} is not per-agent");
+        anyhow::ensure!(agent < f.shape[0], "agent {agent} out of range");
+        let stride = f.agent_stride();
+        Ok(&state[f.offset + agent * stride..f.offset + (agent + 1) * stride])
+    }
+
+    /// Concatenate agent `agent`'s rows over all per-agent fields of the
+    /// given groups into one parameter vector (CEM's genome view).
+    pub fn agent_vector(&self, state: &[f32], groups: &[&str], agent: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for f in &self.fields {
+            if f.per_agent && groups.iter().any(|g| *g == f.group) {
+                let stride = f.agent_stride();
+                out.extend_from_slice(
+                    &state[f.offset + agent * stride..f.offset + (agent + 1) * stride],
+                );
+            }
+        }
+        out
+    }
+
+    /// Scatter a parameter vector back into agent `agent`'s rows
+    /// (inverse of [`Artifact::agent_vector`]).
+    pub fn set_agent_vector(&self, state: &mut [f32], groups: &[&str], agent: usize,
+                            vec: &[f32]) {
+        let mut k = 0;
+        for f in &self.fields {
+            if f.per_agent && groups.iter().any(|g| *g == f.group) {
+                let stride = f.agent_stride();
+                state[f.offset + agent * stride..f.offset + (agent + 1) * stride]
+                    .copy_from_slice(&vec[k..k + stride]);
+                k += stride;
+            }
+        }
+        debug_assert_eq!(k, vec.len(), "vector length mismatch");
+    }
+
+    /// Copy agent `src`'s row into agent `dst` for every per-agent field
+    /// in the given groups (PBT exploit step).
+    pub fn copy_agent(&self, state: &mut [f32], groups: &[&str], src: usize, dst: usize) {
+        for f in &self.fields {
+            if !f.per_agent || !groups.iter().any(|g| *g == f.group) {
+                continue;
+            }
+            let stride = f.agent_stride();
+            let (so, do_) = (f.offset + src * stride, f.offset + dst * stride);
+            if so == do_ {
+                continue;
+            }
+            let (lo, hi, n) = if so < do_ { (so, do_, stride) } else { (do_, so, stride) };
+            let (a, b) = state.split_at_mut(hi);
+            if so < do_ {
+                b[..n].copy_from_slice(&a[lo..lo + n]);
+            } else {
+                a[lo..lo + n].copy_from_slice(&b[..n]);
+            }
+        }
+    }
+}
+
+fn init_field(f: &Field, seg: &mut [f32], rng: &mut Rng, seed_tag: u64) {
+    let spec = f.init.as_str();
+    if spec == "zeros" {
+        seg.fill(0.0);
+    } else if spec == "ones" {
+        seg.fill(1.0);
+    } else if spec == "step" {
+        seg.fill(f32::from_bits(0)); // u32 zero
+    } else if spec == "key" {
+        // distinct per-lane threefry key material (u32 bit-cast into f32),
+        // matching layout.py but offset by the caller's seed tag so every
+        // population/run gets unique streams.
+        for (i, v) in seg.iter_mut().enumerate() {
+            let mut x = (i as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed_tag);
+            x ^= x >> 31;
+            *v = f32::from_bits((x & 0xFFFF_FFFF) as u32);
+        }
+    } else if let Some(v) = spec.strip_prefix("const:") {
+        let x: f32 = v.parse().unwrap_or(0.0);
+        seg.fill(x);
+    } else if let Some(v) = spec.strip_prefix("lecun_uniform:") {
+        let fan_in: f32 = v.parse().unwrap_or(1.0);
+        let bound = (3.0 / fan_in.max(1.0)).sqrt();
+        rng.fill_uniform(seg, -bound, bound);
+    } else if let Some(v) = spec.strip_prefix("uniform:") {
+        let parts: Vec<&str> = v.split(',').collect();
+        let lo: f32 = parts[0].parse().unwrap_or(0.0);
+        let hi: f32 = parts.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+        rng.fill_uniform(seg, lo, hi);
+    } else {
+        // unknown spec: leave zeros (forward-compatible)
+        seg.fill(0.0);
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        let json = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts object"))?;
+        for (name, a) in arts {
+            artifacts.insert(name.clone(), parse_artifact(name, a, &dir)?);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Artifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not found; available: {:?}",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Find an artifact by attributes (algo + env + pop [+ num_steps]).
+    pub fn find(&self, algo: &str, env: &str, pop: usize, num_steps: Option<usize>)
+                -> anyhow::Result<&Artifact> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.algo == algo
+                    && a.env == env
+                    && a.pop == pop
+                    && num_steps.map(|k| a.num_steps == k).unwrap_or(true)
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for algo={algo} env={env} pop={pop} k={num_steps:?}; \
+                     regenerate with `python -m compile.aot --spec {algo}:{env}:p{pop}:...`"
+                )
+            })
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing/invalid {key}"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing/invalid {key}"))
+}
+
+fn parse_artifact(name: &str, a: &Json, dir: &Path) -> anyhow::Result<Artifact> {
+    let mut fields = Vec::new();
+    for fj in a.get("fields").and_then(|f| f.as_arr()).unwrap_or(&[]) {
+        fields.push(Field {
+            name: req_str(fj, "name")?.to_string(),
+            offset: req_usize(fj, "offset")?,
+            size: req_usize(fj, "size")?,
+            shape: fj
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|v| v.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            dtype: Dtype::parse(req_str(fj, "dtype")?)?,
+            init: req_str(fj, "init")?.to_string(),
+            group: req_str(fj, "group")?.to_string(),
+            per_agent: fj.get("per_agent").and_then(|v| v.as_bool()).unwrap_or(true),
+        });
+    }
+    let mut inputs = Vec::new();
+    for ij in a.get("inputs").and_then(|f| f.as_arr()).unwrap_or(&[]) {
+        inputs.push(BatchInput {
+            name: req_str(ij, "name")?.to_string(),
+            shape: ij
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|v| v.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            dtype: Dtype::parse(req_str(ij, "dtype")?)?,
+        });
+    }
+    let ed = a.get("env_desc");
+    let env_desc = EnvDesc {
+        obs_dim: ed.and_then(|e| e.get("obs_dim")).and_then(|v| v.as_usize()).unwrap_or(0),
+        act_dim: ed.and_then(|e| e.get("act_dim")).and_then(|v| v.as_usize()).unwrap_or(0),
+        frame: ed.and_then(|e| e.get("frame")).and_then(|v| v.as_arr()).and_then(|v| {
+            if v.len() == 3 {
+                Some((v[0].as_usize()?, v[1].as_usize()?, v[2].as_usize()?))
+            } else {
+                None
+            }
+        }),
+        n_actions: ed
+            .and_then(|e| e.get("n_actions"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0),
+    };
+    Ok(Artifact::new(
+        name.to_string(),
+        dir.join(req_str(a, "file")?),
+        req_str(a, "algo")?.to_string(),
+        req_str(a, "env")?.to_string(),
+        env_desc,
+        req_usize(a, "pop")?,
+        req_usize(a, "num_steps")?,
+        req_usize(a, "batch")?,
+        a.get("hidden")
+            .and_then(|s| s.as_arr())
+            .map(|v| v.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default(),
+        req_usize(a, "state_size")?,
+        req_str(a, "output")?.to_string(),
+        a.get("sync_target_groups")
+            .and_then(|s| s.as_arr())
+            .map(|v| v.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+        fields,
+        inputs,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_artifact() -> Artifact {
+        let fields = vec![
+            Field {
+                name: "policy/w0".into(),
+                offset: 0,
+                size: 6,
+                shape: vec![2, 3],
+                dtype: Dtype::F32,
+                init: "lecun_uniform:3".into(),
+                group: "policy".into(),
+                per_agent: true,
+            },
+            Field {
+                name: "policy_t/w0".into(),
+                offset: 6,
+                size: 6,
+                shape: vec![2, 3],
+                dtype: Dtype::F32,
+                init: "lecun_uniform:3".into(),
+                group: "policy_target".into(),
+                per_agent: true,
+            },
+            Field {
+                name: "lr".into(),
+                offset: 12,
+                size: 2,
+                shape: vec![2],
+                dtype: Dtype::F32,
+                init: "const:0.0003".into(),
+                group: "hyper".into(),
+                per_agent: true,
+            },
+            Field {
+                name: "rng".into(),
+                offset: 14,
+                size: 4,
+                shape: vec![2, 2],
+                dtype: Dtype::U32,
+                init: "key".into(),
+                group: "rng".into(),
+                per_agent: true,
+            },
+        ];
+        Artifact::new(
+            "toy".into(),
+            PathBuf::new(),
+            "td3".into(),
+            "pendulum".into(),
+            EnvDesc::default(),
+            2,
+            1,
+            4,
+            vec![3],
+            18,
+            "state".into(),
+            vec!["policy".into()],
+            fields,
+            vec![],
+        )
+    }
+
+    #[test]
+    fn init_syncs_targets_and_sets_hypers() {
+        let a = toy_artifact();
+        let mut rng = Rng::new(0);
+        let s = a.init_state(&mut rng, 7);
+        assert_eq!(s.len(), 18);
+        assert_eq!(&s[0..6], &s[6..12], "targets must equal online at init");
+        assert!((s[12] - 3e-4).abs() < 1e-9);
+        // key material nonzero and distinct
+        let keys: Vec<u32> = s[14..18].iter().map(|v| v.to_bits()).collect();
+        assert!(keys.iter().all(|&k| k != 0));
+        assert_ne!(keys[0], keys[2]);
+    }
+
+    #[test]
+    fn copy_agent_moves_only_selected_groups() {
+        let a = toy_artifact();
+        let mut rng = Rng::new(0);
+        let mut s = a.init_state(&mut rng, 7);
+        // make agents distinct
+        for v in a.read_mut(&mut s, "policy/w0").unwrap()[..3].iter_mut() {
+            *v = 9.0;
+        }
+        s[12] = 1.0; // lr agent 0
+        a.copy_agent(&mut s, &["policy"], 0, 1);
+        let w = a.read(&s, "policy/w0").unwrap();
+        assert_eq!(&w[0..3], &w[3..6]);
+        // hyper group untouched
+        assert!((s[13] - 3e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_agent_slices() {
+        let a = toy_artifact();
+        let mut rng = Rng::new(1);
+        let mut s = a.init_state(&mut rng, 0);
+        a.read_mut(&mut s, "policy/w0").unwrap()[3..6].fill(5.0);
+        let ag1 = a.read_agent(&s, "policy/w0", 1).unwrap();
+        assert_eq!(ag1, &[5.0, 5.0, 5.0]);
+        assert!(a.read_agent(&s, "policy/w0", 2).is_err());
+    }
+}

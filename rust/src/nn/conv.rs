@@ -1,0 +1,135 @@
+//! Conv-net forward pass matching `python/compile/networks.py::dqn_apply`
+//! (one population member): 3x3 VALID conv (NHWC/HWIO) + relu, flatten,
+//! then an MLP head. Used by DQN actors on the MinAtar-style env.
+
+use crate::nn::mlp::Mlp;
+
+#[derive(Clone, Debug)]
+pub struct ConvNet {
+    /// Conv filter, HWIO layout `[kh, kw, in_ch, features]` flattened.
+    w: Vec<f32>,
+    b: Vec<f32>,
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    features: usize,
+    /// Input frame H, W.
+    h: usize,
+    wd: usize,
+    pub head: Mlp,
+    conv_out: Vec<f32>,
+}
+
+impl ConvNet {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(w: Vec<f32>, b: Vec<f32>, kh: usize, kw: usize, in_ch: usize,
+               features: usize, h: usize, wd: usize, head: Mlp) -> Self {
+        assert_eq!(w.len(), kh * kw * in_ch * features, "conv filter size");
+        assert_eq!(b.len(), features, "conv bias size");
+        let (ho, wo) = (h - kh + 1, wd - kw + 1);
+        assert_eq!(head.in_dim(), ho * wo * features, "head input dim");
+        ConvNet { w, b, kh, kw, in_ch, features, h, wd, head,
+                  conv_out: vec![0.0; ho * wo * features] }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        (self.h - self.kh + 1, self.wd - self.kw + 1)
+    }
+
+    pub fn set_conv(&mut self, w: &[f32], b: &[f32]) {
+        assert_eq!(w.len(), self.w.len());
+        assert_eq!(b.len(), self.b.len());
+        self.w.copy_from_slice(w);
+        self.b.copy_from_slice(b);
+    }
+
+    /// Forward one frame `[H, W, C]` (flattened HWC) -> q-values.
+    pub fn forward(&mut self, frame: &[f32], out: &mut [f32]) {
+        assert_eq!(frame.len(), self.h * self.wd * self.in_ch, "frame size");
+        let (ho, wo) = self.out_hw();
+        let f = self.features;
+        // VALID conv + relu, NHWC x HWIO.
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = &mut self.conv_out[(oy * wo + ox) * f..(oy * wo + ox + 1) * f];
+                dst.copy_from_slice(&self.b);
+                for ky in 0..self.kh {
+                    for kx in 0..self.kw {
+                        let iy = oy + ky;
+                        let ix = ox + kx;
+                        let px = &frame[(iy * self.wd + ix) * self.in_ch..];
+                        for c in 0..self.in_ch {
+                            let xv = px[c];
+                            if xv == 0.0 {
+                                continue; // sparse binary frames: skip zeros
+                            }
+                            let wrow = &self.w[((ky * self.kw + kx) * self.in_ch + c) * f..];
+                            for (d, &wv) in dst.iter_mut().zip(&wrow[..f]) {
+                                *d += xv * wv;
+                            }
+                        }
+                    }
+                }
+                for d in dst.iter_mut() {
+                    *d = d.max(0.0);
+                }
+            }
+        }
+        self.head.forward(&self.conv_out, out);
+    }
+
+    pub fn forward_vec(&mut self, frame: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.head.out_dim()];
+        self.forward(frame, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::Activation;
+
+    /// 3x3 frame, 1 channel, 2x2 identity-ish filter -> hand-checkable.
+    #[test]
+    fn conv_matches_hand_computation() {
+        // 2x2 filter with single weight at (0,0): conv = top-left pixel.
+        let w = vec![1.0, 0.0, 0.0, 0.0]; // [kh=2,kw=2,c=1,f=1]
+        let b = vec![0.5];
+        let mut head = Mlp::new(Activation::Relu, Activation::None);
+        head.push_layer(vec![1.0, 1.0, 1.0, 1.0], vec![0.0], 4, 1); // sum
+        let mut net = ConvNet::new(w, b, 2, 2, 1, 1, 3, 3, head);
+        #[rustfmt::skip]
+        let frame = vec![
+            1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0,
+            7.0, 8.0, 9.0,
+        ];
+        // conv out (2x2): relu(pixel + 0.5) at (0,0),(0,1),(1,0),(1,1)
+        //   = [1.5, 2.5, 4.5, 5.5]; head sums -> 14.0
+        let y = net.forward_vec(&frame);
+        assert!((y[0] - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multi_channel_accumulates() {
+        // 1x1 filter, 2 channels -> f=1 with weights [2, 3]
+        let w = vec![2.0, 3.0];
+        let b = vec![0.0];
+        let mut head = Mlp::new(Activation::Relu, Activation::None);
+        head.push_layer(vec![1.0], vec![0.0], 1, 1);
+        let mut net = ConvNet::new(w, b, 1, 1, 2, 1, 1, 1, head);
+        let y = net.forward_vec(&[10.0, 1.0]);
+        assert!((y[0] - 23.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_in_conv_applies() {
+        let w = vec![-1.0];
+        let b = vec![0.0];
+        let mut head = Mlp::new(Activation::Relu, Activation::None);
+        head.push_layer(vec![1.0], vec![0.0], 1, 1);
+        let mut net = ConvNet::new(w, b, 1, 1, 1, 1, 1, 1, head);
+        assert_eq!(net.forward_vec(&[5.0])[0], 0.0);
+    }
+}

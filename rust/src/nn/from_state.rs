@@ -1,0 +1,86 @@
+//! Build native inference networks from a host copy of the flat train
+//! state, using the manifest layout — the bridge between the learner's
+//! device state and the actors' fast path.
+
+use crate::manifest::Artifact;
+use crate::nn::conv::ConvNet;
+use crate::nn::mlp::{Activation, Mlp};
+
+/// Extract agent `agent`'s MLP with the given field prefix
+/// (e.g. "policy"). Layer fields are `{prefix}/w{i}` / `{prefix}/b{i}`
+/// with shapes `[P, in, out]` / `[P, out]`.
+pub fn mlp_from_state(
+    artifact: &Artifact,
+    state: &[f32],
+    prefix: &str,
+    agent: usize,
+    hidden_act: Activation,
+    final_act: Activation,
+) -> anyhow::Result<Mlp> {
+    let mut mlp = Mlp::new(hidden_act, final_act);
+    for li in 0.. {
+        let wname = format!("{prefix}/w{li}");
+        if artifact.field(&wname).is_err() {
+            break;
+        }
+        let wf = artifact.field(&wname)?;
+        anyhow::ensure!(wf.shape.len() == 3, "{wname}: expected [P, in, out]");
+        let (in_dim, out_dim) = (wf.shape[1], wf.shape[2]);
+        let w = artifact.read_agent(state, &wname, agent)?;
+        let b = artifact.read_agent(state, &format!("{prefix}/b{li}"), agent)?;
+        mlp.push_layer(w.to_vec(), b.to_vec(), in_dim, out_dim);
+    }
+    anyhow::ensure!(mlp.num_layers() > 0, "no layers found for prefix {prefix:?}");
+    Ok(mlp)
+}
+
+/// Refresh an existing MLP's weights in place (no allocation).
+pub fn sync_mlp_from_state(
+    artifact: &Artifact,
+    state: &[f32],
+    prefix: &str,
+    agent: usize,
+    mlp: &mut Mlp,
+) -> anyhow::Result<()> {
+    for li in 0..mlp.num_layers() {
+        let w = artifact.read_agent(state, &format!("{prefix}/w{li}"), agent)?;
+        let b = artifact.read_agent(state, &format!("{prefix}/b{li}"), agent)?;
+        mlp.set_layer(li, w, b);
+    }
+    Ok(())
+}
+
+/// Extract agent `agent`'s DQN conv net (fields `{prefix}/conv/*` +
+/// `{prefix}/head/*`), for frame `[h, w, c]`.
+pub fn convnet_from_state(
+    artifact: &Artifact,
+    state: &[f32],
+    prefix: &str,
+    agent: usize,
+    frame: (usize, usize, usize),
+) -> anyhow::Result<ConvNet> {
+    let (h, wd, c) = frame;
+    let wf = artifact.field(&format!("{prefix}/conv/w"))?;
+    anyhow::ensure!(wf.shape.len() == 5, "conv filter must be [P,kh,kw,C,F]");
+    let (kh, kw, in_ch, feats) = (wf.shape[1], wf.shape[2], wf.shape[3], wf.shape[4]);
+    anyhow::ensure!(in_ch == c, "conv in_ch {in_ch} != frame channels {c}");
+    let w = artifact
+        .read_agent(state, &format!("{prefix}/conv/w"), agent)?
+        .to_vec();
+    let b = artifact
+        .read_agent(state, &format!("{prefix}/conv/b"), agent)?
+        .to_vec();
+    let head = mlp_from_state(artifact, state, &format!("{prefix}/head"), agent,
+                              Activation::Relu, Activation::None)?;
+    Ok(ConvNet::new(w, b, kh, kw, in_ch, feats, h, wd, head))
+}
+
+/// The deterministic-policy activation pair per algorithm.
+pub fn policy_activations(algo: &str) -> (Activation, Activation) {
+    match algo {
+        // SAC's gaussian head outputs (mu, log_std) with no final
+        // activation — tanh is applied to mu after slicing.
+        "sac" => (Activation::Relu, Activation::None),
+        _ => (Activation::Relu, Activation::Tanh),
+    }
+}

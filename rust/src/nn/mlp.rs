@@ -1,0 +1,180 @@
+//! MLP forward pass matching `python/compile/networks.py::mlp_apply`.
+//!
+//! Weight convention is identical to the jax side: layer `l` maps
+//! `h @ w[l] + b[l]` with `w[l]: [in, out]` stored row-major, relu between
+//! hidden layers and a configurable final activation.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Tanh,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::None => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+}
+
+/// One population member's MLP (weights borrowed or owned as flat vecs).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Per layer: (w flat [in*out], b [out], in, out)
+    layers: Vec<(Vec<f32>, Vec<f32>, usize, usize)>,
+    pub hidden_act: Activation,
+    pub final_act: Activation,
+    /// Scratch buffers reused across calls (allocation-free hot path).
+    scratch: [Vec<f32>; 2],
+}
+
+impl Mlp {
+    pub fn new(hidden_act: Activation, final_act: Activation) -> Self {
+        Mlp { layers: Vec::new(), hidden_act, final_act, scratch: [Vec::new(), Vec::new()] }
+    }
+
+    /// Append a layer; `w` is `[in, out]` row-major, `b` is `[out]`.
+    pub fn push_layer(&mut self, w: Vec<f32>, b: Vec<f32>, in_dim: usize, out_dim: usize) {
+        assert_eq!(w.len(), in_dim * out_dim, "weight size mismatch");
+        assert_eq!(b.len(), out_dim, "bias size mismatch");
+        self.layers.push((w, b, in_dim, out_dim));
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map(|l| l.2).unwrap_or(0)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.3).unwrap_or(0)
+    }
+
+    /// Replace layer weights in place (parameter sync without realloc).
+    pub fn set_layer(&mut self, li: usize, w: &[f32], b: &[f32]) {
+        let (lw, lb, i, o) = &mut self.layers[li];
+        assert_eq!(w.len(), *i * *o);
+        assert_eq!(b.len(), *o);
+        lw.copy_from_slice(w);
+        lb.copy_from_slice(b);
+    }
+
+    /// Forward one observation. Writes into `out` (len = out_dim).
+    pub fn forward(&mut self, obs: &[f32], out: &mut [f32]) {
+        assert_eq!(obs.len(), self.in_dim(), "obs dim mismatch");
+        assert_eq!(out.len(), self.out_dim(), "out dim mismatch");
+        let n_layers = self.layers.len();
+        // Double-buffer through scratch to stay allocation-free: take the
+        // buffers out of `self` for the duration of the pass.
+        let mut src = std::mem::take(&mut self.scratch[0]);
+        let mut dst = std::mem::take(&mut self.scratch[1]);
+        src.clear();
+        src.extend_from_slice(obs);
+        for (li, (w, b, in_dim, out_dim)) in self.layers.iter().enumerate() {
+            let act = if li + 1 == n_layers { self.final_act } else { self.hidden_act };
+            dst.resize(*out_dim, 0.0);
+            matvec(w, b, &src, &mut dst, *in_dim, *out_dim, act);
+            std::mem::swap(&mut src, &mut dst);
+        }
+        out.copy_from_slice(&src[..out.len()]);
+        self.scratch[0] = src;
+        self.scratch[1] = dst;
+    }
+
+    /// Forward returning a fresh Vec (convenience for tests).
+    pub fn forward_vec(&mut self, obs: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.out_dim()];
+        self.forward(obs, &mut out);
+        out
+    }
+}
+
+/// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out].
+/// Iterating rows of `w` keeps the access pattern sequential (cache-
+/// friendly for the [in, out] layout jax uses).
+#[inline]
+fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+          out_dim: usize, act: Activation) {
+    dst.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate().take(in_dim) {
+        if xi == 0.0 {
+            continue; // relu sparsity: skip dead rows
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (d, &wv) in dst.iter_mut().zip(row) {
+            *d += xi * wv;
+        }
+    }
+    for d in dst.iter_mut() {
+        *d = act.apply(*d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Mlp {
+        // 2 -> 3 -> 1, hand-computable weights
+        let mut m = Mlp::new(Activation::Relu, Activation::Tanh);
+        m.push_layer(
+            vec![1.0, 0.0, -1.0, /* row x0 */ 0.0, 2.0, 1.0 /* row x1 */],
+            vec![0.0, -1.0, 0.5],
+            2,
+            3,
+        );
+        m.push_layer(vec![1.0, 1.0, 1.0], vec![0.1], 3, 1);
+        m
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        let mut m = tiny();
+        // x = [1, 2]: z1 = [1*1+2*0, 1*0+2*2-1, 1*-1+2*1+0.5] = [1, 3, 1.5]
+        // relu -> same; z2 = 1+3+1.5+0.1 = 5.6; tanh(5.6)
+        let y = m.forward_vec(&[1.0, 2.0]);
+        assert!((y[0] - 5.6f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_clips_negatives() {
+        let mut m = tiny();
+        // x = [-1, 0]: z1 = [-1, 1, 1.5] -> relu [0, 1, 1.5]
+        // wait: z1 = [-1*1, -1*0-1, -1*-1+0.5] = [-1, -1, 1.5] -> [0,0,1.5]
+        // z2 = 1.5 + 0.1 = 1.6
+        let y = m.forward_vec(&[-1.0, 0.0]);
+        assert!((y[0] - 1.6f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set_layer_updates_output() {
+        let mut m = tiny();
+        let before = m.forward_vec(&[1.0, 2.0])[0];
+        m.set_layer(1, &[0.0, 0.0, 0.0], &[0.0]);
+        let after = m.forward_vec(&[1.0, 2.0])[0];
+        assert_ne!(before, after);
+        assert_eq!(after, 0.0);
+    }
+
+    #[test]
+    fn repeated_forward_is_stable() {
+        let mut m = tiny();
+        let a = m.forward_vec(&[0.3, -0.7]);
+        let b = m.forward_vec(&[0.3, -0.7]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "obs dim mismatch")]
+    fn wrong_obs_dim_panics() {
+        let mut m = tiny();
+        m.forward_vec(&[1.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Native inference for the actor fast path.
+//!
+//! Actors step environments thousands of times per parameter sync; going
+//! through PJRT for every single-observation forward pass would waste the
+//! dispatch overhead the paper's design works to amortize. Instead the
+//! coordinator extracts policy weights from the flat train state (via the
+//! manifest) and runs a native Rust forward pass whose numerics are tested
+//! against the AOT-lowered `*fwd` artifacts (see `rust/tests/`).
+
+pub mod conv;
+pub mod from_state;
+pub mod mlp;
+
+pub use conv::ConvNet;
+pub use mlp::{Activation, Mlp};

@@ -1,0 +1,179 @@
+//! FIFO replay buffer (structure-of-arrays ring).
+//!
+//! One buffer per agent when data must not mix (PBT), or a single shared
+//! one (CEM-RL, DvD), mirroring Appendix A of the paper. Sampling writes
+//! directly into caller-provided slices so batch assembly for the whole
+//! population fills the `[P, B, ...]` host staging buffer with no
+//! intermediate allocation.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    capacity: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    len: usize,
+    head: usize,
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    next_obs: Vec<f32>,
+    done: Vec<f32>,
+    /// Total transitions ever inserted (for update/insert ratio control).
+    pub total_inserted: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer {
+            capacity,
+            obs_dim,
+            act_dim,
+            len: 0,
+            head: 0,
+            obs: vec![0.0; capacity * obs_dim],
+            act: vec![0.0; capacity * act_dim],
+            rew: vec![0.0; capacity],
+            next_obs: vec![0.0; capacity * obs_dim],
+            done: vec![0.0; capacity],
+            total_inserted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn push(&mut self, obs: &[f32], act: &[f32], rew: f32, next_obs: &[f32], done: bool) {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        debug_assert_eq!(act.len(), self.act_dim);
+        debug_assert_eq!(next_obs.len(), self.obs_dim);
+        let i = self.head;
+        self.obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(obs);
+        self.act[i * self.act_dim..(i + 1) * self.act_dim].copy_from_slice(act);
+        self.rew[i] = rew;
+        self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(next_obs);
+        self.done[i] = if done { 1.0 } else { 0.0 };
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        self.total_inserted += 1;
+    }
+
+    /// Sample `batch` transitions uniformly with replacement into the
+    /// destination slices (each sized for exactly one agent's batch).
+    pub fn sample_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        obs: &mut [f32],
+        act: &mut [f32],
+        rew: &mut [f32],
+        next_obs: &mut [f32],
+        done: &mut [f32],
+    ) {
+        assert!(self.len > 0, "sampling from empty replay buffer");
+        debug_assert_eq!(obs.len(), batch * self.obs_dim);
+        debug_assert_eq!(act.len(), batch * self.act_dim);
+        debug_assert_eq!(rew.len(), batch);
+        debug_assert_eq!(next_obs.len(), batch * self.obs_dim);
+        debug_assert_eq!(done.len(), batch);
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            obs[b * self.obs_dim..(b + 1) * self.obs_dim]
+                .copy_from_slice(&self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            act[b * self.act_dim..(b + 1) * self.act_dim]
+                .copy_from_slice(&self.act[i * self.act_dim..(i + 1) * self.act_dim]);
+            rew[b] = self.rew[i];
+            next_obs[b * self.obs_dim..(b + 1) * self.obs_dim]
+                .copy_from_slice(&self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            done[b] = self.done[i];
+        }
+    }
+
+    /// Drop all contents (PBT exploit step replaces an agent's data
+    /// lineage by clearing its buffer — hyperparameters changed, so the
+    /// old off-policy data's distribution did too).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(buf: &mut ReplayBuffer, n: usize) {
+        for i in 0..n {
+            let v = i as f32;
+            buf.push(&[v, v], &[v], v, &[v + 1.0, v + 1.0], i % 2 == 0);
+        }
+    }
+
+    #[test]
+    fn fifo_overwrites_oldest() {
+        let mut buf = ReplayBuffer::new(4, 2, 1);
+        push_n(&mut buf, 6);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf.total_inserted, 6);
+        // sample many; every reward must come from the last 4 pushes {2..5}
+        let mut rng = Rng::new(0);
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 2], vec![0.0; 1], vec![0.0; 1], vec![0.0; 2], vec![0.0; 1]);
+        for _ in 0..100 {
+            buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+            assert!((2.0..=5.0).contains(&r[0]), "stale transition {}", r[0]);
+            assert_eq!(no[0], r[0] + 1.0); // rows stay aligned across arrays
+            assert_eq!(o[0], r[0]);
+        }
+    }
+
+    #[test]
+    fn sample_covers_contents() {
+        let mut buf = ReplayBuffer::new(16, 1, 1);
+        for i in 0..16 {
+            buf.push(&[i as f32], &[0.0], i as f32, &[0.0], false);
+        }
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 16];
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 8], vec![0.0; 8], vec![0.0; 8], vec![0.0; 8], vec![0.0; 8]);
+        for _ in 0..50 {
+            buf.sample_into(&mut rng, 8, &mut o, &mut a, &mut r, &mut no, &mut d);
+            for &x in &r {
+                seen[x as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut buf = ReplayBuffer::new(8, 2, 1);
+        push_n(&mut buf, 5);
+        buf.clear();
+        assert!(buf.is_empty());
+        push_n(&mut buf, 1);
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sampling_empty_panics() {
+        let buf = ReplayBuffer::new(4, 1, 1);
+        let mut rng = Rng::new(0);
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1]);
+        buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+    }
+}

@@ -1,0 +1,79 @@
+//! Replay storage + update/insert ratio control (paper Appendix A).
+
+pub mod buffer;
+pub mod pixel;
+pub mod ratio;
+
+pub use buffer::ReplayBuffer;
+pub use pixel::PixelReplayBuffer;
+pub use ratio::RatioGate;
+
+use crate::util::rng::Rng;
+
+/// Batch staging area for a whole population: flat `[P, B, ...]` host
+/// buffers matching the artifact's batch inputs, filled per-agent by
+/// `ReplayBuffer::sample_into`.
+pub struct BatchStage {
+    pub pop: usize,
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+impl BatchStage {
+    pub fn new(pop: usize, batch: usize, obs_dim: usize, act_dim: usize) -> Self {
+        BatchStage {
+            pop,
+            batch,
+            obs_dim,
+            act_dim,
+            obs: vec![0.0; pop * batch * obs_dim],
+            act: vec![0.0; pop * batch * act_dim],
+            rew: vec![0.0; pop * batch],
+            next_obs: vec![0.0; pop * batch * obs_dim],
+            done: vec![0.0; pop * batch],
+        }
+    }
+
+    /// Fill agent `i`'s slice of every array from its replay buffer.
+    pub fn fill_agent(&mut self, i: usize, buf: &ReplayBuffer, rng: &mut Rng) {
+        assert!(i < self.pop);
+        let (b, od, ad) = (self.batch, self.obs_dim, self.act_dim);
+        buf.sample_into(
+            rng,
+            b,
+            &mut self.obs[i * b * od..(i + 1) * b * od],
+            &mut self.act[i * b * ad..(i + 1) * b * ad],
+            &mut self.rew[i * b..(i + 1) * b],
+            &mut self.next_obs[i * b * od..(i + 1) * b * od],
+            &mut self.done[i * b..(i + 1) * b],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_agent_targets_correct_slice() {
+        let mut stage = BatchStage::new(3, 4, 2, 1);
+        let mut buf = ReplayBuffer::new(8, 2, 1);
+        for k in 0..8 {
+            let v = 100.0 + k as f32;
+            buf.push(&[v, v], &[v], v, &[v, v], false);
+        }
+        let mut rng = Rng::new(0);
+        stage.fill_agent(1, &buf, &mut rng);
+        // agent 0 and 2 slices untouched (still zero)
+        assert!(stage.rew[0..4].iter().all(|&v| v == 0.0));
+        assert!(stage.rew[8..12].iter().all(|&v| v == 0.0));
+        assert!(stage.rew[4..8].iter().all(|&v| v >= 100.0));
+        assert!(stage.obs[1 * 4 * 2..2 * 4 * 2].iter().all(|&v| v >= 100.0));
+    }
+}

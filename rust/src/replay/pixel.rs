@@ -1,0 +1,130 @@
+//! Replay buffer for the discrete-action pixel pipeline (DQN).
+//!
+//! Frames are stored as u8 {0,1} planes (MinAtar-style binary frames) and
+//! expanded to f32 at sample time — an 4x memory saving that mirrors the
+//! uint8 frame storage of Atari replay buffers.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PixelReplayBuffer {
+    capacity: usize,
+    frame_len: usize,
+    len: usize,
+    head: usize,
+    obs: Vec<u8>,
+    act: Vec<i32>,
+    rew: Vec<f32>,
+    next_obs: Vec<u8>,
+    done: Vec<f32>,
+    pub total_inserted: u64,
+}
+
+impl PixelReplayBuffer {
+    pub fn new(capacity: usize, frame_len: usize) -> Self {
+        PixelReplayBuffer {
+            capacity,
+            frame_len,
+            len: 0,
+            head: 0,
+            obs: vec![0; capacity * frame_len],
+            act: vec![0; capacity],
+            rew: vec![0.0; capacity],
+            next_obs: vec![0; capacity * frame_len],
+            done: vec![0.0; capacity],
+            total_inserted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, obs: &[f32], act: usize, rew: f32, next_obs: &[f32], done: bool) {
+        debug_assert_eq!(obs.len(), self.frame_len);
+        let i = self.head;
+        for (d, &s) in self.obs[i * self.frame_len..].iter_mut().zip(obs) {
+            *d = (s != 0.0) as u8;
+        }
+        for (d, &s) in self.next_obs[i * self.frame_len..].iter_mut().zip(next_obs) {
+            *d = (s != 0.0) as u8;
+        }
+        self.act[i] = act as i32;
+        self.rew[i] = rew;
+        self.done[i] = if done { 1.0 } else { 0.0 };
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        self.total_inserted += 1;
+    }
+
+    pub fn sample_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        obs: &mut [f32],
+        act: &mut [i32],
+        rew: &mut [f32],
+        next_obs: &mut [f32],
+        done: &mut [f32],
+    ) {
+        assert!(self.len > 0, "sampling from empty replay buffer");
+        let fl = self.frame_len;
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            for (d, &s) in obs[b * fl..(b + 1) * fl].iter_mut()
+                .zip(&self.obs[i * fl..(i + 1) * fl]) {
+                *d = s as f32;
+            }
+            for (d, &s) in next_obs[b * fl..(b + 1) * fl].iter_mut()
+                .zip(&self.next_obs[i * fl..(i + 1) * fl]) {
+                *d = s as f32;
+            }
+            act[b] = self.act[i];
+            rew[b] = self.rew[i];
+            done[b] = self.done[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_binary_frames() {
+        let mut buf = PixelReplayBuffer::new(4, 6);
+        let frame = [1.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        let next = [0.0, 1.0, 0.0, 1.0, 1.0, 0.0];
+        buf.push(&frame, 2, 1.5, &next, true);
+        let mut rng = Rng::new(0);
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 6], vec![0i32; 1], vec![0.0; 1], vec![0.0; 6], vec![0.0; 1]);
+        buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+        assert_eq!(o, frame);
+        assert_eq!(no, next);
+        assert_eq!(a[0], 2);
+        assert_eq!(r[0], 1.5);
+        assert_eq!(d[0], 1.0);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let mut buf = PixelReplayBuffer::new(2, 1);
+        for k in 0..5 {
+            buf.push(&[1.0], k, k as f32, &[0.0], false);
+        }
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.total_inserted, 5);
+        let mut rng = Rng::new(1);
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 1], vec![0i32; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1]);
+        for _ in 0..20 {
+            buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+            assert!(r[0] >= 3.0);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Update-step / environment-step ratio control (paper Appendix A).
+//!
+//! The replay machinery "block[s] sampling calls (if needed) to guarantee
+//! that the update steps per environment step ratio remains close to the
+//! target" and conversely blocks actors when the learner lags. This gate
+//! encodes that bookkeeping; the blocking itself lives in the pipeline
+//! (which owns the condvars).
+
+#[derive(Clone, Debug)]
+pub struct RatioGate {
+    /// Target update steps per environment step (1.0 in SOTA setups).
+    pub target: f64,
+    /// Tolerance band before blocking either side.
+    pub slack: f64,
+    /// Environment interactions that do not count toward the ratio
+    /// (initial random-exploration fill).
+    pub warmup_env_steps: u64,
+    env_steps: u64,
+    update_steps: u64,
+}
+
+impl RatioGate {
+    pub fn new(target: f64, slack: f64, warmup_env_steps: u64) -> Self {
+        assert!(target > 0.0);
+        assert!(slack >= 0.0);
+        RatioGate { target, slack, warmup_env_steps, env_steps: 0, update_steps: 0 }
+    }
+
+    pub fn on_env_steps(&mut self, n: u64) {
+        self.env_steps += n;
+    }
+
+    pub fn on_update_steps(&mut self, n: u64) {
+        self.update_steps += n;
+    }
+
+    pub fn env_steps(&self) -> u64 {
+        self.env_steps
+    }
+
+    pub fn update_steps(&self) -> u64 {
+        self.update_steps
+    }
+
+    fn counted_env_steps(&self) -> u64 {
+        self.env_steps.saturating_sub(self.warmup_env_steps)
+    }
+
+    /// May the learner take `n` more update steps without running ahead of
+    /// the target ratio?
+    pub fn may_update(&self, n: u64) -> bool {
+        let env = self.counted_env_steps();
+        if env == 0 {
+            return false;
+        }
+        (self.update_steps + n) as f64 <= self.target * env as f64 + self.slack
+    }
+
+    /// May actors take more environment steps without leaving the learner
+    /// hopelessly behind? (Bounded lead keeps data near on-policy-ish.)
+    pub fn may_step_env(&self, n: u64) -> bool {
+        let env = self.counted_env_steps() + n;
+        // actors may lead by `slack` updates' worth of steps
+        self.update_steps as f64 + self.slack >= self.target * env as f64 - self.slack.max(1.0)
+            || self.env_steps < self.warmup_env_steps
+            || (env as f64) * self.target <= self.update_steps as f64 + self.slack
+    }
+
+    pub fn ratio(&self) -> f64 {
+        let env = self.counted_env_steps();
+        if env == 0 {
+            0.0
+        } else {
+            self.update_steps as f64 / env as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_blocks_updates() {
+        let mut g = RatioGate::new(1.0, 0.0, 100);
+        g.on_env_steps(50);
+        assert!(!g.may_update(1));
+        g.on_env_steps(60);
+        assert!(g.may_update(10));
+        assert!(!g.may_update(11));
+    }
+
+    #[test]
+    fn ratio_tracks_target() {
+        let mut g = RatioGate::new(1.0, 0.0, 0);
+        g.on_env_steps(1000);
+        g.on_update_steps(1000);
+        assert!((g.ratio() - 1.0).abs() < 1e-12);
+        assert!(!g.may_update(1));
+        g.on_env_steps(50);
+        assert!(g.may_update(50));
+    }
+
+    #[test]
+    fn fractional_target() {
+        let mut g = RatioGate::new(0.25, 0.0, 0);
+        g.on_env_steps(100);
+        assert!(g.may_update(25));
+        assert!(!g.may_update(26));
+    }
+
+    #[test]
+    fn slack_allows_batching() {
+        let mut g = RatioGate::new(1.0, 50.0, 0);
+        g.on_env_steps(100);
+        g.on_update_steps(100);
+        // 50 more updates fit inside the slack band
+        assert!(g.may_update(50));
+        assert!(!g.may_update(51));
+    }
+}

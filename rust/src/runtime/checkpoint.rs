@@ -1,0 +1,185 @@
+//! Train-state checkpointing: persist/restore the flat state vector with
+//! an integrity-checked header so long PBT runs survive restarts.
+//!
+//! Format (little-endian):
+//!   magic  "FPBRL1\0\0"          8 bytes
+//!   name_len u32 | artifact name utf-8
+//!   state_size u64
+//!   updates_done u64
+//!   fnv1a-64 of the payload      8 bytes
+//!   payload: state_size * f32
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::manifest::Artifact;
+use crate::runtime::{Runtime, TrainState};
+
+const MAGIC: &[u8; 8] = b"FPBRL1\0\0";
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub artifact_name: String,
+    pub updates_done: u64,
+    pub state: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn capture(ts: &TrainState) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint {
+            artifact_name: ts.artifact.name.clone(),
+            updates_done: ts.updates_done,
+            state: ts.to_host()?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // write-then-rename so a crash never leaves a torn checkpoint
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            let name = self.artifact_name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(self.state.len() as u64).to_le_bytes())?;
+            w.write_all(&self.updates_done.to_le_bytes())?;
+            let payload: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    self.state.as_ptr() as *const u8,
+                    self.state.len() * 4,
+                )
+            };
+            w.write_all(&fnv1a(payload).to_le_bytes())?;
+            w.write_all(payload)?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a fastpbrl checkpoint");
+        let mut u32b = [0u8; 4];
+        r.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        anyhow::ensure!(name_len < 4096, "corrupt header (name length)");
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u64b)?;
+        let state_size = u64::from_le_bytes(u64b) as usize;
+        r.read_exact(&mut u64b)?;
+        let updates_done = u64::from_le_bytes(u64b);
+        r.read_exact(&mut u64b)?;
+        let expect_hash = u64::from_le_bytes(u64b);
+        let mut payload = vec![0u8; state_size * 4];
+        r.read_exact(&mut payload)?;
+        anyhow::ensure!(
+            fnv1a(&payload) == expect_hash,
+            "checkpoint payload hash mismatch (corrupt or truncated file)"
+        );
+        let mut state = vec![0f32; state_size];
+        for (i, chunk) in payload.chunks_exact(4).enumerate() {
+            state[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(Checkpoint {
+            artifact_name: String::from_utf8(name)?,
+            updates_done,
+            state,
+        })
+    }
+
+    /// Restore into a fresh device-resident train state. Refuses to
+    /// restore across artifacts (layouts would not line up).
+    pub fn restore(&self, rt: &Runtime, artifact: &Artifact)
+                   -> anyhow::Result<TrainState> {
+        anyhow::ensure!(
+            self.artifact_name == artifact.name,
+            "checkpoint is for artifact {:?}, not {:?}",
+            self.artifact_name,
+            artifact.name
+        );
+        anyhow::ensure!(
+            self.state.len() == artifact.state_size,
+            "checkpoint size {} != artifact state size {}",
+            self.state.len(),
+            artifact.state_size
+        );
+        let mut ts = TrainState::from_host(rt, artifact, &self.state)?;
+        ts.updates_done = self.updates_done;
+        Ok(ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fastpbrl_ckpt_{name}"))
+    }
+
+    fn toy() -> Checkpoint {
+        Checkpoint {
+            artifact_name: "td3_pendulum_p1".into(),
+            updates_done: 1234,
+            state: (0..100).map(|i| i as f32 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("roundtrip");
+        let c = toy();
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.artifact_name, c.artifact_name);
+        assert_eq!(back.updates_done, 1234);
+        assert_eq!(back.state, c.state);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let path = tmpfile("corrupt");
+        toy().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF; // flip a payload bit
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let path = tmpfile("trunc");
+        toy().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let path = tmpfile("foreign");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("not a fastpbrl checkpoint"));
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once per variant,
+//! execute with device-resident buffers from the hot path.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: HLO *text* is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns the
+//! 64-bit instruction ids jax >= 0.5 emits that xla_extension 0.5.1 would
+//! otherwise reject).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::manifest::{Artifact, BatchInput, Dtype};
+use crate::util::timer::Stopwatch;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// One compiled update-step (or forward) computation plus its metadata.
+pub struct Executable {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub artifact: Artifact,
+    /// PJRT compile time — the rust analogue of the paper's Table 3
+    /// "initial compilation time".
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&self, artifact: &Artifact) -> anyhow::Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&artifact.name) {
+            return Ok(e.clone());
+        }
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(&artifact.file)
+            .map_err(|e| anyhow::anyhow!("parsing {:?}: {e}", artifact.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", artifact.name))?;
+        let exec = std::sync::Arc::new(Executable {
+            exe,
+            artifact: artifact.clone(),
+            compile_seconds: sw.elapsed_s(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(artifact.name.clone(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host f32 slice as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {dims:?}: {e}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {dims:?}: {e}"))
+    }
+
+    /// Upload a batch input described by the manifest (dtype dispatch).
+    pub fn upload_batch(&self, input: &BatchInput, f32_data: &[f32], i32_data: &[i32])
+                        -> anyhow::Result<xla::PjRtBuffer> {
+        match input.dtype {
+            Dtype::F32 => self.upload_f32(f32_data, &input.shape),
+            Dtype::I32 => self.upload_i32(i32_data, &input.shape),
+            Dtype::U32 => anyhow::bail!("u32 batch inputs are not used"),
+        }
+    }
+}
+
+impl Executable {
+    /// Execute on device buffers; returns the single output buffer.
+    ///
+    /// All our artifacts are lowered with `return_tuple=False` and return
+    /// exactly one array (the new flat state, or the forward output), so
+    /// the result is `outputs[0][0]`.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<xla::PjRtBuffer> {
+        let mut out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.artifact.name))?;
+        anyhow::ensure!(
+            !out.is_empty() && !out[0].is_empty(),
+            "{}: empty execution result",
+            self.artifact.name
+        );
+        Ok(out.remove(0).remove(0))
+    }
+
+    /// Download a device buffer to a host f32 vec.
+    pub fn download_f32(buf: &xla::PjRtBuffer) -> anyhow::Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+    }
+}

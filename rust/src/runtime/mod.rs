@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot
+//! path with device-resident train state.
+
+pub mod checkpoint;
+pub mod client;
+pub mod state;
+
+pub use client::{Executable, Runtime};
+pub use state::TrainState;

@@ -1,0 +1,97 @@
+//! Device-resident train state.
+//!
+//! The flat-state design (DESIGN.md) means the whole population's training
+//! state is ONE f32 buffer. `TrainState` keeps it on device and chains it
+//! through update calls (`execute_b`), so parameters never touch host
+//! memory between update steps — the paper's "multiple update steps
+//! without copying back" optimization. Host copies are made only for
+//! parameter syncs to the actors and PBT/CEM evolution points.
+
+use crate::manifest::Artifact;
+use crate::runtime::client::{Executable, Runtime};
+use crate::util::rng::Rng;
+
+pub struct TrainState {
+    pub artifact: Artifact,
+    /// Device-resident flat state; `None` transiently during swap.
+    buf: Option<xla::PjRtBuffer>,
+    /// Updates applied since creation.
+    pub updates_done: u64,
+}
+
+impl TrainState {
+    /// Initialize on host per the manifest init specs, then upload.
+    pub fn init(rt: &Runtime, artifact: &Artifact, rng: &mut Rng, seed_tag: u64)
+                -> anyhow::Result<TrainState> {
+        let host = artifact.init_state(rng, seed_tag);
+        Self::from_host(rt, artifact, &host)
+    }
+
+    pub fn from_host(rt: &Runtime, artifact: &Artifact, host: &[f32])
+                     -> anyhow::Result<TrainState> {
+        anyhow::ensure!(
+            host.len() == artifact.state_size,
+            "state size mismatch: host {} vs manifest {}",
+            host.len(),
+            artifact.state_size
+        );
+        let buf = rt.upload_f32(host, &[artifact.state_size])?;
+        Ok(TrainState { artifact: artifact.clone(), buf: Some(buf), updates_done: 0 })
+    }
+
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        self.buf.as_ref().expect("train state buffer present")
+    }
+
+    /// Run one update-step execution (which may contain `num_steps`
+    /// chained steps) and adopt the output as the new state.
+    pub fn step(&mut self, exe: &Executable, batches: &[&xla::PjRtBuffer])
+                -> anyhow::Result<()> {
+        let state = self.buf.take().expect("state buffer");
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + batches.len());
+        args.push(&state);
+        args.extend_from_slice(batches);
+        let out = exe.run(&args)?;
+        self.buf = Some(out);
+        self.updates_done += exe.artifact.num_steps as u64;
+        Ok(())
+    }
+
+    /// Download the full state to host (param sync / evolution points).
+    pub fn to_host(&self) -> anyhow::Result<Vec<f32>> {
+        Executable::download_f32(self.buffer())
+    }
+
+    /// Block until the pending update has completed on the device. Tries
+    /// the one-element raw read first; the TFRT CPU client does not
+    /// implement CopyRawToHost, so it falls back to a full literal sync
+    /// (on CPU the "download" is a memcpy, a few percent of a step).
+    pub fn fence(&self) -> anyhow::Result<f32> {
+        let mut one = [0.0f32; 1];
+        match self.buffer().copy_raw_to_host_sync(&mut one, 0) {
+            Ok(()) => Ok(one[0]),
+            Err(_) => {
+                let lit = self
+                    .buffer()
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("fence: {e}"))?;
+                lit.get_first_element::<f32>()
+                    .map_err(|e| anyhow::anyhow!("fence: {e}"))
+            }
+        }
+    }
+
+    /// Replace the device state from a host copy (after PBT/CEM mutation).
+    pub fn load_host(&mut self, rt: &Runtime, host: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(host.len() == self.artifact.state_size, "state size mismatch");
+        self.buf = Some(rt.upload_f32(host, &[self.artifact.state_size])?);
+        Ok(())
+    }
+
+    /// Read one metric field (downloads the whole state; use sparingly —
+    /// metrics are normally read from the periodic host sync).
+    pub fn metric(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let host = self.to_host()?;
+        Ok(self.artifact.read(&host, name)?.to_vec())
+    }
+}

@@ -1,0 +1,197 @@
+//! Tiny CLI argument parser (clap is not in the image).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for s in &self.specs {
+            let kind = if s.is_flag { "" } else { " <value>" };
+            let dflt = s
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| if s.is_flag { String::new() } else { " (required)".into() });
+            out.push_str(&format!("  --{}{kind}\t{}{dflt}\n", s.name, s.help));
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for s in &self.specs {
+            if let Some(d) = s.default {
+                args.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    anyhow::ensure!(inline.is_none(), "--{key} takes no value");
+                    args.flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.insert(key, v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for s in &self.specs {
+            if !s.is_flag && !args.values.contains_key(s.name) {
+                anyhow::bail!("missing required --{}\n{}", s.name, self.usage());
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number, got {:?}", self.get(name)))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list of usizes ("1,2,5,10").
+    pub fn get_usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{name}: bad integer {t:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cli = Cli::new("t", "test").opt("pop", "4", "population").flag("fast", "go fast");
+        let a = cli.parse(&argv(&["--pop", "8", "--fast"])).unwrap();
+        assert_eq!(a.get_usize("pop").unwrap(), 8);
+        assert!(a.has_flag("fast"));
+        let a = cli.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("pop").unwrap(), 4);
+        assert!(!a.has_flag("fast"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let cli = Cli::new("t", "test").opt("env", "pendulum", "env name");
+        let a = cli.parse(&argv(&["--env=hopper", "extra"])).unwrap();
+        assert_eq!(a.get("env"), "hopper");
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn required_and_unknown() {
+        let cli = Cli::new("t", "test").req("out", "output file");
+        assert!(cli.parse(&argv(&[])).is_err());
+        assert!(cli.parse(&argv(&["--nope", "1"])).is_err());
+        assert!(cli.parse(&argv(&["--out", "x"])).is_ok());
+    }
+
+    #[test]
+    fn usize_list() {
+        let cli = Cli::new("t", "test").opt("pops", "1,2,5", "pop sizes");
+        let a = cli.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize_list("pops").unwrap(), vec![1, 2, 5]);
+    }
+}

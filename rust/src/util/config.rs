@@ -1,0 +1,149 @@
+//! Run configuration: a small INI/TOML-flavoured `key = value` format with
+//! `[section]` headers, comments, and typed getters. Used by the launcher
+//! so experiments are reproducible from a checked-in file, with CLI
+//! overrides applied on top (`--set section.key=value`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    /// Flattened `section.key -> value` map (keys in the preamble have no
+    /// section prefix).
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unclosed section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Apply `key=value` override strings (CLI `--set`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> anyhow::Result<()> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o:?}"))?;
+            self.set(k.trim(), v.trim());
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{key} must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("{key} must be a boolean, got {v:?}"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+seed = 7          # comment
+[train]
+pop = 8
+lr = 3e-4
+vectorized = true
+name = "run a"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("seed", 0).unwrap(), 7);
+        assert_eq!(c.get_usize("train.pop", 0).unwrap(), 8);
+        assert!((c.get_f64("train.lr", 0.0).unwrap() - 3e-4).abs() < 1e-12);
+        assert!(c.get_bool("train.vectorized", false).unwrap());
+        assert_eq!(c.get("train.name"), Some("run a"));
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("train.batch", 256).unwrap(), 256);
+        c.apply_overrides(&["train.pop=20".to_string()]).unwrap();
+        assert_eq!(c.get_usize("train.pop", 0).unwrap(), 20);
+        assert!(c.apply_overrides(&["nonsense".to_string()]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("k = x").unwrap().get_usize("k", 0).is_err());
+    }
+}

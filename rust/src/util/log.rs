@@ -1,0 +1,107 @@
+//! Metrics logging: CSV + JSONL writers used by trainers and benches.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvLogger {
+    w: BufWriter<File>,
+    columns: Vec<String>,
+    pub path: PathBuf,
+}
+
+impl CsvLogger {
+    pub fn create(path: impl AsRef<Path>, columns: &[&str]) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        writeln!(w, "{}", columns.join(","))?;
+        Ok(CsvLogger {
+            w,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            path,
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns.len(),
+            "csv row arity {} != header {}",
+            values.len(),
+            self.columns.len()
+        );
+        let line = values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.w, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Append-only JSONL writer (one `Json` per line).
+pub struct JsonlLogger {
+    w: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlLogger {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlLogger { w: BufWriter::new(File::create(&path)?), path })
+    }
+
+    pub fn write(&mut self, v: &Json) -> anyhow::Result<()> {
+        writeln!(self.w, "{v}")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Stderr progress line, throttled by the caller.
+pub fn info(msg: &str) {
+    eprintln!("[fastpbrl] {msg}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_csv");
+        let path = dir.join("x.csv");
+        let mut l = CsvLogger::create(&path, &["a", "b"]).unwrap();
+        l.row(&[1.0, 2.5]).unwrap();
+        l.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        assert!(l.row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn jsonl_roundtrips() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_jsonl");
+        let path = dir.join("x.jsonl");
+        let mut l = JsonlLogger::create(&path).unwrap();
+        l.write(&crate::util::json::obj(vec![("k", crate::util::json::num(3.0))]))
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).unwrap();
+        assert_eq!(parsed.path("k").unwrap().as_f64(), Some(3.0));
+    }
+}

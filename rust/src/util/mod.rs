@@ -1,0 +1,11 @@
+//! Substrate utilities the image's crate set forced us to build from
+//! scratch: RNG, JSON, CLI parsing, config files, stats, timing, logging.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod log;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,152 @@
+//! Terminal plotting: render learning curves from results CSVs as ASCII
+//! charts (`fastpbrl report`). No plotting library in the image — and a
+//! paper-reproduction repo should let you see Fig 5/6-style curves
+//! without leaving the terminal.
+
+/// Render one or more (x, y) series as an ASCII chart.
+pub fn ascii_chart(
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+    x_label: &str,
+    y_label: &str,
+) -> String {
+    let width = width.max(16);
+    let height = height.max(4);
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in s.iter() {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{y_label}\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let yv = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>10.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>12}{:<.0}{}{:>.0}   ({x_label})\n", "", x0,
+                          " ".repeat(width.saturating_sub(12)), x1));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("   ")));
+    out
+}
+
+/// Parse a results CSV (header + float rows) into named columns.
+pub fn parse_csv(text: &str) -> anyhow::Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let mut lines = text.lines();
+    let header: Vec<String> = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty csv"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut cols = vec![Vec::new(); header.len()];
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(
+            cells.len() == header.len(),
+            "csv row {} arity {} != header {}",
+            lineno + 2,
+            cells.len(),
+            header.len()
+        );
+        for (c, cell) in cells.iter().enumerate() {
+            cols[c].push(cell.trim().parse::<f64>().unwrap_or(f64::NAN));
+        }
+    }
+    Ok((header, cols))
+}
+
+/// Extract an (x, y) series by column names.
+pub fn series<'a>(header: &[String], cols: &'a [Vec<f64>], x: &str, y: &str)
+                  -> anyhow::Result<Vec<(f64, f64)>> {
+    let xi = header
+        .iter()
+        .position(|h| h == x)
+        .ok_or_else(|| anyhow::anyhow!("no column {x:?} (have {header:?})"))?;
+    let yi = header
+        .iter()
+        .position(|h| h == y)
+        .ok_or_else(|| anyhow::anyhow!("no column {y:?} (have {header:?})"))?;
+    Ok(cols[xi].iter().copied().zip(cols[yi].iter().copied()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_points_and_legend() {
+        let s = vec![(0.0, 0.0), (5.0, 5.0), (10.0, 10.0)];
+        let out = ascii_chart(&[("diag", &s)], 20, 5, "x", "y");
+        assert!(out.contains('*'));
+        assert!(out.contains("legend: * diag"));
+        // monotone series: first grid row (max y) must contain the mark
+        let first_row = out.lines().nth(1).unwrap();
+        assert!(first_row.contains('*'), "{out}");
+    }
+
+    #[test]
+    fn chart_handles_empty_and_constant() {
+        assert_eq!(ascii_chart(&[("e", &[])], 10, 4, "x", "y"), "(no data)\n");
+        let c = vec![(0.0, 3.0), (1.0, 3.0)];
+        let out = ascii_chart(&[("c", &c)], 10, 4, "x", "y");
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn csv_parse_and_series() {
+        let text = "a,b,c\n1,2,3\n4,5,6\n";
+        let (h, cols) = parse_csv(text).unwrap();
+        assert_eq!(h, vec!["a", "b", "c"]);
+        let s = series(&h, &cols, "a", "c").unwrap();
+        assert_eq!(s, vec![(1.0, 3.0), (4.0, 6.0)]);
+        assert!(series(&h, &cols, "a", "zzz").is_err());
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        assert!(parse_csv("a,b\n1\n").is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! generators — proptest is not in the image; `fastpbrl`'s own RNG drives
+//! hundreds of randomized cases per property).
+
+use fastpbrl::coordinator::cem::Cem;
+use fastpbrl::coordinator::hyperparams::{Dist, HyperSpec};
+use fastpbrl::manifest::{Artifact, Dtype, EnvDesc, Field};
+use fastpbrl::replay::{RatioGate, ReplayBuffer};
+use fastpbrl::util::json::Json;
+use fastpbrl::util::rng::Rng;
+use fastpbrl::util::stats::{argsort_desc, percentile};
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => {
+            // use values that round-trip exactly through the writer
+            let v = (rng.below(2_000_001) as f64 - 1_000_000.0) / 64.0;
+            Json::Num(v)
+        }
+        3 => {
+            let n = rng.below(8);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.below(94) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let n = rng.below(4);
+            Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.below(4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn random_layout(rng: &mut Rng, pop: usize) -> Artifact {
+    let groups = ["policy", "critic", "opt", "hyper"];
+    let n_fields = 2 + rng.below(6);
+    let mut fields = Vec::new();
+    let mut off = 0usize;
+    for i in 0..n_fields {
+        let rank = 1 + rng.below(3);
+        let mut shape = vec![pop];
+        for _ in 1..rank {
+            shape.push(1 + rng.below(5));
+        }
+        let size: usize = shape.iter().product();
+        fields.push(Field {
+            name: format!("f{i}"),
+            offset: off,
+            size,
+            shape,
+            dtype: Dtype::F32,
+            init: "zeros".into(),
+            group: groups[rng.below(groups.len())].into(),
+            per_agent: true,
+        });
+        off += size;
+    }
+    Artifact::new(
+        "prop".into(),
+        std::path::PathBuf::new(),
+        "td3".into(),
+        "pendulum".into(),
+        EnvDesc::default(),
+        pop,
+        1,
+        4,
+        vec![],
+        off,
+        "state".into(),
+        vec![],
+        fields,
+        vec![],
+    )
+}
+
+// ---------------------------------------------------------------------------
+// properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrips() {
+    let mut rng = Rng::new(1);
+    for _ in 0..300 {
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(j, back, "roundtrip failed for {text}");
+    }
+}
+
+#[test]
+fn prop_replay_samples_only_live_window() {
+    let mut rng = Rng::new(2);
+    for case in 0..100 {
+        let cap = 1 + rng.below(32);
+        let mut buf = ReplayBuffer::new(cap, 1, 1);
+        let n = 1 + rng.below(100);
+        for i in 0..n {
+            let v = i as f32;
+            buf.push(&[v], &[v], v, &[v], false);
+        }
+        assert_eq!(buf.len(), n.min(cap));
+        let lo = n.saturating_sub(cap) as f32;
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0], vec![0.0], vec![0.0], vec![0.0], vec![0.0]);
+        for _ in 0..20 {
+            buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+            assert!(r[0] >= lo && r[0] < n as f32, "case {case}: stale sample");
+            // row alignment across SoA arrays
+            assert_eq!(o[0], r[0]);
+            assert_eq!(a[0], r[0]);
+        }
+    }
+}
+
+#[test]
+fn prop_copy_agent_is_row_copy_and_preserves_others() {
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let pop = 2 + rng.below(6);
+        let art = random_layout(&mut rng, pop);
+        let mut state: Vec<f32> = (0..art.state_size).map(|i| i as f32).collect();
+        let before = state.clone();
+        let src = rng.below(pop);
+        let dst = rng.below(pop);
+        let groups: Vec<&str> = vec!["policy", "opt"];
+        art.copy_agent(&mut state, &groups, src, dst);
+        for f in &art.fields {
+            let stride = f.agent_stride();
+            for agent in 0..pop {
+                let row = &state[f.offset + agent * stride..f.offset + (agent + 1) * stride];
+                let expect_src = agent == dst && dst != src
+                    && groups.contains(&f.group.as_str());
+                if expect_src {
+                    let srow =
+                        &before[f.offset + src * stride..f.offset + (src + 1) * stride];
+                    assert_eq!(row, srow, "field {} dst row", f.name);
+                } else {
+                    let orow =
+                        &before[f.offset + agent * stride..f.offset + (agent + 1) * stride];
+                    assert_eq!(row, orow, "field {} agent {agent} must be untouched",
+                               f.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_agent_vector_roundtrip() {
+    let mut rng = Rng::new(4);
+    for _ in 0..100 {
+        let pop = 1 + rng.below(5);
+        let art = random_layout(&mut rng, pop);
+        let mut state: Vec<f32> = (0..art.state_size).map(|_| rng.normal() as f32).collect();
+        let agent = rng.below(pop);
+        let groups: Vec<&str> = vec!["policy", "critic"];
+        let v = art.agent_vector(&state, &groups, agent);
+        // scatter back zeros then restore: exact roundtrip
+        let zeros = vec![0.0f32; v.len()];
+        art.set_agent_vector(&mut state, &groups, agent, &zeros);
+        assert_eq!(art.agent_vector(&state, &groups, agent), zeros);
+        art.set_agent_vector(&mut state, &groups, agent, &v);
+        assert_eq!(art.agent_vector(&state, &groups, agent), v);
+    }
+}
+
+#[test]
+fn prop_ratio_gate_never_exceeds_target() {
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let target = 0.1 + rng.uniform() * 2.0;
+        let mut g = RatioGate::new(target, 0.0, 0);
+        for _ in 0..200 {
+            if rng.below(2) == 0 {
+                g.on_env_steps(1 + rng.below(5) as u64);
+            } else {
+                let n = 1 + rng.below(3) as u64;
+                if g.may_update(n) {
+                    g.on_update_steps(n);
+                }
+            }
+            if g.env_steps() > 0 {
+                assert!(
+                    g.update_steps() as f64 <= target * g.env_steps() as f64 + 1e-9,
+                    "ratio exceeded: {} updates vs {} env steps (target {target})",
+                    g.update_steps(),
+                    g.env_steps()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cem_mu_stays_in_elite_hull() {
+    let mut rng = Rng::new(6);
+    for _ in 0..100 {
+        let dim = 1 + rng.below(8);
+        let mut cem = Cem::new(vec![0.0; dim], 1.0, 0.5);
+        cem.noise = 0.0;
+        let n_elites = 1 + rng.below(6);
+        let elites: Vec<Vec<f32>> = (0..n_elites)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 3.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = elites.iter().map(|e| e.as_slice()).collect();
+        cem.update(&refs);
+        for d in 0..dim {
+            let lo = refs.iter().map(|e| e[d]).fold(f32::INFINITY, f32::min);
+            let hi = refs.iter().map(|e| e[d]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(cem.mu[d] >= lo - 1e-5 && cem.mu[d] <= hi + 1e-5);
+            assert!(cem.var[d] >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_percentile_within_sample_bounds() {
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let n = 1 + rng.below(50);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = rng.uniform() * 100.0;
+        let p = percentile(&v, q);
+        assert!(p >= v[0] - 1e-12 && p <= v[n - 1] + 1e-12);
+    }
+}
+
+#[test]
+fn prop_argsort_desc_is_sorted_permutation() {
+    let mut rng = Rng::new(8);
+    for _ in 0..200 {
+        let n = 1 + rng.below(30);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let idx = argsort_desc(&xs);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        for w in idx.windows(2) {
+            assert!(xs[w[0]] >= xs[w[1]]);
+        }
+    }
+}
+
+#[test]
+fn prop_hyper_samples_in_support() {
+    let mut rng = Rng::new(9);
+    let spec = HyperSpec::td3();
+    for _ in 0..500 {
+        for (_, dist) in &spec.entries {
+            let v = dist.sample(&mut rng);
+            let (lo, hi) = dist.support();
+            assert!(v >= lo && v <= hi);
+            let p = dist.perturb(v, &mut rng);
+            assert!(p >= lo && p <= hi);
+        }
+    }
+}
+
+#[test]
+fn prop_dist_perturb_is_bounded_multiplicative() {
+    let mut rng = Rng::new(10);
+    let d = Dist::LogUniform(1e-6, 1e6);
+    for _ in 0..300 {
+        let v = rng.log_uniform_in(1e-3, 1e3);
+        let p = d.perturb(v, &mut rng);
+        let ratio = p / v;
+        assert!((ratio - 0.8).abs() < 1e-9 || (ratio - 1.25).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_mlp_linear_layer_is_matvec() {
+    let mut rng = Rng::new(11);
+    for _ in 0..100 {
+        let i = 1 + rng.below(10);
+        let o = 1 + rng.below(10);
+        let mut w = vec![0.0f32; i * o];
+        let mut b = vec![0.0f32; o];
+        rng.fill_normal(&mut w, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let mut x = vec![0.0f32; i];
+        rng.fill_normal(&mut x, 1.0);
+        let mut mlp = fastpbrl::nn::Mlp::new(
+            fastpbrl::nn::Activation::None,
+            fastpbrl::nn::Activation::None,
+        );
+        mlp.push_layer(w.clone(), b.clone(), i, o);
+        let y = mlp.forward_vec(&x);
+        for oo in 0..o {
+            let mut expect = b[oo];
+            for ii in 0..i {
+                expect += x[ii] * w[ii * o + oo];
+            }
+            assert!((y[oo] - expect).abs() < 1e-4, "{} vs {}", y[oo], expect);
+        }
+    }
+}
+
+#[test]
+fn prop_config_roundtrip_values() {
+    let mut rng = Rng::new(12);
+    for _ in 0..100 {
+        let a = rng.below(1000);
+        let b = rng.uniform() * 10.0;
+        let text = format!("[s]\nx = {a}\ny = {b}\nz = true\n");
+        let c = fastpbrl::util::config::Config::parse(&text).unwrap();
+        assert_eq!(c.get_usize("s.x", 0).unwrap(), a);
+        assert!((c.get_f64("s.y", 0.0).unwrap() - b).abs() < 1e-9);
+        assert!(c.get_bool("s.z", false).unwrap());
+    }
+}
