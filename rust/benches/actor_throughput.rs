@@ -1,0 +1,252 @@
+//! Actor-path throughput: scalar per-agent inference + per-transition
+//! Vec-cloning transport (the pre-vectorization pipeline) vs the
+//! population-batched PopMlp + VecEnv + TransitionBlock path, at
+//! pop ∈ {1, 4, 16, 64}.
+//!
+//! Both paths run the same deterministic tanh policy (paper-sized
+//! 256x256 hidden MLP) on the same env and end in the same shared replay
+//! buffer, so the measured difference is exactly the actor hot path:
+//! per-agent dispatch + two heap clones per step vs one blocked forward,
+//! one batched env step, and one `push_batch` per iteration.
+//!
+//! Also A/Bs the `matvec` kernel strategies (relu-sparsity skip vs
+//! branch-free dense) on dense and post-relu inputs — the adaptive
+//! kernel's two regimes.
+//!
+//! No artifacts required. Results go to `results/actor_throughput.csv`
+//! and `BENCH_actor_throughput.json`.
+
+use std::collections::VecDeque;
+
+use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
+use fastpbrl::data::pipeline::TransitionBlock;
+use fastpbrl::envs::{make_env, VecEnv};
+use fastpbrl::nn::mlp::{matvec_dense, matvec_sparse};
+use fastpbrl::nn::{Activation, Mlp, PopMlp};
+use fastpbrl::replay::ReplayBuffer;
+use fastpbrl::util::json::{arr, num, obj, s, Json};
+use fastpbrl::util::rng::Rng;
+
+const ENV: &str = "halfcheetah";
+const HIDDEN: [usize; 2] = [256, 256];
+const STEPS_PER_ITER: usize = 128;
+const REPLAY_CAP: usize = 1 << 15;
+const POPS: [usize; 4] = [1, 4, 16, 64];
+
+/// The old transport unit: two obs clones + an act clone per step.
+struct OldTransition {
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: f32,
+    next_obs: Vec<f32>,
+    done: bool,
+}
+
+/// Random per-member layer stacks [(w, b); L] for dims.windows(2).
+fn random_members(rng: &mut Rng, pop: usize, dims: &[usize]) -> Vec<Vec<(Vec<f32>, Vec<f32>)>> {
+    (0..pop)
+        .map(|_| {
+            dims.windows(2)
+                .map(|d| {
+                    let bound = (3.0 / d[0] as f32).sqrt();
+                    let mut w = vec![0.0f32; d[0] * d[1]];
+                    let mut b = vec![0.0f32; d[1]];
+                    rng.fill_uniform(&mut w, -bound, bound);
+                    rng.fill_uniform(&mut b, -0.05, 0.05);
+                    (w, b)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn steps_per_sec(pop: usize, mean_ms: f64) -> f64 {
+    (STEPS_PER_ITER * pop) as f64 / (mean_ms / 1e3)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 15, max_seconds: 20.0 }
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut pop_rows: Vec<Json> = Vec::new();
+
+    for &pop in &POPS {
+        let mut rng = Rng::new(100 + pop as u64);
+        let probe = make_env(ENV)?;
+        let (od, ad) = (probe.obs_dim(), probe.act_dim());
+        drop(probe);
+        let dims = [od, HIDDEN[0], HIDDEN[1], ad];
+        let members = random_members(&mut rng, pop, &dims);
+
+        // ---- scalar path: per-agent Mlp + per-transition clones ----------
+        let mut mlps: Vec<Mlp> = members
+            .iter()
+            .map(|layers| {
+                let mut m = Mlp::new(Activation::Relu, Activation::Tanh);
+                for (li, d) in dims.windows(2).enumerate() {
+                    m.push_layer(layers[li].0.clone(), layers[li].1.clone(), d[0], d[1]);
+                }
+                m
+            })
+            .collect();
+        let mut envs: Vec<_> = (0..pop).map(|_| make_env(ENV).unwrap()).collect();
+        let mut obs_rows: Vec<Vec<f32>> = envs
+            .iter_mut()
+            .map(|e| {
+                let mut o = vec![0.0f32; od];
+                e.reset(&mut rng, &mut o);
+                o
+            })
+            .collect();
+        let mut ep_steps = vec![0usize; pop];
+        let mut act = vec![0.0f32; ad];
+        let mut next = vec![0.0f32; od];
+        let mut queue: VecDeque<OldTransition> = VecDeque::new();
+        let mut replay = ReplayBuffer::new(REPLAY_CAP, od, ad);
+        let r_scalar = bench.run(&format!("actor_scalar_p{pop}"), || {
+            for _ in 0..STEPS_PER_ITER {
+                for k in 0..pop {
+                    mlps[k].forward(&obs_rows[k], &mut act);
+                    let (rew, done) = envs[k].step(&act, &mut next);
+                    ep_steps[k] += 1;
+                    let horizon_hit = ep_steps[k] >= envs[k].horizon();
+                    // the old transport: heap clones into a per-step message
+                    queue.push_back(OldTransition {
+                        obs: obs_rows[k].clone(),
+                        act: act.clone(),
+                        rew,
+                        next_obs: next.clone(),
+                        done,
+                    });
+                    obs_rows[k].copy_from_slice(&next);
+                    if done || horizon_hit {
+                        ep_steps[k] = 0;
+                        envs[k].reset(&mut rng, &mut obs_rows[k]);
+                    }
+                }
+                while let Some(t) = queue.pop_front() {
+                    replay.push(&t.obs, &t.act, t.rew, &t.next_obs, t.done);
+                }
+            }
+        });
+        results.push(r_scalar.clone());
+
+        // ---- batched path: PopMlp + VecEnv + TransitionBlock -------------
+        let mut pop_net = PopMlp::new(pop, Activation::Relu, Activation::Tanh);
+        for (li, d) in dims.windows(2).enumerate() {
+            let mut w = Vec::with_capacity(pop * d[0] * d[1]);
+            let mut b = Vec::with_capacity(pop * d[1]);
+            for m in &members {
+                w.extend_from_slice(&m[li].0);
+                b.extend_from_slice(&m[li].1);
+            }
+            pop_net.push_layer(w, b, d[0], d[1]);
+        }
+        let ids: Vec<usize> = (0..pop).collect();
+        let mut venv = VecEnv::new(ENV, pop)?;
+        venv.reset_all(&mut rng);
+        let mut block = TransitionBlock::new(0, &ids, od, ad);
+        let mut acts = vec![0.0f32; pop * ad];
+        let mut eps = Vec::new();
+        let mut replay_b = ReplayBuffer::new(REPLAY_CAP, od, ad);
+        let r_batched = bench.run(&format!("actor_batched_p{pop}"), || {
+            for _ in 0..STEPS_PER_ITER {
+                pop_net.forward_block(&ids, venv.obs(), &mut acts);
+                block.obs.copy_from_slice(venv.obs());
+                block.act.copy_from_slice(&acts);
+                eps.clear();
+                venv.step_into(&mut rng, &acts, &mut block.next_obs, &mut block.rew,
+                               &mut block.done, &mut eps);
+                block.n = pop;
+                replay_b.push_batch(pop, &block.obs, &block.act, &block.rew, &block.next_obs,
+                                    &block.done);
+                block.reset();
+            }
+        });
+        results.push(r_batched.clone());
+
+        let s_sps = steps_per_sec(pop, r_scalar.mean_ms);
+        let b_sps = steps_per_sec(pop, r_batched.mean_ms);
+        pop_rows.push(obj(vec![
+            ("pop", num(pop as f64)),
+            ("scalar_steps_per_sec", num(s_sps)),
+            ("batched_steps_per_sec", num(b_sps)),
+            ("speedup", num(b_sps / s_sps)),
+        ]));
+    }
+
+    // ---- matvec kernel A/B: sparsity skip vs branch-free dense -----------
+    let mut rng = Rng::new(7);
+    let (ki, ko) = (HIDDEN[0], HIDDEN[1]);
+    let mut w = vec![0.0f32; ki * ko];
+    let mut b = vec![0.0f32; ko];
+    rng.fill_uniform(&mut w, -0.1, 0.1);
+    rng.fill_uniform(&mut b, -0.1, 0.1);
+    // dense input: normalized observations never land on exactly 0.0
+    let mut x_dense = vec![0.0f32; ki];
+    rng.fill_uniform(&mut x_dense, 0.001, 1.0);
+    // post-relu input: roughly half the lanes dead
+    let mut x_relu = vec![0.0f32; ki];
+    rng.fill_normal(&mut x_relu, 1.0);
+    for v in x_relu.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let mut dst = vec![0.0f32; ko];
+    let mut sink = 0.0f64;
+    let mut kernel_rows: Vec<(String, f64)> = Vec::new();
+    for (input_name, x) in [("dense_input", &x_dense), ("relu_input", &x_relu)] {
+        for kernel in ["sparse_skip", "dense"] {
+            let name = format!("matvec_{kernel}_{input_name}");
+            let r = bench.run(&name, || {
+                for _ in 0..1000 {
+                    match kernel {
+                        "sparse_skip" => {
+                            matvec_sparse(&w, &b, x, &mut dst, ki, ko, Activation::Relu)
+                        }
+                        _ => matvec_dense(&w, &b, x, &mut dst, ki, ko, Activation::Relu),
+                    }
+                    sink += dst[0] as f64;
+                }
+            });
+            kernel_rows.push((name.clone(), r.mean_ms));
+            results.push(r);
+        }
+    }
+
+    report("actor_throughput", &results)?;
+
+    println!("\nActor steps/sec (batched vs scalar):");
+    println!("{:>5} {:>14} {:>14} {:>9}", "pop", "scalar", "batched", "speedup");
+    for row in &pop_rows {
+        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        println!(
+            "{:>5} {:>14.0} {:>14.0} {:>8.2}x",
+            g("pop"),
+            g("scalar_steps_per_sec"),
+            g("batched_steps_per_sec"),
+            g("speedup")
+        );
+    }
+    println!("(matvec checksum {sink:.3})");
+
+    let json = obj(vec![
+        ("bench", s("actor_throughput")),
+        ("env", s(ENV)),
+        ("hidden", arr(HIDDEN.iter().map(|&h| num(h as f64)).collect())),
+        ("steps_per_iter", num(STEPS_PER_ITER as f64)),
+        ("results", arr(pop_rows)),
+        (
+            "matvec_kernel_ms",
+            obj(kernel_rows
+                .iter()
+                .map(|(n, ms)| (n.as_str(), num(*ms)))
+                .collect()),
+        ),
+    ]);
+    std::fs::write("BENCH_actor_throughput.json", format!("{json}\n"))?;
+    println!("-> BENCH_actor_throughput.json");
+    Ok(())
+}

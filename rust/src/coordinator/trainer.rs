@@ -40,6 +40,11 @@ pub struct TrainerConfig {
     /// One shared replay buffer (CEM-RL/DvD) instead of one per agent.
     pub shared_replay: bool,
     pub n_actor_threads: usize,
+    /// Max transitions drained from the actor queue per learner loop
+    /// iteration (bounds drain latency in front of the update step).
+    pub drain_bound: u64,
+    /// Actor backoff sleep while ratio-throttled, in microseconds.
+    pub actor_sleep_us: u64,
     pub seed: u64,
     /// CSV output path ("" = no logging).
     pub csv_path: String,
@@ -67,6 +72,8 @@ impl Default for TrainerConfig {
             ratio_slack: 64.0,
             shared_replay: false,
             n_actor_threads: 1,
+            drain_bound: 16 * 1024,
+            actor_sleep_us: 200,
             seed: 0,
             csv_path: String::new(),
             max_seconds: 0.0,
@@ -204,6 +211,30 @@ impl Trainer {
         }
     }
 
+    /// Insert a transition block into replay: rows are grouped into runs
+    /// that target the same buffer (one run per agent, or the whole block
+    /// when replay is shared) and each run lands as one `push_batch`.
+    fn push_block(&mut self, block: &crate::data::pipeline::TransitionBlock) {
+        let (od, ad) = (block.obs_dim, block.act_dim);
+        let mut start = 0;
+        while start < block.n {
+            let b = self.buffer_for(block.agents[start]);
+            let mut end = start + 1;
+            while end < block.n && self.buffer_for(block.agents[end]) == b {
+                end += 1;
+            }
+            self.replays[b].push_batch(
+                end - start,
+                &block.obs[start * od..end * od],
+                &block.act[start * ad..end * ad],
+                &block.rew[start..end],
+                &block.next_obs[start * od..end * od],
+                &block.done[start..end],
+            );
+            start = end;
+        }
+    }
+
     /// Fill all staging buffers from replay: for every chained step (the
     /// leading `k` axis when num_steps > 1) and every agent, draw a batch.
     fn fill_batches(&mut self) {
@@ -279,10 +310,13 @@ impl Trainer {
                 policy: PolicyKind::for_algo(&self.cfg.algo),
                 warmup_steps: self.cfg.warmup_steps,
                 expl_noise: 0.1,
-                queue_cap: 8192,
+                // in blocks now: one message carries one transition per
+                // agent of the sending thread
+                queue_cap: 1024,
                 seed: self.cfg.seed ^ 0xAC70,
                 ratio: self.cfg.ratio / art.pop.max(1) as f64,
                 lead_steps: 4 * art.batch as u64 * art.pop as u64,
+                throttle_sleep_us: self.cfg.actor_sleep_us,
             },
             self.cfg.n_actor_threads,
             throttle.clone(),
@@ -304,19 +338,18 @@ impl Trainer {
                 let mut drained = 0u64;
                 while let Ok(msg) = pool.rx.try_recv() {
                     match msg {
-                        ActorMsg::Step(tr) => {
-                            let b = self.buffer_for(tr.agent);
-                            self.replays[b].push(&tr.obs, &tr.act, tr.rew, &tr.next_obs,
-                                                 tr.done);
-                            self.gate.on_env_steps(1);
-                            drained += 1;
-                        }
-                        ActorMsg::Episode { agent, ret, .. } => {
-                            self.population.returns[agent].push(ret);
-                            episodes += 1;
+                        ActorMsg::Batch(block) => {
+                            self.push_block(&block);
+                            self.gate.on_env_steps(block.n as u64);
+                            drained += block.n as u64;
+                            for ep in &block.episodes {
+                                self.population.returns[ep.agent].push(ep.ret);
+                                episodes += 1;
+                            }
+                            pool.recycle(block);
                         }
                     }
-                    if drained > 16 * 1024 {
+                    if drained >= self.cfg.drain_bound {
                         break; // bounded drain per iteration
                     }
                 }

@@ -1,10 +1,18 @@
-//! Actor/learner data pipeline (paper Appendix A).
+//! Actor/learner data pipeline (paper Appendix A), vectorized over the
+//! population axis.
 //!
-//! Actor threads own their environment copies and native policy networks;
-//! they publish transitions through a bounded channel (the paper's queue
-//! with a maximum size — actors block when the learner lags) and refresh
-//! their weights from the shared [`ParamView`] whenever the learner
-//! publishes a new version (non-blocking for the learner).
+//! Actor threads own their environment copies and a packed
+//! [`PopMlp`](crate::nn::PopMlp) policy; each iteration they forward ALL
+//! owned agents' observations as one `[n, obs_dim]` block, step a
+//! [`VecEnv`] against one `[n, act_dim]` action matrix, and publish the
+//! resulting transitions as ONE contiguous [`TransitionBlock`] message —
+//! no per-transition `Vec` clones. Blocks flow through a bounded channel
+//! (the paper's queue with a maximum size — actors block when the learner
+//! lags) and are recycled back to their actor thread after the learner
+//! drains them, so the steady-state loop is allocation-free. Actors
+//! refresh their weights from the shared [`ParamView`] whenever the
+//! learner publishes a new version (non-blocking for the learner) — one
+//! contiguous copy per layer field for the whole population.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
@@ -12,26 +20,94 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::population::ParamView;
-use crate::envs::make_env;
+use crate::envs::vec_env::{EpisodeEnd, VecEnv};
 use crate::manifest::Artifact;
-use crate::nn::from_state::{mlp_from_state, sync_mlp_from_state};
+use crate::nn::from_state::pop_mlp_from_state;
 use crate::nn::mlp::Activation;
 use crate::util::rng::Rng;
 
-/// One environment transition from agent `agent`.
-pub struct Transition {
+/// One finished episode with this undiscounted return, tagged by agent.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpisodeReport {
     pub agent: usize,
+    pub ret: f64,
+    pub steps: usize,
+}
+
+/// One actor iteration's transitions for all of the thread's agents, in
+/// flat structure-of-arrays form: row `k` is agent `agents[k]`'s
+/// transition, fields are contiguous `[n, ...]` blocks that the learner
+/// feeds straight into [`ReplayBuffer::push_batch`]
+/// (`crate::replay::ReplayBuffer::push_batch`) — no per-transition heap
+/// traffic. Finished episodes ride along in `episodes`.
+pub struct TransitionBlock {
+    /// Spawning actor-thread index (the recycling route).
+    thread: usize,
+    /// Valid rows (row capacity is fixed at construction).
+    pub n: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// Agent id per row `[rows]`; sorted runs of equal ids.
+    pub agents: Vec<usize>,
+    /// `[rows, obs_dim]`
     pub obs: Vec<f32>,
+    /// `[rows, act_dim]`
     pub act: Vec<f32>,
-    pub rew: f32,
+    /// `[rows]`
+    pub rew: Vec<f32>,
+    /// `[rows, obs_dim]`
     pub next_obs: Vec<f32>,
-    pub done: bool,
+    /// `[rows]`, 0.0/1.0 (horizon cap excluded)
+    pub done: Vec<f32>,
+    /// Episodes that finished during this iteration.
+    pub episodes: Vec<EpisodeReport>,
+}
+
+impl TransitionBlock {
+    /// Preallocate a block with one row per entry of `agents`.
+    pub fn new(thread: usize, agents: &[usize], obs_dim: usize, act_dim: usize) -> Self {
+        let rows = agents.len();
+        TransitionBlock {
+            thread,
+            n: 0,
+            obs_dim,
+            act_dim,
+            agents: agents.to_vec(),
+            obs: vec![0.0; rows * obs_dim],
+            act: vec![0.0; rows * act_dim],
+            rew: vec![0.0; rows],
+            next_obs: vec![0.0; rows * obs_dim],
+            done: vec![0.0; rows],
+            episodes: Vec::new(),
+        }
+    }
+
+    pub fn thread(&self) -> usize {
+        self.thread
+    }
+
+    /// Clear for reuse (capacity and agent ids are kept).
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.episodes.clear();
+    }
+
+    pub fn obs_row(&self, k: usize) -> &[f32] {
+        &self.obs[k * self.obs_dim..(k + 1) * self.obs_dim]
+    }
+
+    pub fn act_row(&self, k: usize) -> &[f32] {
+        &self.act[k * self.act_dim..(k + 1) * self.act_dim]
+    }
+
+    pub fn next_obs_row(&self, k: usize) -> &[f32] {
+        &self.next_obs[k * self.obs_dim..(k + 1) * self.obs_dim]
+    }
 }
 
 pub enum ActorMsg {
-    Step(Transition),
-    /// An episode finished with this undiscounted return.
-    Episode { agent: usize, ret: f64, steps: usize },
+    /// One actor iteration's transitions as a contiguous block.
+    Batch(TransitionBlock),
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +128,7 @@ impl PolicyKind {
     }
 }
 
+#[derive(Clone, Debug)]
 pub struct ActorConfig {
     pub env: String,
     pub policy: PolicyKind,
@@ -60,13 +137,16 @@ pub struct ActorConfig {
     /// TD3 exploration noise std (read from state field "expl_noise" when
     /// present, this is the fallback).
     pub expl_noise: f32,
-    /// Bounded queue size (backpressure).
+    /// Bounded queue size in BLOCKS (backpressure); one block carries one
+    /// transition per agent of the sending thread.
     pub queue_cap: usize,
     pub seed: u64,
     /// Update:env-step ratio target for actor throttling (0 = unthrottled).
     pub ratio: f64,
     /// Extra env steps actors may run ahead of `updates / ratio`.
     pub lead_steps: u64,
+    /// Backoff sleep while ratio-throttled, in microseconds.
+    pub throttle_sleep_us: u64,
 }
 
 impl Default for ActorConfig {
@@ -76,10 +156,14 @@ impl Default for ActorConfig {
             policy: PolicyKind::Td3,
             warmup_steps: 500,
             expl_noise: 0.1,
-            queue_cap: 4096,
+            // one block ≈ one transition per owned agent, so a few hundred
+            // in flight already decouples actors from the learner's drain
+            // cadence without hoarding pop x cap transitions
+            queue_cap: 256,
             seed: 0,
             ratio: 1.0,
             lead_steps: 2048,
+            throttle_sleep_us: 200,
         }
     }
 }
@@ -100,7 +184,7 @@ impl Throttle {
     }
 
     /// May actors take another environment step?
-    fn may_step(&self, cfg: &ActorConfig, pop: u64) -> bool {
+    pub fn may_step(&self, cfg: &ActorConfig, pop: u64) -> bool {
         if cfg.ratio <= 0.0 {
             return true;
         }
@@ -113,6 +197,8 @@ impl Throttle {
 
 pub struct ActorPool {
     pub rx: Receiver<ActorMsg>,
+    /// Per-thread return lanes for spent blocks (index = thread).
+    recycle: Vec<SyncSender<TransitionBlock>>,
     stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -131,19 +217,32 @@ impl ActorPool {
         let (tx, rx) = std::sync::mpsc::sync_channel(cfg.queue_cap);
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
+        let mut recycle = Vec::new();
         for t in 0..n_threads {
             let agents: Vec<usize> = (0..pop).filter(|a| a % n_threads == t).collect();
+            let (rtx, rrx) = std::sync::mpsc::sync_channel(cfg.queue_cap.max(4));
+            recycle.push(rtx);
             let tx = tx.clone();
             let stop2 = stop.clone();
             let view2 = view.clone();
             let art = artifact.clone();
             let th = throttle.clone();
-            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..clone_cfg(&cfg) };
+            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
             handles.push(std::thread::spawn(move || {
-                actor_loop(&art, view2, &cfg2, &agents, tx, stop2, th);
+                actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop2, th);
             }));
         }
-        Ok(ActorPool { rx, stop, handles })
+        Ok(ActorPool { rx, recycle, stop, handles })
+    }
+
+    /// Hand a drained block back to its actor thread for reuse (the
+    /// allocation-free steady state). Dropped silently if the thread is
+    /// gone or its return lane is full — the actor then allocates afresh.
+    pub fn recycle(&self, mut block: TransitionBlock) {
+        block.reset();
+        if let Some(lane) = self.recycle.get(block.thread) {
+            let _ = lane.try_send(block);
+        }
     }
 
     pub fn stop(self) {
@@ -156,114 +255,105 @@ impl ActorPool {
     }
 }
 
-fn clone_cfg(c: &ActorConfig) -> ActorConfig {
-    ActorConfig {
-        env: c.env.clone(),
-        policy: c.policy,
-        warmup_steps: c.warmup_steps,
-        expl_noise: c.expl_noise,
-        queue_cap: c.queue_cap,
-        seed: c.seed,
-        ratio: c.ratio,
-        lead_steps: c.lead_steps,
-    }
-}
-
+#[allow(clippy::too_many_arguments)]
 fn actor_loop(
     artifact: &Artifact,
     view: ParamView,
     cfg: &ActorConfig,
+    thread: usize,
     agents: &[usize],
     tx: SyncSender<ActorMsg>,
+    recycle: Receiver<TransitionBlock>,
     stop: Arc<AtomicBool>,
     throttle: Throttle,
 ) {
     let mut rng = Rng::new(cfg.seed);
-    let mut envs: Vec<_> = agents.iter().map(|_| make_env(&cfg.env).unwrap()).collect();
+    let n = agents.len();
+    let mut venv = VecEnv::new(&cfg.env, n).unwrap();
     let (ha, fa) = match cfg.policy {
         PolicyKind::Td3 => (Activation::Relu, Activation::Tanh),
         PolicyKind::Sac => (Activation::Relu, Activation::None),
     };
     let mut host = Vec::new();
     let mut version = view.fetch_if_newer(0, &mut host);
-    let mut mlps: Vec<_> = agents
+    let mut policy = pop_mlp_from_state(artifact, &host, "policy", ha, fa).unwrap();
+
+    let obs_dim = venv.obs_dim();
+    let act_dim = venv.act_dim();
+    let out_dim = policy.out_dim();
+    let mut raw = vec![0.0f32; n * out_dim];
+    let mut acts = vec![0.0f32; n * act_dim];
+    let mut noise: Vec<f32> = agents
         .iter()
-        .map(|&a| mlp_from_state(artifact, &host, "policy", a, ha, fa).unwrap())
+        .map(|&a| expl_noise_for(artifact, &host, a, cfg.expl_noise))
         .collect();
+    let mut episodes: Vec<EpisodeEnd> = Vec::new();
+    let mut block = TransitionBlock::new(thread, agents, obs_dim, act_dim);
+    venv.reset_all(&mut rng);
 
-    let obs_dim = envs[0].obs_dim();
-    let act_dim = envs[0].act_dim();
-    let mut obs: Vec<Vec<f32>> = envs
-        .iter_mut()
-        .map(|e| {
-            let mut o = vec![0.0; obs_dim];
-            e.reset(&mut rng, &mut o);
-            o
-        })
-        .collect();
-    let mut ep_ret = vec![0.0f64; agents.len()];
-    let mut ep_steps = vec![0usize; agents.len()];
-    let mut steps_taken = vec![0usize; agents.len()];
-    let mut raw = vec![0.0f32; mlps[0].out_dim()];
-    let mut act = vec![0.0f32; act_dim];
-    let mut next_obs = vec![0.0f32; obs_dim];
-
+    let mut iters: usize = 0;
     let pop_total = artifact.pop as u64;
-    'outer: loop {
+    loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
         // Ratio throttling: wait while actors are too far ahead of the
         // learner (paper Appendix A blocking rule).
         if !throttle.may_step(cfg, pop_total) {
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            std::thread::sleep(std::time::Duration::from_micros(cfg.throttle_sleep_us));
             continue;
         }
-        // Non-blocking parameter refresh.
+        // Non-blocking parameter refresh: one contiguous copy per layer
+        // field for the whole population.
         let v2 = view.fetch_if_newer(version, &mut host);
         if v2 > version {
             version = v2;
+            let _ = policy.sync_from_state(artifact, &host, "policy");
             for (k, &a) in agents.iter().enumerate() {
-                let _ = sync_mlp_from_state(artifact, &host, "policy", a, &mut mlps[k]);
+                noise[k] = expl_noise_for(artifact, &host, a, cfg.expl_noise);
             }
         }
-        for (k, &agent) in agents.iter().enumerate() {
-            // action selection
-            if steps_taken[k] < cfg.warmup_steps {
-                rng.fill_uniform(&mut act, -1.0, 1.0);
-            } else {
-                mlps[k].forward(&obs[k], &mut raw);
-                select_action(cfg.policy, &raw, &mut act, expl_noise_for(
-                    artifact, &host, agent, cfg.expl_noise), &mut rng);
+        // Action selection for the whole block.
+        if iters < cfg.warmup_steps {
+            rng.fill_uniform(&mut acts, -1.0, 1.0);
+        } else {
+            policy.forward_block(agents, venv.obs(), &mut raw);
+            for k in 0..n {
+                select_action(
+                    cfg.policy,
+                    &raw[k * out_dim..(k + 1) * out_dim],
+                    &mut acts[k * act_dim..(k + 1) * act_dim],
+                    noise[k],
+                    &mut rng,
+                );
             }
-            let (rew, done) = envs[k].step(&act, &mut next_obs);
-            ep_ret[k] += rew as f64;
-            ep_steps[k] += 1;
-            steps_taken[k] += 1;
-            throttle.env_steps.fetch_add(1, Ordering::Relaxed);
-            let horizon_hit = ep_steps[k] >= envs[k].horizon();
-            let msg = ActorMsg::Step(Transition {
-                agent,
-                obs: obs[k].clone(),
-                act: act.clone(),
-                rew,
-                next_obs: next_obs.clone(),
-                done,
+        }
+        // Record the pre-step observations, then step every env; the
+        // VecEnv writes next_obs/rew/done straight into the block.
+        block.obs.copy_from_slice(venv.obs());
+        block.act.copy_from_slice(&acts);
+        episodes.clear();
+        venv.step_into(&mut rng, &acts, &mut block.next_obs, &mut block.rew, &mut block.done,
+                       &mut episodes);
+        block.n = n;
+        for e in &episodes {
+            block.episodes.push(EpisodeReport {
+                agent: agents[e.slot],
+                ret: e.ret,
+                steps: e.steps,
             });
-            if send_blocking(&tx, msg, &stop).is_err() {
-                break 'outer;
-            }
-            obs[k].copy_from_slice(&next_obs);
-            if done || horizon_hit {
-                let ep = ActorMsg::Episode { agent, ret: ep_ret[k], steps: ep_steps[k] };
-                if send_blocking(&tx, ep, &stop).is_err() {
-                    break 'outer;
-                }
-                ep_ret[k] = 0.0;
-                ep_steps[k] = 0;
-                envs[k].reset(&mut rng, &mut obs[k]);
-            }
         }
+        iters += 1;
+        throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
+        if send_blocking(&tx, ActorMsg::Batch(block), &stop).is_err() {
+            break;
+        }
+        // Reuse a drained block when the learner returned one; allocate
+        // only when the recycle lane is empty (cold start / learner busy).
+        block = match recycle.try_recv() {
+            Ok(b) => b,
+            Err(_) => TransitionBlock::new(thread, agents, obs_dim, act_dim),
+        };
     }
 }
 
@@ -321,6 +411,7 @@ fn send_blocking(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::replay::RatioGate;
 
     #[test]
     fn select_action_td3_clamps() {
@@ -348,5 +439,105 @@ mod tests {
         assert_eq!(PolicyKind::for_algo("sac"), PolicyKind::Sac);
         assert_eq!(PolicyKind::for_algo("td3"), PolicyKind::Td3);
         assert_eq!(PolicyKind::for_algo("cem"), PolicyKind::Td3);
+    }
+
+    #[test]
+    fn transition_block_rows_and_recycling_reset() {
+        let agents = [2usize, 5, 7];
+        let mut b = TransitionBlock::new(1, &agents, 2, 1);
+        assert_eq!(b.thread(), 1);
+        b.obs.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        b.act.copy_from_slice(&[0.1, 0.2, 0.3]);
+        b.n = 3;
+        b.episodes.push(EpisodeReport { agent: 5, ret: 1.0, steps: 7 });
+        assert_eq!(b.obs_row(1), &[3.0, 4.0]);
+        assert_eq!(b.act_row(2), &[0.3]);
+        b.reset();
+        assert_eq!(b.n, 0);
+        assert!(b.episodes.is_empty());
+        assert_eq!(b.agents, &agents); // ids survive recycling
+    }
+
+    /// Actors must stall within `lead_steps` of the ratio target and
+    /// resume exactly when learner updates buy more headroom.
+    #[test]
+    fn throttle_stalls_within_lead_and_resumes_after_updates() {
+        let cfg = ActorConfig {
+            ratio: 1.0,
+            lead_steps: 100,
+            warmup_steps: 0,
+            ..Default::default()
+        };
+        let th = Throttle::new();
+        let mut taken = 0u64;
+        while th.may_step(&cfg, 1) {
+            th.env_steps.fetch_add(1, Ordering::Relaxed);
+            taken += 1;
+            assert!(taken <= 100, "actor ran past its lead budget");
+        }
+        assert_eq!(taken, 100);
+        // learner progress frees exactly updates/ratio more steps
+        th.updates.fetch_add(50, Ordering::Relaxed);
+        assert!(th.may_step(&cfg, 1));
+        let mut extra = 0u64;
+        while th.may_step(&cfg, 1) {
+            th.env_steps.fetch_add(1, Ordering::Relaxed);
+            extra += 1;
+            assert!(extra <= 50);
+        }
+        assert_eq!(extra, 50);
+        // unthrottled config never stalls
+        let free = ActorConfig { ratio: 0.0, ..Default::default() };
+        assert!(th.may_step(&free, 1));
+    }
+
+    /// Closed loop of Throttle (actor side) against RatioGate (learner
+    /// side): both make progress, neither runs away from the shared
+    /// ratio target, and the system cannot deadlock.
+    #[test]
+    fn throttle_and_ratio_gate_converge_jointly() {
+        let pop = 4u64;
+        let cfg = ActorConfig {
+            ratio: 0.5,
+            lead_steps: 64,
+            warmup_steps: 25,
+            ..Default::default()
+        };
+        let th = Throttle::new();
+        let mut gate = RatioGate::new(cfg.ratio, 8.0, cfg.warmup_steps as u64 * pop);
+        let mut stalled_in_a_row = 0u32;
+        for _ in 0..20_000 {
+            let mut progressed = false;
+            if th.may_step(&cfg, pop) {
+                th.env_steps.fetch_add(1, Ordering::Relaxed);
+                gate.on_env_steps(1);
+                progressed = true;
+            }
+            if gate.may_update(1) {
+                gate.on_update_steps(1);
+                th.updates.fetch_add(1, Ordering::Relaxed);
+                progressed = true;
+            }
+            if progressed {
+                stalled_in_a_row = 0;
+            } else {
+                stalled_in_a_row += 1;
+                assert!(stalled_in_a_row < 2, "actor/learner deadlock");
+            }
+            // actor side never exceeds warmup + updates/ratio + lead
+            let env = th.env_steps.load(Ordering::Relaxed);
+            let upd = th.updates.load(Ordering::Relaxed);
+            let bound =
+                cfg.warmup_steps as u64 * pop + (upd as f64 / cfg.ratio) as u64 + cfg.lead_steps;
+            assert!(env <= bound, "env {env} > bound {bound}");
+            // learner side never exceeds target * counted env steps + slack
+            let counted = env.saturating_sub(cfg.warmup_steps as u64 * pop);
+            assert!(
+                upd as f64 <= cfg.ratio * counted as f64 + 8.0 + 1e-9,
+                "upd {upd} vs counted {counted}"
+            );
+        }
+        assert!(th.env_steps.load(Ordering::Relaxed) > cfg.warmup_steps as u64 * pop);
+        assert!(th.updates.load(Ordering::Relaxed) > 0);
     }
 }

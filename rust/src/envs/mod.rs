@@ -12,12 +12,17 @@
 //! * [`pendulum`]: the classic swing-up task (fast; used by tests and the
 //!   quickstart example).
 //! * [`minatar`]: a MinAtar-style 10x10x4 Breakout for the DQN pipeline.
+//! * [`vec_env`]: batched stepping of n env copies over contiguous
+//!   `[n, obs_dim]` / `[n, act_dim]` blocks (the actor fast path).
 
 pub mod locomotion;
 pub mod minatar;
 pub mod minatar_extra;
 pub mod normalize;
 pub mod pendulum;
+pub mod vec_env;
+
+pub use vec_env::{EpisodeEnd, VecEnv};
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,239 @@
+//! Batched environment stepping for the vectorized actor path.
+//!
+//! [`VecEnv`] owns `n` copies of one environment and steps them all
+//! against contiguous `[n, act_dim]` action / `[n, obs_dim]` observation
+//! matrices, so the actor loop issues one call per iteration instead of
+//! one per agent (the env-side half of the paper's population batching;
+//! cf. GPU-vectorized population stepping in Shahid et al. 2024).
+//!
+//! Per-slot episode bookkeeping (undiscounted return, step count, horizon
+//! cap) and auto-reset live here: a slot whose episode ends is reset
+//! immediately and its fresh observation replaces the terminal one in the
+//! internal `[n, obs_dim]` current-observation matrix, while the terminal
+//! observation is still delivered to the caller's `next_obs` block (what
+//! replay needs). The `done` flags written exclude the horizon cap,
+//! matching the [`Env`] trait contract (done = bootstrap mask).
+
+use crate::envs::{make_env, Env};
+use crate::util::rng::Rng;
+
+/// One finished episode: which slot, its return, and its length.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpisodeEnd {
+    pub slot: usize,
+    pub ret: f64,
+    pub steps: usize,
+}
+
+/// `n` same-named environments stepped as one `[n, ...]` block.
+pub struct VecEnv {
+    envs: Vec<Box<dyn Env>>,
+    obs_dim: usize,
+    act_dim: usize,
+    /// Current observation matrix `[n, obs_dim]` (post-auto-reset).
+    obs: Vec<f32>,
+    ep_ret: Vec<f64>,
+    ep_steps: Vec<usize>,
+}
+
+impl VecEnv {
+    /// Build `n` copies of the registry env `name`.
+    pub fn new(name: &str, n: usize) -> anyhow::Result<VecEnv> {
+        anyhow::ensure!(n > 0, "VecEnv needs at least one slot");
+        let envs = (0..n)
+            .map(|_| make_env(name))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(VecEnv::from_envs(envs))
+    }
+
+    /// Wrap pre-built environments (all must share obs/act dims).
+    pub fn from_envs(envs: Vec<Box<dyn Env>>) -> VecEnv {
+        assert!(!envs.is_empty(), "VecEnv needs at least one slot");
+        let obs_dim = envs[0].obs_dim();
+        let act_dim = envs[0].act_dim();
+        debug_assert!(envs.iter().all(|e| e.obs_dim() == obs_dim && e.act_dim() == act_dim));
+        let n = envs.len();
+        VecEnv {
+            obs: vec![0.0; n * obs_dim],
+            ep_ret: vec![0.0; n],
+            ep_steps: vec![0; n],
+            envs,
+            obs_dim,
+            act_dim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.envs[0].horizon()
+    }
+
+    /// The current `[n, obs_dim]` observation matrix (already reflects
+    /// auto-resets from the last `step_into`).
+    pub fn obs(&self) -> &[f32] {
+        &self.obs
+    }
+
+    /// Reset every slot, writing initial observations into the internal
+    /// current-observation matrix.
+    pub fn reset_all(&mut self, rng: &mut Rng) {
+        let od = self.obs_dim;
+        for (k, env) in self.envs.iter_mut().enumerate() {
+            env.reset(rng, &mut self.obs[k * od..(k + 1) * od]);
+            self.ep_ret[k] = 0.0;
+            self.ep_steps[k] = 0;
+        }
+    }
+
+    /// Reset every slot and write the initial `[n, obs_dim]` block into
+    /// `obs` (also kept internally).
+    pub fn reset_into(&mut self, rng: &mut Rng, obs: &mut [f32]) {
+        assert_eq!(obs.len(), self.envs.len() * self.obs_dim, "obs block size mismatch");
+        self.reset_all(rng);
+        obs.copy_from_slice(&self.obs);
+    }
+
+    /// Step every slot with the `[n, act_dim]` action block.
+    ///
+    /// Writes the transition outputs `next_obs: [n, obs_dim]` (terminal
+    /// observations where an episode ended), `rew: [n]`, `done: [n]`
+    /// (1.0 = env termination, horizon cap excluded), appends one
+    /// [`EpisodeEnd`] per finished episode, and auto-resets those slots
+    /// (their fresh observation appears in [`VecEnv::obs`], not in
+    /// `next_obs`).
+    pub fn step_into(
+        &mut self,
+        rng: &mut Rng,
+        acts: &[f32],
+        next_obs: &mut [f32],
+        rew: &mut [f32],
+        done: &mut [f32],
+        episodes: &mut Vec<EpisodeEnd>,
+    ) {
+        let n = self.envs.len();
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        assert_eq!(acts.len(), n * ad, "act block size mismatch");
+        assert_eq!(next_obs.len(), n * od, "next_obs block size mismatch");
+        assert_eq!(rew.len(), n, "rew block size mismatch");
+        assert_eq!(done.len(), n, "done block size mismatch");
+        for k in 0..n {
+            let out = &mut next_obs[k * od..(k + 1) * od];
+            let (r, d) = self.envs[k].step(&acts[k * ad..(k + 1) * ad], out);
+            rew[k] = r;
+            done[k] = if d { 1.0 } else { 0.0 };
+            self.ep_ret[k] += r as f64;
+            self.ep_steps[k] += 1;
+            let horizon_hit = self.ep_steps[k] >= self.envs[k].horizon();
+            if d || horizon_hit {
+                episodes.push(EpisodeEnd {
+                    slot: k,
+                    ret: self.ep_ret[k],
+                    steps: self.ep_steps[k],
+                });
+                self.ep_ret[k] = 0.0;
+                self.ep_steps[k] = 0;
+                self.envs[k].reset(rng, &mut self.obs[k * od..(k + 1) * od]);
+            } else {
+                self.obs[k * od..(k + 1) * od].copy_from_slice(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_scalar_env_loop() {
+        // identical seeds => VecEnv stepping reproduces a hand-rolled
+        // per-env loop exactly (same rng consumption order).
+        let n = 3;
+        let mut venv = VecEnv::new("pendulum", n).unwrap();
+        let mut rng_v = Rng::new(42);
+        let mut rng_s = Rng::new(42);
+        let (od, ad) = (venv.obs_dim(), venv.act_dim());
+        let mut obs_v = vec![0.0f32; n * od];
+        venv.reset_into(&mut rng_v, &mut obs_v);
+        assert_eq!(venv.obs(), &obs_v[..]);
+
+        let mut envs: Vec<_> = (0..n).map(|_| make_env("pendulum").unwrap()).collect();
+        let mut obs_s = vec![0.0f32; n * od];
+        for (k, e) in envs.iter_mut().enumerate() {
+            e.reset(&mut rng_s, &mut obs_s[k * od..(k + 1) * od]);
+        }
+        assert_eq!(venv.obs(), &obs_s[..]);
+
+        let mut acts = vec![0.0f32; n * ad];
+        let mut next = vec![0.0f32; n * od];
+        let mut rew = vec![0.0f32; n];
+        let mut done = vec![0.0f32; n];
+        let mut eps = Vec::new();
+        for t in 0..50 {
+            for (k, a) in acts.iter_mut().enumerate() {
+                *a = (((t + k) % 7) as f32 / 3.5 - 1.0).clamp(-1.0, 1.0);
+            }
+            venv.step_into(&mut rng_v, &acts, &mut next, &mut rew, &mut done, &mut eps);
+            let mut next_s = vec![0.0f32; od];
+            for k in 0..n {
+                let (r, d) = envs[k].step(&acts[k * ad..(k + 1) * ad], &mut next_s);
+                assert_eq!(rew[k], r, "step {t} slot {k}");
+                assert_eq!(done[k] > 0.5, d);
+                assert_eq!(&next[k * od..(k + 1) * od], &next_s[..]);
+            }
+        }
+        assert!(eps.is_empty(), "pendulum horizon 200 not hit in 50 steps");
+    }
+
+    #[test]
+    fn auto_reset_reports_episodes_and_keeps_stepping() {
+        let mut venv = VecEnv::new("pendulum", 2).unwrap();
+        let mut rng = Rng::new(7);
+        venv.reset_all(&mut rng);
+        let horizon = venv.horizon();
+        let (od, ad) = (venv.obs_dim(), venv.act_dim());
+        let acts = vec![0.0f32; 2 * ad];
+        let mut next = vec![0.0f32; 2 * od];
+        let mut rew = vec![0.0f32; 2];
+        let mut done = vec![0.0f32; 2];
+        let mut eps = Vec::new();
+        for _ in 0..(2 * horizon + 5) {
+            venv.step_into(&mut rng, &acts, &mut next, &mut rew, &mut done, &mut eps);
+        }
+        // both slots finished two horizon-capped episodes each
+        assert_eq!(eps.len(), 4, "episodes: {eps:?}");
+        for e in &eps {
+            assert!(e.slot < 2);
+            assert_eq!(e.steps, horizon);
+            assert!(e.ret.is_finite());
+        }
+        // bookkeeping restarted: episode counters are mid-flight again
+        assert!(venv.ep_steps.iter().all(|&s| s > 0 && s < horizon));
+    }
+
+    #[test]
+    #[should_panic(expected = "act block size mismatch")]
+    fn wrong_act_block_panics() {
+        let mut venv = VecEnv::new("pendulum", 2).unwrap();
+        let mut rng = Rng::new(0);
+        venv.reset_all(&mut rng);
+        let mut next = vec![0.0f32; 2 * venv.obs_dim()];
+        let (mut r, mut d) = (vec![0.0; 2], vec![0.0; 2]);
+        venv.step_into(&mut rng, &[0.0], &mut next, &mut r, &mut d, &mut Vec::new());
+    }
+}

@@ -134,6 +134,10 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
         cfg.ratio = file.get_f64("train.ratio", cfg.ratio)?;
         cfg.n_actor_threads =
             file.get_usize("train.actor_threads", cfg.n_actor_threads)?;
+        cfg.drain_bound =
+            file.get_usize("train.drain_bound", cfg.drain_bound as usize)? as u64;
+        cfg.actor_sleep_us =
+            file.get_usize("train.actor_sleep_us", cfg.actor_sleep_us as usize)? as u64;
     }
     Ok(cfg)
 }

@@ -5,6 +5,7 @@
 use crate::manifest::Artifact;
 use crate::nn::conv::ConvNet;
 use crate::nn::mlp::{Activation, Mlp};
+use crate::nn::pop_mlp::PopMlp;
 
 /// Extract agent `agent`'s MLP with the given field prefix
 /// (e.g. "policy"). Layer fields are `{prefix}/w{i}` / `{prefix}/b{i}`
@@ -32,6 +33,40 @@ pub fn mlp_from_state(
     }
     anyhow::ensure!(mlp.num_layers() > 0, "no layers found for prefix {prefix:?}");
     Ok(mlp)
+}
+
+/// Build the WHOLE population's network in packed `[P, in, out]` form with
+/// the given field prefix — one contiguous read per manifest field (the
+/// fields are already stored member-major, so no per-agent strided copies).
+/// Refresh it later with [`PopMlp::sync_from_state`].
+pub fn pop_mlp_from_state(
+    artifact: &Artifact,
+    state: &[f32],
+    prefix: &str,
+    hidden_act: Activation,
+    final_act: Activation,
+) -> anyhow::Result<PopMlp> {
+    let mut net = PopMlp::new(artifact.pop, hidden_act, final_act);
+    for li in 0.. {
+        let wname = format!("{prefix}/w{li}");
+        if artifact.field(&wname).is_err() {
+            break;
+        }
+        let wf = artifact.field(&wname)?;
+        anyhow::ensure!(wf.shape.len() == 3, "{wname}: expected [P, in, out]");
+        anyhow::ensure!(
+            wf.shape[0] == artifact.pop,
+            "{wname}: leading axis {} != pop {}",
+            wf.shape[0],
+            artifact.pop
+        );
+        let (in_dim, out_dim) = (wf.shape[1], wf.shape[2]);
+        let w = artifact.read(state, &wname)?;
+        let b = artifact.read(state, &format!("{prefix}/b{li}"))?;
+        net.push_layer(w.to_vec(), b.to_vec(), in_dim, out_dim);
+    }
+    anyhow::ensure!(net.num_layers() > 0, "no layers found for prefix {prefix:?}");
+    Ok(net)
 }
 
 /// Refresh an existing MLP's weights in place (no allocation).

@@ -3,6 +3,15 @@
 //! Weight convention is identical to the jax side: layer `l` maps
 //! `h @ w[l] + b[l]` with `w[l]: [in, out]` stored row-major, relu between
 //! hidden layers and a configurable final activation.
+//!
+//! The scalar [`Mlp`] is the one-member special case of the
+//! population-batched [`PopMlp`](crate::nn::pop_mlp::PopMlp) and delegates
+//! its forward pass to it. The shared kernels live here:
+//! [`matvec_sparse`] (skips dead post-relu lanes), [`matvec_dense`]
+//! (branch-free for dense inputs), the adaptive [`matvec`] that picks
+//! between them, and the row-blocked [`matmat`].
+
+use crate::nn::pop_mlp::PopMlp;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
@@ -22,70 +31,51 @@ impl Activation {
     }
 }
 
-/// One population member's MLP (weights borrowed or owned as flat vecs).
+/// One population member's MLP — a scalar facade over [`PopMlp`] with
+/// population size 1 (the 1-agent case of the vectorized actor path).
 #[derive(Clone, Debug)]
 pub struct Mlp {
-    /// Per layer: (w flat [in*out], b [out], in, out)
-    layers: Vec<(Vec<f32>, Vec<f32>, usize, usize)>,
-    pub hidden_act: Activation,
-    pub final_act: Activation,
-    /// Scratch buffers reused across calls (allocation-free hot path).
-    scratch: [Vec<f32>; 2],
+    inner: PopMlp,
 }
 
 impl Mlp {
     pub fn new(hidden_act: Activation, final_act: Activation) -> Self {
-        Mlp { layers: Vec::new(), hidden_act, final_act, scratch: [Vec::new(), Vec::new()] }
+        Mlp { inner: PopMlp::new(1, hidden_act, final_act) }
     }
 
     /// Append a layer; `w` is `[in, out]` row-major, `b` is `[out]`.
     pub fn push_layer(&mut self, w: Vec<f32>, b: Vec<f32>, in_dim: usize, out_dim: usize) {
-        assert_eq!(w.len(), in_dim * out_dim, "weight size mismatch");
-        assert_eq!(b.len(), out_dim, "bias size mismatch");
-        self.layers.push((w, b, in_dim, out_dim));
+        self.inner.push_layer(w, b, in_dim, out_dim);
     }
 
     pub fn num_layers(&self) -> usize {
-        self.layers.len()
+        self.inner.num_layers()
     }
 
     pub fn in_dim(&self) -> usize {
-        self.layers.first().map(|l| l.2).unwrap_or(0)
+        self.inner.in_dim()
     }
 
     pub fn out_dim(&self) -> usize {
-        self.layers.last().map(|l| l.3).unwrap_or(0)
+        self.inner.out_dim()
+    }
+
+    pub fn hidden_act(&self) -> Activation {
+        self.inner.hidden_act
+    }
+
+    pub fn final_act(&self) -> Activation {
+        self.inner.final_act
     }
 
     /// Replace layer weights in place (parameter sync without realloc).
     pub fn set_layer(&mut self, li: usize, w: &[f32], b: &[f32]) {
-        let (lw, lb, i, o) = &mut self.layers[li];
-        assert_eq!(w.len(), *i * *o);
-        assert_eq!(b.len(), *o);
-        lw.copy_from_slice(w);
-        lb.copy_from_slice(b);
+        self.inner.set_member_layer(0, li, w, b);
     }
 
     /// Forward one observation. Writes into `out` (len = out_dim).
     pub fn forward(&mut self, obs: &[f32], out: &mut [f32]) {
-        assert_eq!(obs.len(), self.in_dim(), "obs dim mismatch");
-        assert_eq!(out.len(), self.out_dim(), "out dim mismatch");
-        let n_layers = self.layers.len();
-        // Double-buffer through scratch to stay allocation-free: take the
-        // buffers out of `self` for the duration of the pass.
-        let mut src = std::mem::take(&mut self.scratch[0]);
-        let mut dst = std::mem::take(&mut self.scratch[1]);
-        src.clear();
-        src.extend_from_slice(obs);
-        for (li, (w, b, in_dim, out_dim)) in self.layers.iter().enumerate() {
-            let act = if li + 1 == n_layers { self.final_act } else { self.hidden_act };
-            dst.resize(*out_dim, 0.0);
-            matvec(w, b, &src, &mut dst, *in_dim, *out_dim, act);
-            std::mem::swap(&mut src, &mut dst);
-        }
-        out.copy_from_slice(&src[..out.len()]);
-        self.scratch[0] = src;
-        self.scratch[1] = dst;
+        self.inner.forward_block(&[0], obs, out);
     }
 
     /// Forward returning a fresh Vec (convenience for tests).
@@ -96,12 +86,14 @@ impl Mlp {
     }
 }
 
-/// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out].
-/// Iterating rows of `w` keeps the access pattern sequential (cache-
-/// friendly for the [in, out] layout jax uses).
+/// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out],
+/// skipping all-zero input lanes. Iterating rows of `w` keeps the access
+/// pattern sequential (cache-friendly for the [in, out] layout jax uses);
+/// the zero skip wins when `x` is a post-relu hidden activation (roughly
+/// half the lanes are dead).
 #[inline]
-fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
-          out_dim: usize, act: Activation) {
+pub fn matvec_sparse(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                     out_dim: usize, act: Activation) {
     dst.copy_from_slice(b);
     for (i, &xi) in x.iter().enumerate().take(in_dim) {
         if xi == 0.0 {
@@ -117,9 +109,64 @@ fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
     }
 }
 
+/// Same contract as [`matvec_sparse`] but branch-free: for fully-dense
+/// inputs (normalized observations never hit exactly 0.0) the per-element
+/// zero check is a mispredicted branch in the innermost loop for nothing.
+#[inline]
+pub fn matvec_dense(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                    out_dim: usize, act: Activation) {
+    dst.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate().take(in_dim) {
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (d, &wv) in dst.iter_mut().zip(row) {
+            *d += xi * wv;
+        }
+    }
+    for d in dst.iter_mut() {
+        *d = act.apply(*d);
+    }
+}
+
+/// Adaptive matvec: one O(in) prescan routes fully-dense inputs to the
+/// branch-free kernel and anything with zero lanes to the sparsity-skip
+/// kernel (the prescan is amortized by the O(in*out) inner loop).
+#[inline]
+pub fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+              out_dim: usize, act: Activation) {
+    if x.iter().take(in_dim).any(|&v| v == 0.0) {
+        matvec_sparse(w, b, x, dst, in_dim, out_dim, act);
+    } else {
+        matvec_dense(w, b, x, dst, in_dim, out_dim, act);
+    }
+}
+
+/// Row-blocked mat-mat: forward `rows` inputs `x: [rows, in]` through ONE
+/// weight matrix into `dst: [rows, out]`. The weight block stays hot in
+/// cache across the row loop — this is the inner kernel of
+/// [`PopMlp::forward_block`](crate::nn::pop_mlp::PopMlp::forward_block)
+/// applied per member run.
+#[inline]
+pub fn matmat(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+              out_dim: usize, rows: usize, act: Activation) {
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(dst.len(), rows * out_dim);
+    for r in 0..rows {
+        matvec(
+            w,
+            b,
+            &x[r * in_dim..(r + 1) * in_dim],
+            &mut dst[r * out_dim..(r + 1) * out_dim],
+            in_dim,
+            out_dim,
+            act,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn tiny() -> Mlp {
         // 2 -> 3 -> 1, hand-computable weights
@@ -146,8 +193,7 @@ mod tests {
     #[test]
     fn relu_clips_negatives() {
         let mut m = tiny();
-        // x = [-1, 0]: z1 = [-1, 1, 1.5] -> relu [0, 1, 1.5]
-        // wait: z1 = [-1*1, -1*0-1, -1*-1+0.5] = [-1, -1, 1.5] -> [0,0,1.5]
+        // x = [-1, 0]: z1 = [-1*1, -1*0-1, -1*-1+0.5] = [-1, -1, 1.5] -> [0,0,1.5]
         // z2 = 1.5 + 0.1 = 1.6
         let y = m.forward_vec(&[-1.0, 0.0]);
         assert!((y[0] - 1.6f32.tanh()).abs() < 1e-6);
@@ -176,5 +222,52 @@ mod tests {
     fn wrong_obs_dim_panics() {
         let mut m = tiny();
         m.forward_vec(&[1.0]);
+    }
+
+    #[test]
+    fn dense_and_sparse_kernels_agree() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let i = 1 + rng.below(24);
+            let o = 1 + rng.below(24);
+            let mut w = vec![0.0f32; i * o];
+            let mut b = vec![0.0f32; o];
+            rng.fill_normal(&mut w, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            // mix of dense, zero, and negative lanes
+            let mut x = vec![0.0f32; i];
+            for v in x.iter_mut() {
+                *v = if rng.below(3) == 0 { 0.0 } else { rng.normal() as f32 };
+            }
+            let mut d1 = vec![0.0f32; o];
+            let mut d2 = vec![0.0f32; o];
+            let mut d3 = vec![0.0f32; o];
+            matvec_sparse(&w, &b, &x, &mut d1, i, o, Activation::Tanh);
+            matvec_dense(&w, &b, &x, &mut d2, i, o, Activation::Tanh);
+            matvec(&w, &b, &x, &mut d3, i, o, Activation::Tanh);
+            for k in 0..o {
+                assert!((d1[k] - d2[k]).abs() < 1e-6, "{} vs {}", d1[k], d2[k]);
+                assert_eq!(d1[k], d3[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_equals_per_row_matvec() {
+        let mut rng = Rng::new(8);
+        let (i, o, rows) = (5, 4, 3);
+        let mut w = vec![0.0f32; i * o];
+        let mut b = vec![0.0f32; o];
+        let mut x = vec![0.0f32; rows * i];
+        rng.fill_normal(&mut w, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut x, 1.0);
+        let mut got = vec![0.0f32; rows * o];
+        matmat(&w, &b, &x, &mut got, i, o, rows, Activation::Relu);
+        for r in 0..rows {
+            let mut want = vec![0.0f32; o];
+            matvec(&w, &b, &x[r * i..(r + 1) * i], &mut want, i, o, Activation::Relu);
+            assert_eq!(&got[r * o..(r + 1) * o], &want[..]);
+        }
     }
 }

@@ -6,10 +6,17 @@
 //! coordinator extracts policy weights from the flat train state (via the
 //! manifest) and runs a native Rust forward pass whose numerics are tested
 //! against the AOT-lowered `*fwd` artifacts (see `rust/tests/`).
+//!
+//! The population-batched [`PopMlp`] is the primary actor-side network:
+//! it keeps all P members' weights packed `[P, in, out]` (the manifest
+//! layout) and forwards a whole `[n_agents, obs_dim]` observation block in
+//! one call. The scalar [`Mlp`] is its one-member special case.
 
 pub mod conv;
 pub mod from_state;
 pub mod mlp;
+pub mod pop_mlp;
 
 pub use conv::ConvNet;
 pub use mlp::{Activation, Mlp};
+pub use pop_mlp::PopMlp;

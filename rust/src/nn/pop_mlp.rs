@@ -1,0 +1,329 @@
+//! Population-batched MLP inference for the actor hot path.
+//!
+//! # Layout contract
+//!
+//! [`PopMlp`] packs every member's weights in structure-of-arrays form:
+//! layer `l` stores `w: f32[P, in, out]` (member-major, then row-major
+//! `[in, out]` per member) and `b: f32[P, out]`. This is byte-identical to
+//! the flat train-state fields `{prefix}/w{l}` / `{prefix}/b{l}` that
+//! `python/compile/layout.py` serializes into the manifest and that the
+//! Pallas kernel `python/compile/kernels/pop_linear.py` consumes
+//! (`y[p, b, o] = act(x[p, b, i] @ w[p, i, o] + bias[p, o])`). Because the
+//! packing matches the manifest layout exactly, [`PopMlp::sync_from_state`]
+//! refreshes ALL members with one contiguous copy per field, instead of
+//! the P strided per-agent row reads the scalar path needed.
+//!
+//! # Forward
+//!
+//! [`PopMlp::forward_block`] forwards an `[n, in]` observation block in
+//! one call; row `k` uses member `members[k]`'s weights. Consecutive rows
+//! owned by the same member are forwarded as one row-blocked mat-mat
+//! ([`matmat`](crate::nn::mlp::matmat)) with that member's weight matrix
+//! hot in cache — note that in today's actor loop each agent owns exactly
+//! one env, so runs have length 1 and the win comes from the single
+//! dispatch, shared scratch, and the packed one-pass weight sync; the run
+//! blocking pays off once a member owns several rows (multiple envs per
+//! agent, evaluation sweeps). The scalar [`Mlp`](crate::nn::mlp::Mlp) is
+//! the P=1 special case and delegates here.
+
+use crate::manifest::Artifact;
+use crate::nn::mlp::{matmat, Activation};
+
+#[derive(Clone, Debug)]
+struct PopLayer {
+    /// `[P, in, out]` flat, member-major.
+    w: Vec<f32>,
+    /// `[P, out]` flat.
+    b: Vec<f32>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+/// All population members' MLPs in one packed structure-of-arrays net.
+#[derive(Clone, Debug)]
+pub struct PopMlp {
+    pop: usize,
+    layers: Vec<PopLayer>,
+    pub hidden_act: Activation,
+    pub final_act: Activation,
+    /// Scratch buffers reused across calls (allocation-free hot path).
+    scratch: [Vec<f32>; 2],
+}
+
+impl PopMlp {
+    pub fn new(pop: usize, hidden_act: Activation, final_act: Activation) -> Self {
+        assert!(pop > 0, "population must be non-empty");
+        PopMlp {
+            pop,
+            layers: Vec::new(),
+            hidden_act,
+            final_act,
+            scratch: [Vec::new(), Vec::new()],
+        }
+    }
+
+    pub fn pop(&self) -> usize {
+        self.pop
+    }
+
+    /// Append a layer; `w` is `[P, in, out]` flat, `b` is `[P, out]` flat.
+    pub fn push_layer(&mut self, w: Vec<f32>, b: Vec<f32>, in_dim: usize, out_dim: usize) {
+        assert_eq!(w.len(), self.pop * in_dim * out_dim, "weight size mismatch");
+        assert_eq!(b.len(), self.pop * out_dim, "bias size mismatch");
+        if let Some(last) = self.layers.last() {
+            assert_eq!(in_dim, last.out_dim, "layer dim chain mismatch");
+        }
+        self.layers.push(PopLayer { w, b, in_dim, out_dim });
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map(|l| l.in_dim).unwrap_or(0)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.out_dim).unwrap_or(0)
+    }
+
+    /// One member's `(w, b)` slices of layer `li` (`[in, out]` / `[out]`).
+    pub fn member_layer(&self, member: usize, li: usize) -> (&[f32], &[f32]) {
+        assert!(member < self.pop, "member out of range");
+        let l = &self.layers[li];
+        let ws = l.in_dim * l.out_dim;
+        (
+            &l.w[member * ws..(member + 1) * ws],
+            &l.b[member * l.out_dim..(member + 1) * l.out_dim],
+        )
+    }
+
+    /// Replace ONE member's weights of layer `li` in place.
+    pub fn set_member_layer(&mut self, member: usize, li: usize, w: &[f32], b: &[f32]) {
+        assert!(member < self.pop, "member out of range");
+        let l = &mut self.layers[li];
+        let ws = l.in_dim * l.out_dim;
+        assert_eq!(w.len(), ws, "weight size mismatch");
+        assert_eq!(b.len(), l.out_dim, "bias size mismatch");
+        l.w[member * ws..(member + 1) * ws].copy_from_slice(w);
+        l.b[member * l.out_dim..(member + 1) * l.out_dim].copy_from_slice(b);
+    }
+
+    /// Replace ALL members' weights of layer `li` from packed `[P, in, out]`
+    /// / `[P, out]` slices — one memcpy per array.
+    pub fn set_layer_packed(&mut self, li: usize, w: &[f32], b: &[f32]) {
+        let l = &mut self.layers[li];
+        assert_eq!(w.len(), l.w.len(), "weight size mismatch");
+        assert_eq!(b.len(), l.b.len(), "bias size mismatch");
+        l.w.copy_from_slice(w);
+        l.b.copy_from_slice(b);
+    }
+
+    /// Refresh every member from a host copy of the flat train state in one
+    /// pass: the manifest stores `{prefix}/w{l}` as `[P, in, out]` flat —
+    /// exactly this net's packing — so each layer is one contiguous copy
+    /// per field (no per-agent strided reads).
+    pub fn sync_from_state(
+        &mut self,
+        artifact: &Artifact,
+        state: &[f32],
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        for li in 0..self.layers.len() {
+            let w = artifact.read(state, &format!("{prefix}/w{li}"))?;
+            let b = artifact.read(state, &format!("{prefix}/b{li}"))?;
+            self.set_layer_packed(li, w, b);
+        }
+        Ok(())
+    }
+
+    /// Forward an observation block `obs: [n, in_dim]` in one call; row `k`
+    /// uses member `members[k]`'s weights. Writes `out: [n, out_dim]`.
+    /// Consecutive rows with the same member are forwarded as one
+    /// row-blocked mat-mat.
+    pub fn forward_block(&mut self, members: &[usize], obs: &[f32], out: &mut [f32]) {
+        let n = members.len();
+        assert!(self.num_layers() > 0, "forward on empty PopMlp");
+        assert_eq!(obs.len(), n * self.in_dim(), "obs dim mismatch");
+        assert_eq!(out.len(), n * self.out_dim(), "out dim mismatch");
+        debug_assert!(members.iter().all(|&m| m < self.pop), "member out of range");
+        let n_layers = self.layers.len();
+        // Double-buffer through scratch to stay allocation-free: take the
+        // buffers out of `self` for the duration of the pass.
+        let mut src = std::mem::take(&mut self.scratch[0]);
+        let mut dst = std::mem::take(&mut self.scratch[1]);
+        src.clear();
+        src.extend_from_slice(obs);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let act = if li + 1 == n_layers { self.final_act } else { self.hidden_act };
+            let (i, o) = (layer.in_dim, layer.out_dim);
+            dst.resize(n * o, 0.0);
+            let ws = i * o;
+            let mut row = 0;
+            while row < n {
+                let m = members[row];
+                let mut end = row + 1;
+                while end < n && members[end] == m {
+                    end += 1;
+                }
+                matmat(
+                    &layer.w[m * ws..(m + 1) * ws],
+                    &layer.b[m * o..(m + 1) * o],
+                    &src[row * i..end * i],
+                    &mut dst[row * o..end * o],
+                    i,
+                    o,
+                    end - row,
+                    act,
+                );
+                row = end;
+            }
+            std::mem::swap(&mut src, &mut dst);
+        }
+        out.copy_from_slice(&src[..out.len()]);
+        self.scratch[0] = src;
+        self.scratch[1] = dst;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Artifact, Dtype, EnvDesc, Field};
+    use crate::nn::mlp::Mlp;
+    use crate::util::rng::Rng;
+
+    /// Random per-member layer stack [(w, b); layers] for given dims.
+    fn random_members(
+        rng: &mut Rng,
+        pop: usize,
+        dims: &[usize],
+    ) -> Vec<Vec<(Vec<f32>, Vec<f32>)>> {
+        (0..pop)
+            .map(|_| {
+                dims.windows(2)
+                    .map(|d| {
+                        let mut w = vec![0.0f32; d[0] * d[1]];
+                        let mut b = vec![0.0f32; d[1]];
+                        rng.fill_normal(&mut w, 0.7);
+                        rng.fill_normal(&mut b, 0.3);
+                        (w, b)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn pack(members: &[Vec<(Vec<f32>, Vec<f32>)>], dims: &[usize]) -> PopMlp {
+        let mut net = PopMlp::new(members.len(), Activation::Relu, Activation::Tanh);
+        for (li, d) in dims.windows(2).enumerate() {
+            let mut w = Vec::new();
+            let mut b = Vec::new();
+            for m in members {
+                w.extend_from_slice(&m[li].0);
+                b.extend_from_slice(&m[li].1);
+            }
+            net.push_layer(w, b, d[0], d[1]);
+        }
+        net
+    }
+
+    #[test]
+    fn forward_block_matches_scalar_members() {
+        let mut rng = Rng::new(20);
+        for &pop in &[1usize, 4, 16] {
+            let dims = [3usize, 8, 5, 2];
+            let members = random_members(&mut rng, pop, &dims);
+            let mut net = pack(&members, &dims);
+            // one row per member plus some duplicate/reordered rows
+            let mut ids: Vec<usize> = (0..pop).collect();
+            ids.push(0);
+            ids.push(pop - 1);
+            let mut obs = vec![0.0f32; ids.len() * dims[0]];
+            rng.fill_normal(&mut obs, 1.0);
+            let mut out = vec![0.0f32; ids.len() * dims[3]];
+            net.forward_block(&ids, &obs, &mut out);
+            for (k, &m) in ids.iter().enumerate() {
+                let mut scalar = Mlp::new(Activation::Relu, Activation::Tanh);
+                for (li, d) in dims.windows(2).enumerate() {
+                    scalar.push_layer(
+                        members[m][li].0.clone(),
+                        members[m][li].1.clone(),
+                        d[0],
+                        d[1],
+                    );
+                }
+                let want = scalar.forward_vec(&obs[k * dims[0]..(k + 1) * dims[0]]);
+                for (j, &wv) in want.iter().enumerate() {
+                    let gv = out[k * dims[3] + j];
+                    assert!(
+                        (gv - wv).abs() < 1e-5,
+                        "pop {pop} row {k} member {m} out {j}: {gv} vs {wv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sync_from_state_is_one_pass_per_field() {
+        let (pop, i, o) = (3usize, 2usize, 4usize);
+        let fields = vec![
+            Field {
+                name: "policy/w0".into(),
+                offset: 0,
+                size: pop * i * o,
+                shape: vec![pop, i, o],
+                dtype: Dtype::F32,
+                init: "zeros".into(),
+                group: "policy".into(),
+                per_agent: true,
+            },
+            Field {
+                name: "policy/b0".into(),
+                offset: pop * i * o,
+                size: pop * o,
+                shape: vec![pop, o],
+                dtype: Dtype::F32,
+                init: "zeros".into(),
+                group: "policy".into(),
+                per_agent: true,
+            },
+        ];
+        let state_size = pop * i * o + pop * o;
+        let art = Artifact::new(
+            "t".into(),
+            std::path::PathBuf::new(),
+            "td3".into(),
+            "pendulum".into(),
+            EnvDesc::default(),
+            pop,
+            1,
+            4,
+            vec![],
+            state_size,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        );
+        let state: Vec<f32> = (0..state_size).map(|v| v as f32).collect();
+        let mut net = PopMlp::new(pop, Activation::None, Activation::None);
+        net.push_layer(vec![0.0; pop * i * o], vec![0.0; pop * o], i, o);
+        net.sync_from_state(&art, &state, "policy").unwrap();
+        for m in 0..pop {
+            let (w, b) = net.member_layer(m, 0);
+            assert_eq!(w[0], (m * i * o) as f32);
+            assert_eq!(b[0], (pop * i * o + m * o) as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "layer dim chain mismatch")]
+    fn mismatched_chain_panics() {
+        let mut net = PopMlp::new(1, Activation::Relu, Activation::None);
+        net.push_layer(vec![0.0; 6], vec![0.0; 3], 2, 3);
+        net.push_layer(vec![0.0; 4], vec![0.0; 2], 2, 2); // in != prev out
+    }
+}

@@ -69,6 +69,43 @@ impl ReplayBuffer {
         self.total_inserted += 1;
     }
 
+    /// Insert `n` transitions from contiguous `[n, ...]` blocks in one
+    /// call — one `copy_from_slice` per field per contiguous ring run
+    /// (at most two runs unless `n > capacity`). Row order is preserved,
+    /// so the result is exactly `n` repeated [`ReplayBuffer::push`] calls;
+    /// `done` uses the same 0.0/1.0 encoding the buffer stores.
+    pub fn push_batch(
+        &mut self,
+        n: usize,
+        obs: &[f32],
+        act: &[f32],
+        rew: &[f32],
+        next_obs: &[f32],
+        done: &[f32],
+    ) {
+        debug_assert_eq!(obs.len(), n * self.obs_dim);
+        debug_assert_eq!(act.len(), n * self.act_dim);
+        debug_assert_eq!(rew.len(), n);
+        debug_assert_eq!(next_obs.len(), n * self.obs_dim);
+        debug_assert_eq!(done.len(), n);
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        let mut row = 0;
+        while row < n {
+            let i = self.head;
+            let run = (n - row).min(self.capacity - i);
+            self.obs[i * od..(i + run) * od].copy_from_slice(&obs[row * od..(row + run) * od]);
+            self.act[i * ad..(i + run) * ad].copy_from_slice(&act[row * ad..(row + run) * ad]);
+            self.rew[i..i + run].copy_from_slice(&rew[row..row + run]);
+            self.next_obs[i * od..(i + run) * od]
+                .copy_from_slice(&next_obs[row * od..(row + run) * od]);
+            self.done[i..i + run].copy_from_slice(&done[row..row + run]);
+            self.head = (self.head + run) % self.capacity;
+            self.len = (self.len + run).min(self.capacity);
+            self.total_inserted += run as u64;
+            row += run;
+        }
+    }
+
     /// Sample `batch` transitions uniformly with replacement into the
     /// destination slices (each sized for exactly one agent's batch).
     pub fn sample_into(
@@ -165,6 +202,54 @@ mod tests {
         assert!(buf.is_empty());
         push_n(&mut buf, 1);
         assert_eq!(buf.len(), 1);
+    }
+
+    /// push_batch must be byte-identical to the same rows pushed one by
+    /// one — including head position, live length, and wraparound order.
+    #[test]
+    fn push_batch_equals_repeated_push() {
+        let mut rng = Rng::new(9);
+        for case in 0..200 {
+            let cap = 1 + rng.below(12);
+            let (od, ad) = (1 + rng.below(3), 1 + rng.below(2));
+            let mut a = ReplayBuffer::new(cap, od, ad);
+            let mut b = ReplayBuffer::new(cap, od, ad);
+            for _ in 0..6 {
+                // batch sizes deliberately straddle the capacity (n > cap
+                // wraps more than once)
+                let n = 1 + rng.below(2 * cap);
+                let mut obs = vec![0.0f32; n * od];
+                let mut act = vec![0.0f32; n * ad];
+                let mut rew = vec![0.0f32; n];
+                let mut nobs = vec![0.0f32; n * od];
+                let mut done = vec![0.0f32; n];
+                rng.fill_normal(&mut obs, 1.0);
+                rng.fill_normal(&mut act, 1.0);
+                rng.fill_normal(&mut rew, 1.0);
+                rng.fill_normal(&mut nobs, 1.0);
+                for d in done.iter_mut() {
+                    *d = (rng.below(2) == 0) as u8 as f32;
+                }
+                a.push_batch(n, &obs, &act, &rew, &nobs, &done);
+                for r in 0..n {
+                    b.push(
+                        &obs[r * od..(r + 1) * od],
+                        &act[r * ad..(r + 1) * ad],
+                        rew[r],
+                        &nobs[r * od..(r + 1) * od],
+                        done[r] > 0.5,
+                    );
+                }
+                assert_eq!(a.len, b.len, "case {case}");
+                assert_eq!(a.head, b.head, "case {case}");
+                assert_eq!(a.total_inserted, b.total_inserted, "case {case}");
+                assert_eq!(a.obs, b.obs, "case {case}");
+                assert_eq!(a.act, b.act, "case {case}");
+                assert_eq!(a.rew, b.rew, "case {case}");
+                assert_eq!(a.next_obs, b.next_obs, "case {case}");
+                assert_eq!(a.done, b.done, "case {case}");
+            }
+        }
     }
 
     #[test]

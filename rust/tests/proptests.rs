@@ -315,6 +315,147 @@ fn prop_mlp_linear_layer_is_matvec() {
     }
 }
 
+/// Acceptance gate: PopMlp forward matches the scalar Mlp within 1e-5 on
+/// randomized weights for pop ∈ {1, 4, 16}.
+#[test]
+fn prop_pop_mlp_matches_scalar_members() {
+    let mut rng = Rng::new(13);
+    for &pop in &[1usize, 4, 16] {
+        for case in 0..20 {
+            let dims = [
+                1 + rng.below(10),
+                1 + rng.below(24),
+                1 + rng.below(24),
+                1 + rng.below(6),
+            ];
+            // per-member random stacks, then packed [P, in, out] assembly
+            let members: Vec<Vec<(Vec<f32>, Vec<f32>)>> = (0..pop)
+                .map(|_| {
+                    dims.windows(2)
+                        .map(|d| {
+                            let mut w = vec![0.0f32; d[0] * d[1]];
+                            let mut b = vec![0.0f32; d[1]];
+                            rng.fill_normal(&mut w, 0.8);
+                            rng.fill_normal(&mut b, 0.3);
+                            (w, b)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut net = fastpbrl::nn::PopMlp::new(
+                pop,
+                fastpbrl::nn::Activation::Relu,
+                fastpbrl::nn::Activation::Tanh,
+            );
+            for (li, d) in dims.windows(2).enumerate() {
+                let mut w = Vec::new();
+                let mut b = Vec::new();
+                for m in &members {
+                    w.extend_from_slice(&m[li].0);
+                    b.extend_from_slice(&m[li].1);
+                }
+                net.push_layer(w, b, d[0], d[1]);
+            }
+            // rows in random member order, with repeats (exercises the
+            // member-run blocking)
+            let rows = pop + rng.below(4);
+            let ids: Vec<usize> = (0..rows).map(|_| rng.below(pop)).collect();
+            let mut obs = vec![0.0f32; rows * dims[0]];
+            rng.fill_normal(&mut obs, 1.0);
+            let mut got = vec![0.0f32; rows * dims[3]];
+            net.forward_block(&ids, &obs, &mut got);
+            for (k, &m) in ids.iter().enumerate() {
+                let mut scalar = fastpbrl::nn::Mlp::new(
+                    fastpbrl::nn::Activation::Relu,
+                    fastpbrl::nn::Activation::Tanh,
+                );
+                for (li, d) in dims.windows(2).enumerate() {
+                    scalar.push_layer(
+                        members[m][li].0.clone(),
+                        members[m][li].1.clone(),
+                        d[0],
+                        d[1],
+                    );
+                }
+                let want = scalar.forward_vec(&obs[k * dims[0]..(k + 1) * dims[0]]);
+                for (j, &wv) in want.iter().enumerate() {
+                    let gv = got[k * dims[3] + j];
+                    assert!(
+                        (gv - wv).abs() < 1e-5,
+                        "pop {pop} case {case} row {k} member {m} out {j}: {gv} vs {wv}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// push_batch is observationally identical to repeated push: identical
+/// contents sampled with identical rng streams return identical batches.
+#[test]
+fn prop_push_batch_behaves_like_repeated_push() {
+    let mut rng = Rng::new(14);
+    for case in 0..100 {
+        let cap = 1 + rng.below(24);
+        let (od, ad) = (1 + rng.below(3), 1 + rng.below(2));
+        let mut a = ReplayBuffer::new(cap, od, ad);
+        let mut b = ReplayBuffer::new(cap, od, ad);
+        for _ in 0..5 {
+            let n = 1 + rng.below(2 * cap); // may wrap more than once
+            let mut obs = vec![0.0f32; n * od];
+            let mut act = vec![0.0f32; n * ad];
+            let mut rew = vec![0.0f32; n];
+            let mut nobs = vec![0.0f32; n * od];
+            let mut done = vec![0.0f32; n];
+            rng.fill_normal(&mut obs, 1.0);
+            rng.fill_normal(&mut act, 1.0);
+            rng.fill_normal(&mut rew, 1.0);
+            rng.fill_normal(&mut nobs, 1.0);
+            for d in done.iter_mut() {
+                *d = (rng.below(2) == 0) as u8 as f32;
+            }
+            a.push_batch(n, &obs, &act, &rew, &nobs, &done);
+            for r in 0..n {
+                b.push(
+                    &obs[r * od..(r + 1) * od],
+                    &act[r * ad..(r + 1) * ad],
+                    rew[r],
+                    &nobs[r * od..(r + 1) * od],
+                    done[r] > 0.5,
+                );
+            }
+        }
+        assert_eq!(a.len(), b.len(), "case {case}");
+        assert_eq!(a.total_inserted, b.total_inserted, "case {case}");
+        let batch = 1 + rng.below(8);
+        let mut ra = Rng::new(500 + case as u64);
+        let mut rb = Rng::new(500 + case as u64);
+        let (mut oa, mut aa, mut wa, mut na, mut da) = (
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch * ad],
+            vec![0.0f32; batch],
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch],
+        );
+        let (mut ob, mut ab, mut wb, mut nb, mut db) = (
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch * ad],
+            vec![0.0f32; batch],
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch],
+        );
+        for _ in 0..10 {
+            a.sample_into(&mut ra, batch, &mut oa, &mut aa, &mut wa, &mut na, &mut da);
+            b.sample_into(&mut rb, batch, &mut ob, &mut ab, &mut wb, &mut nb, &mut db);
+            assert_eq!(oa, ob, "case {case}");
+            assert_eq!(aa, ab, "case {case}");
+            assert_eq!(wa, wb, "case {case}");
+            assert_eq!(na, nb, "case {case}");
+            assert_eq!(da, db, "case {case}");
+        }
+    }
+}
+
 #[test]
 fn prop_config_roundtrip_values() {
     let mut rng = Rng::new(12);
