@@ -1,49 +1,120 @@
-//! DQN on the MinAtar-style Breakout — the pixel/discrete pipeline of the
-//! paper's Fig 2 DQN rows, run end to end: conv-net q-network (population-
-//! vectorized with the grouped-conv trick), epsilon-greedy actors on the
-//! native conv forward pass, per-agent pixel replay, periodic hard target
-//! copies inside the vectorized artifact.
+//! DQN on the MinAtar-style pixel games — the pixel/discrete pipeline of
+//! the paper's Fig 2 DQN rows, run end to end on the population-batched
+//! actor path: epsilon-greedy actors on `PopConvNet` block q-values
+//! (`PixelActorPool` threads stepping a `PixelVecEnv`), u8-frame block
+//! transport into per-agent `PixelReplayBuffer`s (one `push_batch` per
+//! run — no per-transition pushes), vectorized device update steps, and
+//! periodic parameter publishes back to the actors through the shared
+//! `ParamView`. Per-agent exploration epsilons live in the state field
+//! `eps_greedy` (the `HyperSpec::dqn` search space).
 //!
-//!     cargo run --release --example dqn_minatar -- [updates] [pop]
+//!     cargo run --release --example dqn_minatar -- [updates] [pop] [config]
+//!
+//! Config keys (`[dqn]` section, all optional — the former hardcoded
+//! exploration schedule): warmup_steps (500), eps_greedy (0.1 — written
+//! into every agent's eps_greedy state field when sample_hypers is
+//! false), sync_every (25), ratio (0.25 per-agent updates:env-steps,
+//! enforced two-sided — actor throttle + learner gate — with 0 =
+//! unthrottled), replay_capacity (20000), actor_threads (1),
+//! drain_bound (16384),
+//! sample_hypers (true = sample per-agent lr/gamma/eps_greedy from the
+//! HyperSpec::dqn priors instead).
 
-use fastpbrl::envs::minatar::Breakout;
-use fastpbrl::envs::PixelEnv;
+use fastpbrl::coordinator::hyperparams::HyperSpec;
+use fastpbrl::coordinator::population::Population;
+use fastpbrl::data::pipeline::{PixelActorConfig, PixelActorPool, PixelTransitionBlock, Throttle};
 use fastpbrl::manifest::{Dtype, Manifest};
-use fastpbrl::nn::from_state::convnet_from_state;
-use fastpbrl::replay::PixelReplayBuffer;
-use fastpbrl::runtime::{Runtime, TrainState};
+use fastpbrl::replay::{PixelReplayBuffer, RatioGate};
+use fastpbrl::runtime::Runtime;
+use fastpbrl::util::config::Config;
 use fastpbrl::util::log::CsvLogger;
 use fastpbrl::util::rng::Rng;
 
+/// Insert one drained block into per-agent replay: rows are grouped into
+/// runs that target the same buffer and each run lands as one contiguous
+/// `push_batch` (frames are already in the buffers' u8 storage format).
+/// With today's one-env-per-agent block layout every run has length 1;
+/// the grouping mirrors `Trainer::push_block` and starts paying off as
+/// soon as a block carries multiple rows per agent (multi-env actors) or
+/// replay is shared.
+fn push_block(replays: &mut [PixelReplayBuffer], block: &PixelTransitionBlock) {
+    let fl = block.frame_len;
+    let mut start = 0;
+    while start < block.n {
+        let a = block.agents[start];
+        let mut end = start + 1;
+        while end < block.n && block.agents[end] == a {
+            end += 1;
+        }
+        replays[a].push_batch(
+            end - start,
+            &block.obs[start * fl..end * fl],
+            &block.act[start..end],
+            &block.rew[start..end],
+            &block.next_obs[start * fl..end * fl],
+            &block.done[start..end],
+        );
+        start = end;
+    }
+}
+
+/// Absorb one drained block (replay insert + episode bookkeeping);
+/// returns the number of transitions it carried.
+fn absorb_block(
+    block: &PixelTransitionBlock,
+    replays: &mut [PixelReplayBuffer],
+    population: &mut Population,
+    best_return: &mut [f64],
+) -> u64 {
+    push_block(replays, block);
+    for ep in &block.episodes {
+        best_return[ep.agent] = best_return[ep.agent].max(ep.ret);
+        population.returns[ep.agent].push(ep.ret);
+    }
+    block.n as u64
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let updates: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let updates: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2_000);
     let pop: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let cfg = match args.get(2) {
+        Some(path) => Config::load(path)?,
+        None => Config::new(),
+    };
+    let warmup_steps = cfg.get_usize("dqn.warmup_steps", 500)?;
+    let eps_fallback = cfg.get_f64("dqn.eps_greedy", 0.1)? as f32;
+    let sync_every = cfg.get_usize("dqn.sync_every", 25)? as u64;
+    let ratio = cfg.get_f64("dqn.ratio", 0.25)?;
+    let replay_capacity = cfg.get_usize("dqn.replay_capacity", 20_000)?;
+    let n_actor_threads = cfg.get_usize("dqn.actor_threads", 1)?;
+    let drain_bound = cfg.get_usize("dqn.drain_bound", 16 * 1024)? as u64;
+    let sample_hypers = cfg.get_bool("dqn.sample_hypers", true)?;
 
     let manifest = Manifest::load("artifacts")?;
     let art = manifest.find("dqn", "minatar", pop, Some(1))?.clone();
     let (h, w, c) = art.env_desc.frame.expect("pixel artifact");
-    let n_actions = art.env_desc.n_actions;
     let frame_len = h * w * c;
     let batch = art.batch;
 
     let rt = Runtime::cpu()?;
     let exe = rt.load(&art)?;
     let mut rng = Rng::new(5);
-    let mut ts = TrainState::init(&rt, &art, &mut rng, 13)?;
-
-    let mut envs: Vec<Breakout> = (0..pop).map(|_| Breakout::new()).collect();
-    let mut replays: Vec<PixelReplayBuffer> =
-        (0..pop).map(|_| PixelReplayBuffer::new(20_000, frame_len)).collect();
-    let mut obs: Vec<Vec<f32>> = (0..pop).map(|_| vec![0.0; frame_len]).collect();
-    let mut next_obs = vec![0.0f32; frame_len];
-    for (i, env) in envs.iter_mut().enumerate() {
-        env.reset(&mut rng, &mut obs[i]);
+    let hyper_spec = if sample_hypers { Some(HyperSpec::dqn()) } else { None };
+    let mut population = Population::init(&rt, &art, &mut rng, 13, hyper_spec, 10)?;
+    if !sample_hypers {
+        // The actor reads the per-agent eps_greedy state field, which the
+        // artifact bakes to a constant — make the configured epsilon
+        // authoritative when the priors are not sampled.
+        let mut host = population.view.with(|h| h.to_vec());
+        if let Ok(eps) = art.read_mut(&mut host, "eps_greedy") {
+            eps.fill(eps_fallback);
+        }
+        population.load_host(&rt, host)?;
     }
-    let host0 = ts.to_host()?;
-    let mut nets: Vec<_> = (0..pop)
-        .map(|a| convnet_from_state(&art, &host0, "q", a, (h, w, c)).unwrap())
-        .collect();
+
+    let mut replays: Vec<PixelReplayBuffer> =
+        (0..pop).map(|_| PixelReplayBuffer::new(replay_capacity, frame_len)).collect();
 
     // staging for [P, B, ...] batches
     let mut st_obs = vec![0.0f32; pop * batch * frame_len];
@@ -51,49 +122,81 @@ fn main() -> anyhow::Result<()> {
     let mut st_rew = vec![0.0f32; pop * batch];
     let mut st_next = vec![0.0f32; pop * batch * frame_len];
     let mut st_done = vec![0.0f32; pop * batch];
-    let mut q = vec![0.0f32; n_actions];
-    let mut returns = vec![0.0f64; pop];
     let mut best_return = vec![f64::NEG_INFINITY; pop];
-    let mut ep_steps = vec![0usize; pop];
     let mut csv = CsvLogger::create("results/dqn_minatar.csv",
                                     &["updates", "env_steps", "best_return"])?;
 
-    let warmup = 500usize;
-    let sync_every = 25usize;
-    let mut env_steps = 0usize;
+    // Actors: PopConvNet block inference + PixelVecEnv stepping in
+    // threads, throttled to the configured per-agent update:env ratio
+    // (Throttle counts global env steps, hence the /pop).
+    let throttle = Throttle::new();
+    let pool = PixelActorPool::spawn(
+        &art,
+        population.view.clone(),
+        PixelActorConfig {
+            env: art.env.clone(),
+            warmup_steps,
+            eps_greedy: eps_fallback,
+            seed: 5 ^ 0xAC70,
+            ratio: ratio / pop.max(1) as f64,
+            lead_steps: 4 * batch as u64 * pop as u64,
+            ..Default::default()
+        },
+        n_actor_threads,
+        throttle.clone(),
+    )?;
+
+    // Learner-side half of the ratio contract: the Throttle above stops
+    // actors from running ahead, this gate stops the learner from
+    // re-fitting a nearly static replay when actors are the bottleneck
+    // (the two-sided pairing Trainer uses). ratio = 0 disables both
+    // sides (unthrottled).
+    let mut gate = if ratio > 0.0 {
+        Some(RatioGate::new(ratio / pop.max(1) as f64, 64.0, (warmup_steps * pop) as u64))
+    } else {
+        None
+    };
+    let mut env_steps: u64 = 0;
+    let mut done_updates: u64 = 0;
+    let mut since_sync: u64 = 0;
     let start = std::time::Instant::now();
 
-    for u in 0..updates {
-        // ---- act: 4 env steps per agent per update (ratio 0.25) ---------
-        for _ in 0..4 {
-            for a in 0..pop {
-                let eps = if env_steps < warmup { 1.0 } else { 0.1 };
-                let action = if rng.uniform() < eps {
-                    rng.below(n_actions)
-                } else {
-                    nets[a].forward(&obs[a], &mut q);
-                    (0..n_actions).max_by(|&i, &j| q[i].partial_cmp(&q[j]).unwrap()).unwrap()
-                };
-                let (r, done) = envs[a].step(action, &mut rng, &mut next_obs);
-                replays[a].push(&obs[a], action, r, &next_obs, done);
-                obs[a].copy_from_slice(&next_obs);
-                returns[a] += r as f64;
-                ep_steps[a] += 1;
-                env_steps += 1;
-                if done || ep_steps[a] >= envs[a].horizon() {
-                    best_return[a] = best_return[a].max(returns[a]);
-                    returns[a] = 0.0;
-                    ep_steps[a] = 0;
-                    envs[a].reset(&mut rng, &mut obs[a]);
-                }
+    while done_updates < updates {
+        // ---- drain actor blocks into per-agent replay ----------------
+        let mut drained = 0u64;
+        while let Ok(block) = pool.rx.try_recv() {
+            let n = absorb_block(&block, &mut replays, &mut population, &mut best_return);
+            env_steps += n;
+            drained += n;
+            if let Some(g) = gate.as_mut() {
+                g.on_env_steps(n);
+            }
+            pool.recycle(block);
+            if drained >= drain_bound {
+                break; // bounded drain per iteration
             }
         }
-        if replays.iter().any(|r| r.len() < batch) {
+        let may_update = match gate.as_ref() {
+            Some(g) => g.may_update(1),
+            None => true,
+        };
+        if replays.iter().any(|r| r.len() < batch) || !may_update {
+            // replay warmup / ratio wait: park on the channel instead of
+            // busy-spinning a core against the actor threads
+            if let Ok(block) = pool.rx.recv_timeout(std::time::Duration::from_millis(5)) {
+                let n = absorb_block(&block, &mut replays, &mut population, &mut best_return);
+                env_steps += n;
+                if let Some(g) = gate.as_mut() {
+                    g.on_env_steps(n);
+                }
+                pool.recycle(block);
+            }
             continue;
         }
-        // ---- one vectorized DQN update -----------------------------------
-        for a in 0..pop {
-            replays[a].sample_into(
+
+        // ---- one vectorized DQN update -------------------------------
+        for (a, buf) in replays.iter().enumerate() {
+            buf.sample_into(
                 &mut rng,
                 batch,
                 &mut st_obs[a * batch * frame_len..(a + 1) * batch * frame_len],
@@ -116,25 +219,32 @@ fn main() -> anyhow::Result<()> {
             bufs.push(b);
         }
         let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        ts.step(&exe, &refs)?;
+        population.train_state.step(&exe, &refs)?;
+        throttle.updates.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if let Some(g) = gate.as_mut() {
+            g.on_update_steps(1);
+        }
+        done_updates += 1;
+        since_sync += 1;
 
-        // ---- parameter sync to the native actor nets ---------------------
-        if (u + 1) % sync_every == 0 {
-            let host = ts.to_host()?;
-            for (a, net) in nets.iter_mut().enumerate() {
-                *net = convnet_from_state(&art, &host, "q", a, (h, w, c))?;
-            }
+        // ---- publish parameters to the actor pool --------------------
+        if since_sync >= sync_every.max(1) || done_updates >= updates {
+            since_sync = 0;
+            // one contiguous device download, published to the ParamView;
+            // actors refresh their PopConvNet with one memcpy per field
+            population.sync_to_host()?;
             let best = best_return.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-            csv.row(&[(u + 1) as f64, env_steps as f64,
+            csv.row(&[done_updates as f64, env_steps as f64,
                       if best.is_finite() { best } else { -1.0 }])?;
         }
     }
+    pool.stop();
     csv.flush()?;
-    let host = ts.to_host()?;
+    let host = population.train_state.to_host()?;
     let loss = art.read(&host, "loss")?;
     let best = best_return.iter().copied().fold(f64::NEG_INFINITY, f64::max);
     println!(
-        "dqn_minatar: {updates} updates, {env_steps} env steps in {:.1}s; \
+        "dqn_minatar: {done_updates} updates, {env_steps} env steps in {:.1}s; \
          best episode return {best:.1}; final loss {:?}",
         start.elapsed().as_secs_f64(),
         &loss[..loss.len().min(4)]

@@ -1,0 +1,270 @@
+//! Pixel/DQN actor-path throughput: a scalar baseline — per-agent
+//! ConvNet dispatch + per-transition f32 frame clones through a message
+//! queue, i.e. what a thread-split actor/learner port of the old inline
+//! `examples/dqn_minatar.rs` loop would do with the pre-vectorization
+//! transport (the same baseline shape as `actor_throughput.rs`'s
+//! continuous A/B; the old inline loop itself was single-threaded and
+//! pushed slices directly, paying no transport at all but also
+//! overlapping nothing) — vs the population-batched PopConvNet +
+//! PixelVecEnv + PixelTransitionBlock path, at pop ∈ {1, 4, 16, 64}.
+//!
+//! Both paths run the same epsilon-greedy policy over the same MinAtar
+//! Breakout envs (artifact-sized net: conv 16x3x3 + fc 128) and end in
+//! per-agent `PixelReplayBuffer`s, so the measured difference is exactly
+//! the actor hot path: per-agent dispatch + two f32 frame clones per step
+//! vs one blocked conv forward, one batched env step, and u8-quantized
+//! `push_batch` runs.
+//!
+//! No artifacts required. Results go to
+//! `results/pixel_actor_throughput.csv` and
+//! `BENCH_pixel_actor_throughput.json`.
+
+use std::collections::VecDeque;
+
+use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
+use fastpbrl::data::pipeline::{argmax, quantize_frames, PixelTransitionBlock};
+use fastpbrl::envs::pixel_vec_env::PixelVecEnv;
+use fastpbrl::envs::{make_pixel_env, PixelEnv};
+use fastpbrl::nn::pop_mlp::PopMlp;
+use fastpbrl::nn::{Activation, ConvNet, Mlp, PopConvNet};
+use fastpbrl::replay::PixelReplayBuffer;
+use fastpbrl::util::json::{arr, num, obj, s, Json};
+use fastpbrl::util::rng::Rng;
+
+const ENV: &str = "breakout";
+const K: usize = 3;
+const FEATURES: usize = 16;
+const FC: usize = 128;
+const EPS: f64 = 0.05;
+const STEPS_PER_ITER: usize = 64;
+const REPLAY_CAP: usize = 1 << 14;
+const POPS: [usize; 4] = [1, 4, 16, 64];
+
+/// The old transport unit: two f32 frame clones per step.
+struct OldPixelTransition {
+    obs: Vec<f32>,
+    act: usize,
+    rew: f32,
+    next_obs: Vec<f32>,
+    done: bool,
+}
+
+struct Member {
+    cw: Vec<f32>,
+    cb: Vec<f32>,
+    head: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+fn random_members(rng: &mut Rng, pop: usize, c: usize, head_dims: &[usize]) -> Vec<Member> {
+    (0..pop)
+        .map(|_| {
+            let fan_in = (K * K * c) as f32;
+            let bound = (3.0 / fan_in).sqrt();
+            let mut cw = vec![0.0f32; K * K * c * FEATURES];
+            let mut cb = vec![0.0f32; FEATURES];
+            rng.fill_uniform(&mut cw, -bound, bound);
+            rng.fill_uniform(&mut cb, -0.05, 0.05);
+            let head = head_dims
+                .windows(2)
+                .map(|d| {
+                    let hb = (3.0 / d[0] as f32).sqrt();
+                    let mut w = vec![0.0f32; d[0] * d[1]];
+                    let mut b = vec![0.0f32; d[1]];
+                    rng.fill_uniform(&mut w, -hb, hb);
+                    rng.fill_uniform(&mut b, -0.05, 0.05);
+                    (w, b)
+                })
+                .collect();
+            Member { cw, cb, head }
+        })
+        .collect()
+}
+
+fn steps_per_sec(pop: usize, mean_ms: f64) -> f64 {
+    (STEPS_PER_ITER * pop) as f64 / (mean_ms / 1e3)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 15, max_seconds: 20.0 }
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut pop_rows: Vec<Json> = Vec::new();
+
+    let probe = make_pixel_env(ENV)?;
+    let (h, w, c) = probe.frame();
+    let n_actions = probe.n_actions();
+    drop(probe);
+    let frame_len = h * w * c;
+    let flat = (h - K + 1) * (w - K + 1) * FEATURES;
+    let head_dims = [flat, FC, n_actions];
+
+    for &pop in &POPS {
+        let mut rng = Rng::new(200 + pop as u64);
+        let members = random_members(&mut rng, pop, c, &head_dims);
+
+        // ---- scalar path: per-agent ConvNet + per-transition pushes ------
+        let mut nets: Vec<ConvNet> = members
+            .iter()
+            .map(|m| {
+                let mut head = Mlp::new(Activation::Relu, Activation::None);
+                for (li, d) in head_dims.windows(2).enumerate() {
+                    head.push_layer(m.head[li].0.clone(), m.head[li].1.clone(), d[0], d[1]);
+                }
+                ConvNet::new(m.cw.clone(), m.cb.clone(), K, K, c, FEATURES, h, w, head)
+            })
+            .collect();
+        let mut envs: Vec<_> = (0..pop).map(|_| make_pixel_env(ENV).unwrap()).collect();
+        let mut obs_rows: Vec<Vec<f32>> = envs
+            .iter_mut()
+            .map(|e| {
+                let mut o = vec![0.0f32; frame_len];
+                e.reset(&mut rng, &mut o);
+                o
+            })
+            .collect();
+        let mut ep_steps = vec![0usize; pop];
+        let mut q = vec![0.0f32; n_actions];
+        let mut next = vec![0.0f32; frame_len];
+        let mut queue: VecDeque<OldPixelTransition> = VecDeque::new();
+        let mut replays: Vec<PixelReplayBuffer> =
+            (0..pop).map(|_| PixelReplayBuffer::new(REPLAY_CAP, frame_len)).collect();
+        let r_scalar = bench.run(&format!("pixel_actor_scalar_p{pop}"), || {
+            for _ in 0..STEPS_PER_ITER {
+                for k in 0..pop {
+                    let action = if rng.uniform() < EPS {
+                        rng.below(n_actions)
+                    } else {
+                        nets[k].forward(&obs_rows[k], &mut q);
+                        argmax(&q)
+                    };
+                    let (rew, done) = envs[k].step(action, &mut rng, &mut next);
+                    ep_steps[k] += 1;
+                    let horizon_hit = ep_steps[k] >= envs[k].horizon();
+                    // the old transport: f32 frame clones into a message
+                    queue.push_back(OldPixelTransition {
+                        obs: obs_rows[k].clone(),
+                        act: action,
+                        rew,
+                        next_obs: next.clone(),
+                        done,
+                    });
+                    obs_rows[k].copy_from_slice(&next);
+                    if done || horizon_hit {
+                        ep_steps[k] = 0;
+                        envs[k].reset(&mut rng, &mut obs_rows[k]);
+                    }
+                }
+                // per-transition pushes, one agent at a time (round-robin
+                // order matches the block path's row order)
+                let mut agent = 0;
+                while let Some(t) = queue.pop_front() {
+                    replays[agent].push(&t.obs, t.act, t.rew, &t.next_obs, t.done);
+                    agent = (agent + 1) % pop;
+                }
+            }
+        });
+        results.push(r_scalar.clone());
+
+        // ---- batched path: PopConvNet + PixelVecEnv + block transport ----
+        let mut head = PopMlp::new(pop, Activation::Relu, Activation::None);
+        for (li, d) in head_dims.windows(2).enumerate() {
+            let mut hw = Vec::with_capacity(pop * d[0] * d[1]);
+            let mut hb = Vec::with_capacity(pop * d[1]);
+            for m in &members {
+                hw.extend_from_slice(&m.head[li].0);
+                hb.extend_from_slice(&m.head[li].1);
+            }
+            head.push_layer(hw, hb, d[0], d[1]);
+        }
+        let mut cw = Vec::with_capacity(pop * K * K * c * FEATURES);
+        let mut cb = Vec::with_capacity(pop * FEATURES);
+        for m in &members {
+            cw.extend_from_slice(&m.cw);
+            cb.extend_from_slice(&m.cb);
+        }
+        let mut pop_net = PopConvNet::new(pop, cw, cb, K, K, c, FEATURES, h, w, head);
+        let ids: Vec<usize> = (0..pop).collect();
+        let mut venv = PixelVecEnv::new(ENV, pop)?;
+        venv.reset_all(&mut rng);
+        let mut block = PixelTransitionBlock::new(0, &ids, frame_len);
+        let mut qb = vec![0.0f32; pop * n_actions];
+        let mut acts = vec![0usize; pop];
+        let mut next_b = vec![0.0f32; pop * frame_len];
+        let mut eps_ends = Vec::new();
+        let mut replays_b: Vec<PixelReplayBuffer> =
+            (0..pop).map(|_| PixelReplayBuffer::new(REPLAY_CAP, frame_len)).collect();
+        let r_batched = bench.run(&format!("pixel_actor_batched_p{pop}"), || {
+            for _ in 0..STEPS_PER_ITER {
+                pop_net.forward_block(&ids, venv.obs(), &mut qb);
+                for (k, a) in acts.iter_mut().enumerate() {
+                    *a = if rng.uniform() < EPS {
+                        rng.below(n_actions)
+                    } else {
+                        argmax(&qb[k * n_actions..(k + 1) * n_actions])
+                    };
+                }
+                quantize_frames(venv.obs(), &mut block.obs);
+                for (d, &a) in block.act.iter_mut().zip(&acts) {
+                    *d = a as i32;
+                }
+                eps_ends.clear();
+                venv.step_into(&mut rng, &acts, &mut next_b, &mut block.rew, &mut block.done,
+                               &mut eps_ends);
+                quantize_frames(&next_b, &mut block.next_obs);
+                block.n = pop;
+                for k in 0..pop {
+                    let agent = block.agents[k];
+                    replays_b[agent].push_batch(
+                        1,
+                        &block.obs[k * frame_len..(k + 1) * frame_len],
+                        &block.act[k..k + 1],
+                        &block.rew[k..k + 1],
+                        &block.next_obs[k * frame_len..(k + 1) * frame_len],
+                        &block.done[k..k + 1],
+                    );
+                }
+                block.reset();
+            }
+        });
+        results.push(r_batched.clone());
+
+        let s_sps = steps_per_sec(pop, r_scalar.mean_ms);
+        let b_sps = steps_per_sec(pop, r_batched.mean_ms);
+        pop_rows.push(obj(vec![
+            ("pop", num(pop as f64)),
+            ("scalar_steps_per_sec", num(s_sps)),
+            ("batched_steps_per_sec", num(b_sps)),
+            ("speedup", num(b_sps / s_sps)),
+        ]));
+    }
+
+    report("pixel_actor_throughput", &results)?;
+
+    println!("\nPixel actor steps/sec (batched vs scalar):");
+    println!("{:>5} {:>14} {:>14} {:>9}", "pop", "scalar", "batched", "speedup");
+    for row in &pop_rows {
+        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        println!(
+            "{:>5} {:>14.0} {:>14.0} {:>8.2}x",
+            g("pop"),
+            g("scalar_steps_per_sec"),
+            g("batched_steps_per_sec"),
+            g("speedup")
+        );
+    }
+
+    let json = obj(vec![
+        ("bench", s("pixel_actor_throughput")),
+        ("env", s(ENV)),
+        ("conv_features", num(FEATURES as f64)),
+        ("fc", num(FC as f64)),
+        ("steps_per_iter", num(STEPS_PER_ITER as f64)),
+        ("results", arr(pop_rows)),
+    ]);
+    std::fs::write("BENCH_pixel_actor_throughput.json", format!("{json}\n"))?;
+    println!("-> BENCH_pixel_actor_throughput.json");
+    Ok(())
+}

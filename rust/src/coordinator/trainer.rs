@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use crate::coordinator::population::Population;
-use crate::data::pipeline::{ActorConfig, ActorMsg, ActorPool, PolicyKind, Throttle};
+use crate::data::pipeline::{ActorConfig, ActorPool, PolicyKind, Throttle};
 use crate::manifest::{Artifact, Dtype, Manifest};
 use crate::replay::{RatioGate, ReplayBuffer};
 use crate::runtime::Runtime;
@@ -144,8 +144,10 @@ impl Trainer {
             .clone();
         anyhow::ensure!(
             artifact.env_desc.obs_dim > 0,
-            "Trainer drives continuous-control artifacts; the DQN/pixel \
-             pipeline is exercised by examples/dqn_minatar.rs"
+            "Trainer drives continuous-control artifacts; pixel/DQN \
+             artifacts run on the block pipeline's pixel path \
+             (data::pipeline::PixelActorPool + PixelReplayBuffer — see \
+             examples/dqn_minatar.rs for the learner loop)"
         );
         let rt = Runtime::cpu()?;
         let exe = rt.load(&artifact)?;
@@ -336,19 +338,15 @@ impl Trainer {
                 // ---- drain actor messages --------------------------------
                 let t0 = Instant::now();
                 let mut drained = 0u64;
-                while let Ok(msg) = pool.rx.try_recv() {
-                    match msg {
-                        ActorMsg::Batch(block) => {
-                            self.push_block(&block);
-                            self.gate.on_env_steps(block.n as u64);
-                            drained += block.n as u64;
-                            for ep in &block.episodes {
-                                self.population.returns[ep.agent].push(ep.ret);
-                                episodes += 1;
-                            }
-                            pool.recycle(block);
-                        }
+                while let Ok(block) = pool.rx.try_recv() {
+                    self.push_block(&block);
+                    self.gate.on_env_steps(block.n as u64);
+                    drained += block.n as u64;
+                    for ep in &block.episodes {
+                        self.population.returns[ep.agent].push(ep.ret);
+                        episodes += 1;
                     }
+                    pool.recycle(block);
                     if drained >= self.cfg.drain_bound {
                         break; // bounded drain per iteration
                     }

@@ -1,2 +1,5 @@
-//! Actor/learner data pipeline (paper Appendix A).
+//! Actor/learner data pipeline (paper Appendix A): block transport for
+//! the continuous-control AND pixel/DQN actor paths (see
+//! [`pipeline::BlockPool`] and its two instantiations,
+//! [`pipeline::ActorPool`] and [`pipeline::PixelActorPool`]).
 pub mod pipeline;

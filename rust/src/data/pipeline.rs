@@ -1,18 +1,33 @@
 //! Actor/learner data pipeline (paper Appendix A), vectorized over the
-//! population axis.
+//! population axis — for BOTH the continuous-control and the pixel/DQN
+//! paths, which share one block-transport substrate.
 //!
-//! Actor threads own their environment copies and a packed
-//! [`PopMlp`](crate::nn::PopMlp) policy; each iteration they forward ALL
-//! owned agents' observations as one `[n, obs_dim]` block, step a
-//! [`VecEnv`] against one `[n, act_dim]` action matrix, and publish the
-//! resulting transitions as ONE contiguous [`TransitionBlock`] message —
-//! no per-transition `Vec` clones. Blocks flow through a bounded channel
-//! (the paper's queue with a maximum size — actors block when the learner
-//! lags) and are recycled back to their actor thread after the learner
-//! drains them, so the steady-state loop is allocation-free. Actors
-//! refresh their weights from the shared [`ParamView`] whenever the
+//! Actor threads own their environment copies and a packed population
+//! network ([`PopMlp`](crate::nn::PopMlp) policies for continuous control,
+//! [`PopConvNet`](crate::nn::PopConvNet) q-nets for pixels); each
+//! iteration they forward ALL owned agents' observations as one block,
+//! step a vectorized env ([`VecEnv`] / [`PixelVecEnv`]) against one action
+//! block, and publish the resulting transitions as ONE contiguous block
+//! message — no per-transition `Vec` clones. Blocks flow through a bounded
+//! channel (the paper's queue with a maximum size — actors block when the
+//! learner lags) and are recycled back to their actor thread after the
+//! learner drains them, so the steady-state loop is allocation-free.
+//! Actors refresh their weights from the shared [`ParamView`] whenever the
 //! learner publishes a new version (non-blocking for the learner) — one
-//! contiguous copy per layer field for the whole population.
+//! contiguous copy per parameter field for the whole population.
+//!
+//! The channel + per-thread recycling lanes + stop/throttle machinery is
+//! generic over the block type ([`BlockPool`] over [`TransportBlock`]).
+//! Two instantiations exist:
+//!
+//! * [`ActorPool`] — continuous control: [`TransitionBlock`] rows of f32
+//!   obs/act, TD3/SAC action selection ([`actor_loop`]).
+//! * [`PixelActorPool`] — DQN: [`PixelTransitionBlock`] rows carrying
+//!   frames as u8 `{0,1}` planes (4x less channel bandwidth than f32, and
+//!   exactly [`PixelReplayBuffer`](crate::replay::PixelReplayBuffer)'s
+//!   storage dtype) with epsilon-greedy action selection over the block's
+//!   q-values; per-agent epsilon comes from the state field `eps_greedy`
+//!   (the `HyperSpec::dqn` space) when present.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
@@ -20,9 +35,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::population::ParamView;
+use crate::envs::pixel_vec_env::PixelVecEnv;
 use crate::envs::vec_env::{EpisodeEnd, VecEnv};
 use crate::manifest::Artifact;
-use crate::nn::from_state::pop_mlp_from_state;
+use crate::nn::from_state::{conv_field_dims, pop_convnet_from_state, pop_mlp_from_state};
 use crate::nn::mlp::Activation;
 use crate::util::rng::Rng;
 
@@ -32,6 +48,17 @@ pub struct EpisodeReport {
     pub agent: usize,
     pub ret: f64,
     pub steps: usize,
+}
+
+/// A recyclable actor→learner message. After the learner drains a block
+/// it goes back to the spawning thread's return lane for reuse; the two
+/// hooks are what the shared transport ([`BlockPool`]) needs to route and
+/// refurbish blocks without knowing their payload.
+pub trait TransportBlock: Send + 'static {
+    /// Spawning actor-thread index (the recycling route).
+    fn thread(&self) -> usize;
+    /// Clear for reuse (capacity and agent ids are kept).
+    fn reset(&mut self);
 }
 
 /// One actor iteration's transitions for all of the thread's agents, in
@@ -105,9 +132,98 @@ impl TransitionBlock {
     }
 }
 
-pub enum ActorMsg {
-    /// One actor iteration's transitions as a contiguous block.
-    Batch(TransitionBlock),
+impl TransportBlock for TransitionBlock {
+    fn thread(&self) -> usize {
+        TransitionBlock::thread(self)
+    }
+
+    fn reset(&mut self) {
+        TransitionBlock::reset(self)
+    }
+}
+
+/// The pixel path's transport unit: like [`TransitionBlock`] but frames
+/// travel as u8 `{0,1}` planes (MinAtar-style binary frames) — a 4x
+/// bandwidth saving over f32 on the actor channel, and exactly the dtype
+/// [`PixelReplayBuffer::push_batch`]
+/// (`crate::replay::PixelReplayBuffer::push_batch`) stores, so the
+/// learner-side insert is a straight memcpy.
+pub struct PixelTransitionBlock {
+    /// Spawning actor-thread index (the recycling route).
+    thread: usize,
+    /// Valid rows (row capacity is fixed at construction).
+    pub n: usize,
+    pub frame_len: usize,
+    /// Agent id per row `[rows]`; sorted runs of equal ids.
+    pub agents: Vec<usize>,
+    /// `[rows, frame_len]` u8 {0,1} planes.
+    pub obs: Vec<u8>,
+    /// `[rows]` discrete actions.
+    pub act: Vec<i32>,
+    /// `[rows]`
+    pub rew: Vec<f32>,
+    /// `[rows, frame_len]` u8 {0,1} planes.
+    pub next_obs: Vec<u8>,
+    /// `[rows]`, 0.0/1.0 (horizon cap excluded)
+    pub done: Vec<f32>,
+    /// Episodes that finished during this iteration.
+    pub episodes: Vec<EpisodeReport>,
+}
+
+impl PixelTransitionBlock {
+    /// Preallocate a block with one row per entry of `agents`.
+    pub fn new(thread: usize, agents: &[usize], frame_len: usize) -> Self {
+        let rows = agents.len();
+        PixelTransitionBlock {
+            thread,
+            n: 0,
+            frame_len,
+            agents: agents.to_vec(),
+            obs: vec![0; rows * frame_len],
+            act: vec![0; rows],
+            rew: vec![0.0; rows],
+            next_obs: vec![0; rows * frame_len],
+            done: vec![0.0; rows],
+            episodes: Vec::new(),
+        }
+    }
+
+    pub fn thread(&self) -> usize {
+        self.thread
+    }
+
+    /// Clear for reuse (capacity and agent ids are kept).
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.episodes.clear();
+    }
+
+    pub fn obs_row(&self, k: usize) -> &[u8] {
+        &self.obs[k * self.frame_len..(k + 1) * self.frame_len]
+    }
+
+    pub fn next_obs_row(&self, k: usize) -> &[u8] {
+        &self.next_obs[k * self.frame_len..(k + 1) * self.frame_len]
+    }
+}
+
+impl TransportBlock for PixelTransitionBlock {
+    fn thread(&self) -> usize {
+        PixelTransitionBlock::thread(self)
+    }
+
+    fn reset(&mut self) {
+        PixelTransitionBlock::reset(self)
+    }
+}
+
+/// Quantize f32 `{0,1}`-plane frames to the u8 wire/storage format
+/// (nonzero -> 1). `src.len()` must equal `dst.len()`.
+pub fn quantize_frames(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s != 0.0) as u8;
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -168,6 +284,43 @@ impl Default for ActorConfig {
     }
 }
 
+/// Configuration of the pixel/DQN actor loop (the discrete-action mirror
+/// of [`ActorConfig`]).
+#[derive(Clone, Debug)]
+pub struct PixelActorConfig {
+    pub env: String,
+    /// Uniform-random actions for this many initial steps per agent.
+    pub warmup_steps: usize,
+    /// Epsilon-greedy exploration rate fallback; the per-agent state field
+    /// "eps_greedy" (the `HyperSpec::dqn` search space) takes precedence
+    /// when the artifact carries it.
+    pub eps_greedy: f32,
+    /// Bounded queue size in BLOCKS (backpressure).
+    pub queue_cap: usize,
+    pub seed: u64,
+    /// Update:env-step ratio target for actor throttling (0 = unthrottled).
+    pub ratio: f64,
+    /// Extra env steps actors may run ahead of `updates / ratio`.
+    pub lead_steps: u64,
+    /// Backoff sleep while ratio-throttled, in microseconds.
+    pub throttle_sleep_us: u64,
+}
+
+impl Default for PixelActorConfig {
+    fn default() -> Self {
+        PixelActorConfig {
+            env: "minatar".into(),
+            warmup_steps: 500,
+            eps_greedy: 0.1,
+            queue_cap: 256,
+            seed: 0,
+            ratio: 0.0,
+            lead_steps: 2048,
+            throttle_sleep_us: 200,
+        }
+    }
+}
+
 /// Shared counters for actor throttling (paper Appendix A: "agents are
 /// blocked ... if the process handling the accelerator is lagging behind").
 #[derive(Clone, Default)]
@@ -183,64 +336,49 @@ impl Throttle {
         Self::default()
     }
 
-    /// May actors take another environment step?
-    pub fn may_step(&self, cfg: &ActorConfig, pop: u64) -> bool {
-        if cfg.ratio <= 0.0 {
+    /// May actors take another environment step? `warmup_total` is the
+    /// population-wide warmup step budget (steps before the ratio bites).
+    pub fn may_step_with(&self, ratio: f64, warmup_total: u64, lead_steps: u64) -> bool {
+        if ratio <= 0.0 {
             return true;
         }
         let env = self.env_steps.load(Ordering::Relaxed);
         let upd = self.updates.load(Ordering::Relaxed);
-        let warmup = cfg.warmup_steps as u64 * pop;
-        env < warmup + (upd as f64 / cfg.ratio) as u64 + cfg.lead_steps
+        env < warmup_total + (upd as f64 / ratio) as u64 + lead_steps
+    }
+
+    /// May actors take another environment step?
+    pub fn may_step(&self, cfg: &ActorConfig, pop: u64) -> bool {
+        self.may_step_with(cfg.ratio, cfg.warmup_steps as u64 * pop, cfg.lead_steps)
     }
 }
 
-pub struct ActorPool {
-    pub rx: Receiver<ActorMsg>,
+/// Actor thread pool plus its block transport, generic over the block
+/// type: a bounded channel of filled blocks (learner side: `rx`) and one
+/// bounded return lane per thread for drained blocks (the allocation-free
+/// steady state). [`ActorPool`] and [`PixelActorPool`] are its two
+/// instantiations.
+pub struct BlockPool<B: TransportBlock> {
+    pub rx: Receiver<B>,
     /// Per-thread return lanes for spent blocks (index = thread).
-    recycle: Vec<SyncSender<TransitionBlock>>,
+    recycle: Vec<SyncSender<B>>,
     stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
 }
 
-impl ActorPool {
-    /// Spawn `n_threads` actor threads covering all `artifact.pop` agents.
-    pub fn spawn(
-        artifact: &Artifact,
-        view: ParamView,
-        cfg: ActorConfig,
-        n_threads: usize,
-        throttle: Throttle,
-    ) -> anyhow::Result<ActorPool> {
-        let pop = artifact.pop;
-        let n_threads = n_threads.clamp(1, pop);
-        let (tx, rx) = std::sync::mpsc::sync_channel(cfg.queue_cap);
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::new();
-        let mut recycle = Vec::new();
-        for t in 0..n_threads {
-            let agents: Vec<usize> = (0..pop).filter(|a| a % n_threads == t).collect();
-            let (rtx, rrx) = std::sync::mpsc::sync_channel(cfg.queue_cap.max(4));
-            recycle.push(rtx);
-            let tx = tx.clone();
-            let stop2 = stop.clone();
-            let view2 = view.clone();
-            let art = artifact.clone();
-            let th = throttle.clone();
-            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
-            handles.push(std::thread::spawn(move || {
-                actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop2, th);
-            }));
-        }
-        Ok(ActorPool { rx, recycle, stop, handles })
-    }
+/// The continuous-control actor pool ([`TransitionBlock`] transport).
+pub type ActorPool = BlockPool<TransitionBlock>;
 
+/// The pixel/DQN actor pool ([`PixelTransitionBlock`] transport).
+pub type PixelActorPool = BlockPool<PixelTransitionBlock>;
+
+impl<B: TransportBlock> BlockPool<B> {
     /// Hand a drained block back to its actor thread for reuse (the
     /// allocation-free steady state). Dropped silently if the thread is
     /// gone or its return lane is full — the actor then allocates afresh.
-    pub fn recycle(&self, mut block: TransitionBlock) {
+    pub fn recycle(&self, mut block: B) {
         block.reset();
-        if let Some(lane) = self.recycle.get(block.thread) {
+        if let Some(lane) = self.recycle.get(block.thread()) {
             let _ = lane.try_send(block);
         }
     }
@@ -255,14 +393,106 @@ impl ActorPool {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Shared pool scaffolding: partition `pop` agents round-robin over
+/// `n_threads`, wire the block channel + per-thread recycling lanes, and
+/// let `spawn_one` start each thread's loop.
+fn spawn_block_pool<B: TransportBlock>(
+    pop: usize,
+    n_threads: usize,
+    queue_cap: usize,
+    spawn_one: impl Fn(usize, Vec<usize>, SyncSender<B>, Receiver<B>, Arc<AtomicBool>)
+        -> JoinHandle<()>,
+) -> BlockPool<B> {
+    let n_threads = n_threads.clamp(1, pop);
+    let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    let mut recycle = Vec::new();
+    for t in 0..n_threads {
+        let agents: Vec<usize> = (0..pop).filter(|a| a % n_threads == t).collect();
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(queue_cap.max(4));
+        recycle.push(rtx);
+        handles.push(spawn_one(t, agents, tx.clone(), rrx, stop.clone()));
+    }
+    BlockPool { rx, recycle, stop, handles }
+}
+
+impl BlockPool<TransitionBlock> {
+    /// Spawn `n_threads` continuous-control actor threads covering all
+    /// `artifact.pop` agents.
+    pub fn spawn(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: ActorConfig,
+        n_threads: usize,
+        throttle: Throttle,
+    ) -> anyhow::Result<ActorPool> {
+        // Validate the env/artifact pairing (metadata only — no weight
+        // copies) on the caller's thread: a mismatch must surface as
+        // this Result, not as a panic inside a spawned actor thread
+        // (which the learner would only ever see as a silently idle
+        // channel).
+        let probe = VecEnv::new(&cfg.env, 1)?;
+        let out = validate_mlp_chain(artifact, "policy", probe.obs_dim())?;
+        let want = match cfg.policy {
+            PolicyKind::Td3 => probe.act_dim(),
+            PolicyKind::Sac => 2 * probe.act_dim(), // [mu, log_std] head
+        };
+        anyhow::ensure!(
+            out == want,
+            "artifact {} policy outputs {out} dims but env {:?} needs {want} for a {:?} head",
+            artifact.name,
+            cfg.env,
+            cfg.policy
+        );
+        Ok(spawn_block_pool(artifact.pop, n_threads, cfg.queue_cap, |t, agents, tx, rrx, stop| {
+            let view2 = view.clone();
+            let art = artifact.clone();
+            let th = throttle.clone();
+            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
+            std::thread::spawn(move || {
+                actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop, th);
+            })
+        }))
+    }
+}
+
+impl BlockPool<PixelTransitionBlock> {
+    /// Spawn `n_threads` pixel/DQN actor threads covering all
+    /// `artifact.pop` agents.
+    pub fn spawn(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: PixelActorConfig,
+        n_threads: usize,
+        throttle: Throttle,
+    ) -> anyhow::Result<PixelActorPool> {
+        // Validate the env name and artifact layout on the caller's
+        // thread (e.g. the 84x84 Atari conv stack stores q/conv0/* and
+        // q/conv1/*, not q/conv/* — that must error here, not panic in a
+        // spawned thread and leave the learner polling an idle channel).
+        let probe = PixelVecEnv::new(&cfg.env, 1)?;
+        validate_pixel_layout(artifact, probe.frame(), probe.n_actions())?;
+        Ok(spawn_block_pool(artifact.pop, n_threads, cfg.queue_cap, |t, agents, tx, rrx, stop| {
+            let view2 = view.clone();
+            let art = artifact.clone();
+            let th = throttle.clone();
+            let cfg2 =
+                PixelActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
+            std::thread::spawn(move || {
+                pixel_actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop, th);
+            })
+        }))
+    }
+}
+
 fn actor_loop(
     artifact: &Artifact,
     view: ParamView,
     cfg: &ActorConfig,
     thread: usize,
     agents: &[usize],
-    tx: SyncSender<ActorMsg>,
+    tx: SyncSender<TransitionBlock>,
     recycle: Receiver<TransitionBlock>,
     stop: Arc<AtomicBool>,
     throttle: Throttle,
@@ -285,7 +515,7 @@ fn actor_loop(
     let mut acts = vec![0.0f32; n * act_dim];
     let mut noise: Vec<f32> = agents
         .iter()
-        .map(|&a| expl_noise_for(artifact, &host, a, cfg.expl_noise))
+        .map(|&a| hyper_for(artifact, &host, "expl_noise", a, cfg.expl_noise))
         .collect();
     let mut episodes: Vec<EpisodeEnd> = Vec::new();
     let mut block = TransitionBlock::new(thread, agents, obs_dim, act_dim);
@@ -310,7 +540,7 @@ fn actor_loop(
             version = v2;
             let _ = policy.sync_from_state(artifact, &host, "policy");
             for (k, &a) in agents.iter().enumerate() {
-                noise[k] = expl_noise_for(artifact, &host, a, cfg.expl_noise);
+                noise[k] = hyper_for(artifact, &host, "expl_noise", a, cfg.expl_noise);
             }
         }
         // Action selection for the whole block.
@@ -345,7 +575,7 @@ fn actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
-        if send_blocking(&tx, ActorMsg::Batch(block), &stop).is_err() {
+        if send_blocking(&tx, block, &stop).is_err() {
             break;
         }
         // Reuse a drained block when the learner returned one; allocate
@@ -357,9 +587,173 @@ fn actor_loop(
     }
 }
 
-/// Per-agent exploration noise from the state when the field exists.
-fn expl_noise_for(artifact: &Artifact, host: &[f32], agent: usize, fallback: f32) -> f32 {
-    match artifact.field("expl_noise") {
+/// The pixel/DQN mirror of [`actor_loop`]: PopConvNet block q-values,
+/// epsilon-greedy selection, PixelVecEnv stepping, and u8-frame block
+/// transport.
+fn pixel_actor_loop(
+    artifact: &Artifact,
+    view: ParamView,
+    cfg: &PixelActorConfig,
+    thread: usize,
+    agents: &[usize],
+    tx: SyncSender<PixelTransitionBlock>,
+    recycle: Receiver<PixelTransitionBlock>,
+    stop: Arc<AtomicBool>,
+    throttle: Throttle,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let n = agents.len();
+    let mut venv = PixelVecEnv::new(&cfg.env, n).unwrap();
+    let frame = venv.frame();
+    let frame_len = venv.frame_len();
+    let mut host = Vec::new();
+    let mut version = view.fetch_if_newer(0, &mut host);
+    let mut qnet = pop_convnet_from_state(artifact, &host, "q", frame).unwrap();
+
+    let n_actions = qnet.out_dim();
+    let mut q = vec![0.0f32; n * n_actions];
+    let mut acts = vec![0usize; n];
+    let mut next_obs = vec![0.0f32; n * frame_len];
+    let mut eps: Vec<f32> = agents
+        .iter()
+        .map(|&a| hyper_for(artifact, &host, "eps_greedy", a, cfg.eps_greedy))
+        .collect();
+    let mut episodes: Vec<EpisodeEnd> = Vec::new();
+    let mut block = PixelTransitionBlock::new(thread, agents, frame_len);
+    venv.reset_all(&mut rng);
+
+    let mut iters: usize = 0;
+    let warmup_total = cfg.warmup_steps as u64 * artifact.pop as u64;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Ratio throttling (paper Appendix A blocking rule).
+        if !throttle.may_step_with(cfg.ratio, warmup_total, cfg.lead_steps) {
+            std::thread::sleep(std::time::Duration::from_micros(cfg.throttle_sleep_us));
+            continue;
+        }
+        // Non-blocking parameter refresh: one contiguous copy for the
+        // whole population's conv filters and per head layer field.
+        let v2 = view.fetch_if_newer(version, &mut host);
+        if v2 > version {
+            version = v2;
+            let _ = qnet.sync_from_state(artifact, &host, "q");
+            for (k, &a) in agents.iter().enumerate() {
+                eps[k] = hyper_for(artifact, &host, "eps_greedy", a, cfg.eps_greedy);
+            }
+        }
+        // Epsilon-greedy action selection over the block's q-values.
+        if iters < cfg.warmup_steps {
+            for a in acts.iter_mut() {
+                *a = rng.below(n_actions);
+            }
+        } else {
+            qnet.forward_block(agents, venv.obs(), &mut q);
+            for k in 0..n {
+                acts[k] = if rng.uniform() < eps[k] as f64 {
+                    rng.below(n_actions)
+                } else {
+                    argmax(&q[k * n_actions..(k + 1) * n_actions])
+                };
+            }
+        }
+        // Record the pre-step frames (quantized to the u8 wire format),
+        // step every env, then quantize the outcome frames.
+        quantize_frames(venv.obs(), &mut block.obs);
+        for (d, &a) in block.act.iter_mut().zip(&acts) {
+            *d = a as i32;
+        }
+        episodes.clear();
+        venv.step_into(&mut rng, &acts, &mut next_obs, &mut block.rew, &mut block.done,
+                       &mut episodes);
+        quantize_frames(&next_obs, &mut block.next_obs);
+        block.n = n;
+        for e in &episodes {
+            block.episodes.push(EpisodeReport {
+                agent: agents[e.slot],
+                ret: e.ret,
+                steps: e.steps,
+            });
+        }
+        iters += 1;
+        throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
+        if send_blocking(&tx, block, &stop).is_err() {
+            break;
+        }
+        block = match recycle.try_recv() {
+            Ok(b) => b,
+            Err(_) => PixelTransitionBlock::new(thread, agents, frame_len),
+        };
+    }
+}
+
+/// Metadata-only walk of the packed MLP chain `{prefix}/w{li}`
+/// (rank-3 `[P, in, out]` fields, consistent dim chain from `in_dim`);
+/// returns the final output dim. Shared by both spawn validations.
+fn validate_mlp_chain(artifact: &Artifact, prefix: &str, in_dim: usize) -> anyhow::Result<usize> {
+    let mut dim = in_dim;
+    let mut li = 0;
+    while let Ok(lw) = artifact.field(&format!("{prefix}/w{li}")) {
+        anyhow::ensure!(lw.shape.len() == 3, "{prefix}/w{li}: expected [P, in, out]");
+        anyhow::ensure!(
+            lw.shape[0] == artifact.pop,
+            "{prefix}/w{li}: leading axis {} != pop {}",
+            lw.shape[0],
+            artifact.pop
+        );
+        anyhow::ensure!(
+            lw.shape[1] == dim,
+            "{prefix}/w{li}: input dim {} != expected {dim}",
+            lw.shape[1]
+        );
+        dim = lw.shape[2];
+        li += 1;
+    }
+    anyhow::ensure!(li > 0, "artifact {} has no {prefix} layers", artifact.name);
+    Ok(dim)
+}
+
+/// Metadata-only check that `artifact` carries a MinAtar-style DQN
+/// layout (`q/conv/*` + a `q/head/*` chain) compatible with the env's
+/// frame shape and action count — no weight copies, so pairing mistakes
+/// surface as cheap spawn-time errors instead of panics in actor
+/// threads. The conv invariant itself lives in
+/// [`conv_field_dims`](crate::nn::from_state::conv_field_dims).
+fn validate_pixel_layout(
+    artifact: &Artifact,
+    frame: (usize, usize, usize),
+    n_actions: usize,
+) -> anyhow::Result<()> {
+    let (h, wd, _) = frame;
+    let (kh, kw, feats) = conv_field_dims(artifact, "q", frame)?;
+    let flat = (h - kh + 1) * (wd - kw + 1) * feats;
+    let out = validate_mlp_chain(artifact, "q/head", flat)?;
+    anyhow::ensure!(
+        out == n_actions,
+        "artifact {} q-head outputs {out} q-values but the env has {n_actions} actions",
+        artifact.name
+    );
+    Ok(())
+}
+
+/// Greedy argmax over one row of q-values (first index wins ties) — the
+/// action-selection helper of the pixel actor loop, shared with the
+/// pixel throughput bench so both paths break ties identically.
+pub fn argmax(q: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in q.iter().enumerate().skip(1) {
+        if v > q[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-agent hyperparameter from the state when the field exists (e.g.
+/// "expl_noise" for TD3 actors, "eps_greedy" for DQN actors).
+fn hyper_for(artifact: &Artifact, host: &[f32], name: &str, agent: usize, fallback: f32) -> f32 {
+    match artifact.field(name) {
         Ok(f) if f.per_agent && agent < f.shape[0] && !host.is_empty() => {
             host[f.offset + agent * f.agent_stride()]
         }
@@ -388,11 +782,7 @@ fn select_action(kind: PolicyKind, raw: &[f32], act: &mut [f32], noise: f32, rng
 
 /// Bounded-channel send that keeps checking the stop flag (so shutdown
 /// never deadlocks against a full queue).
-fn send_blocking(
-    tx: &SyncSender<ActorMsg>,
-    mut msg: ActorMsg,
-    stop: &AtomicBool,
-) -> Result<(), ()> {
+fn send_blocking<T>(tx: &SyncSender<T>, mut msg: T, stop: &AtomicBool) -> Result<(), ()> {
     loop {
         match tx.try_send(msg) {
             Ok(()) => return Ok(()),
@@ -442,6 +832,13 @@ mod tests {
     }
 
     #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        assert_eq!(argmax(&[0.0, -1.0, 7.0]), 2);
+    }
+
+    #[test]
     fn transition_block_rows_and_recycling_reset() {
         let agents = [2usize, 5, 7];
         let mut b = TransitionBlock::new(1, &agents, 2, 1);
@@ -456,6 +853,25 @@ mod tests {
         assert_eq!(b.n, 0);
         assert!(b.episodes.is_empty());
         assert_eq!(b.agents, &agents); // ids survive recycling
+    }
+
+    #[test]
+    fn pixel_block_quantizes_and_recycles() {
+        let agents = [0usize, 3];
+        let mut b = PixelTransitionBlock::new(2, &agents, 4);
+        assert_eq!(b.thread(), 2);
+        // quantization: any nonzero plane value -> 1
+        quantize_frames(&[0.0, 1.0, 0.5, 0.0, 1.0, 0.0, 0.0, 2.0], &mut b.obs);
+        assert_eq!(b.obs, vec![0, 1, 1, 0, 1, 0, 0, 1]);
+        assert_eq!(b.obs_row(1), &[1, 0, 0, 1]);
+        b.act.copy_from_slice(&[2, 0]);
+        b.n = 2;
+        b.episodes.push(EpisodeReport { agent: 3, ret: 4.0, steps: 9 });
+        b.reset();
+        assert_eq!(b.n, 0);
+        assert!(b.episodes.is_empty());
+        assert_eq!(b.agents, &agents); // ids survive recycling
+        assert_eq!(b.next_obs_row(0), &[0, 0, 0, 0]);
     }
 
     /// Actors must stall within `lead_steps` of the ratio target and
@@ -489,6 +905,11 @@ mod tests {
         // unthrottled config never stalls
         let free = ActorConfig { ratio: 0.0, ..Default::default() };
         assert!(th.may_step(&free, 1));
+        // the raw form (used by the pixel loop) agrees with the cfg form
+        assert_eq!(
+            th.may_step(&cfg, 1),
+            th.may_step_with(cfg.ratio, 0, cfg.lead_steps)
+        );
     }
 
     /// Closed loop of Throttle (actor side) against RatioGate (learner

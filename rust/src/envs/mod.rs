@@ -14,14 +14,19 @@
 //! * [`minatar`]: a MinAtar-style 10x10x4 Breakout for the DQN pipeline.
 //! * [`vec_env`]: batched stepping of n env copies over contiguous
 //!   `[n, obs_dim]` / `[n, act_dim]` blocks (the actor fast path).
+//! * [`pixel_vec_env`]: the same block contract for discrete-action
+//!   [`PixelEnv`]s — a `[n]` action vector against `[n, H*W*C]` frame
+//!   blocks with per-slot auto-reset (the pixel/DQN actor fast path).
 
 pub mod locomotion;
 pub mod minatar;
 pub mod minatar_extra;
 pub mod normalize;
 pub mod pendulum;
+pub mod pixel_vec_env;
 pub mod vec_env;
 
+pub use pixel_vec_env::PixelVecEnv;
 pub use vec_env::{EpisodeEnd, VecEnv};
 
 use crate::util::rng::Rng;

@@ -16,6 +16,11 @@
 //!   actors, PBT/CEM/DvD controllers, and executes the lowered update
 //!   steps through PJRT with device-resident state.
 
+// Block-structured hot paths (replay inserts/samples, vectorized env
+// steps, conv kernels) pass their parallel `[n, ...]` field slices as
+// separate arguments by design; the argument-count lint fights that idiom.
+#![allow(clippy::too_many_arguments)]
+
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;

@@ -1,85 +1,54 @@
 //! Conv-net forward pass matching `python/compile/networks.py::dqn_apply`
-//! (one population member): 3x3 VALID conv (NHWC/HWIO) + relu, flatten,
-//! then an MLP head. Used by DQN actors on the MinAtar-style env.
+//! for one population member: 3x3 VALID conv (NHWC/HWIO) + relu, flatten,
+//! then an MLP head.
+//!
+//! [`ConvNet`] is the P=1 facade over the population-batched
+//! [`PopConvNet`](crate::nn::pop_conv::PopConvNet) — the same conv kernel
+//! and packed head run both paths, so scalar and block inference cannot
+//! drift apart.
 
 use crate::nn::mlp::Mlp;
+use crate::nn::pop_conv::PopConvNet;
 
+/// One population member's DQN conv net — a scalar facade over
+/// [`PopConvNet`] with population size 1.
 #[derive(Clone, Debug)]
 pub struct ConvNet {
-    /// Conv filter, HWIO layout `[kh, kw, in_ch, features]` flattened.
-    w: Vec<f32>,
-    b: Vec<f32>,
-    kh: usize,
-    kw: usize,
-    in_ch: usize,
-    features: usize,
-    /// Input frame H, W.
-    h: usize,
-    wd: usize,
-    pub head: Mlp,
-    conv_out: Vec<f32>,
+    inner: PopConvNet,
 }
 
 impl ConvNet {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(w: Vec<f32>, b: Vec<f32>, kh: usize, kw: usize, in_ch: usize,
-               features: usize, h: usize, wd: usize, head: Mlp) -> Self {
-        assert_eq!(w.len(), kh * kw * in_ch * features, "conv filter size");
-        assert_eq!(b.len(), features, "conv bias size");
-        let (ho, wo) = (h - kh + 1, wd - kw + 1);
-        assert_eq!(head.in_dim(), ho * wo * features, "head input dim");
-        ConvNet { w, b, kh, kw, in_ch, features, h, wd, head,
-                  conv_out: vec![0.0; ho * wo * features] }
+    pub fn new(
+        w: Vec<f32>,
+        b: Vec<f32>,
+        kh: usize,
+        kw: usize,
+        in_ch: usize,
+        features: usize,
+        h: usize,
+        wd: usize,
+        head: Mlp,
+    ) -> Self {
+        ConvNet {
+            inner: PopConvNet::new(1, w, b, kh, kw, in_ch, features, h, wd, head.into_pop_mlp()),
+        }
     }
 
     pub fn out_hw(&self) -> (usize, usize) {
-        (self.h - self.kh + 1, self.wd - self.kw + 1)
+        self.inner.out_hw()
     }
 
     pub fn set_conv(&mut self, w: &[f32], b: &[f32]) {
-        assert_eq!(w.len(), self.w.len());
-        assert_eq!(b.len(), self.b.len());
-        self.w.copy_from_slice(w);
-        self.b.copy_from_slice(b);
+        self.inner.set_member_conv(0, w, b);
     }
 
     /// Forward one frame `[H, W, C]` (flattened HWC) -> q-values.
     pub fn forward(&mut self, frame: &[f32], out: &mut [f32]) {
-        assert_eq!(frame.len(), self.h * self.wd * self.in_ch, "frame size");
-        let (ho, wo) = self.out_hw();
-        let f = self.features;
-        // VALID conv + relu, NHWC x HWIO.
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let dst = &mut self.conv_out[(oy * wo + ox) * f..(oy * wo + ox + 1) * f];
-                dst.copy_from_slice(&self.b);
-                for ky in 0..self.kh {
-                    for kx in 0..self.kw {
-                        let iy = oy + ky;
-                        let ix = ox + kx;
-                        let px = &frame[(iy * self.wd + ix) * self.in_ch..];
-                        for c in 0..self.in_ch {
-                            let xv = px[c];
-                            if xv == 0.0 {
-                                continue; // sparse binary frames: skip zeros
-                            }
-                            let wrow = &self.w[((ky * self.kw + kx) * self.in_ch + c) * f..];
-                            for (d, &wv) in dst.iter_mut().zip(&wrow[..f]) {
-                                *d += xv * wv;
-                            }
-                        }
-                    }
-                }
-                for d in dst.iter_mut() {
-                    *d = d.max(0.0);
-                }
-            }
-        }
-        self.head.forward(&self.conv_out, out);
+        self.inner.forward_block(&[0], frame, out);
     }
 
     pub fn forward_vec(&mut self, frame: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; self.head.out_dim()];
+        let mut out = vec![0.0; self.inner.out_dim()];
         self.forward(frame, &mut out);
         out
     }
@@ -131,5 +100,15 @@ mod tests {
         head.push_layer(vec![1.0], vec![0.0], 1, 1);
         let mut net = ConvNet::new(w, b, 1, 1, 1, 1, 1, 1, head);
         assert_eq!(net.forward_vec(&[5.0])[0], 0.0);
+    }
+
+    #[test]
+    fn set_conv_updates_output() {
+        let mut head = Mlp::new(Activation::Relu, Activation::None);
+        head.push_layer(vec![1.0], vec![0.0], 1, 1);
+        let mut net = ConvNet::new(vec![1.0], vec![0.0], 1, 1, 1, 1, 1, 1, head);
+        assert!((net.forward_vec(&[2.0])[0] - 2.0).abs() < 1e-6);
+        net.set_conv(&[3.0], &[1.0]);
+        assert!((net.forward_vec(&[2.0])[0] - 7.0).abs() < 1e-6);
     }
 }

@@ -5,6 +5,7 @@
 use crate::manifest::Artifact;
 use crate::nn::conv::ConvNet;
 use crate::nn::mlp::{Activation, Mlp};
+use crate::nn::pop_conv::PopConvNet;
 use crate::nn::pop_mlp::PopMlp;
 
 /// Extract agent `agent`'s MLP with the given field prefix
@@ -108,6 +109,61 @@ pub fn convnet_from_state(
     let head = mlp_from_state(artifact, state, &format!("{prefix}/head"), agent,
                               Activation::Relu, Activation::None)?;
     Ok(ConvNet::new(w, b, kh, kw, in_ch, feats, h, wd, head))
+}
+
+/// Metadata-only validation of a packed conv filter field
+/// `{prefix}/conv/w` against a frame `[h, w, c]`; returns
+/// `(kh, kw, features)`. This is THE layout invariant for conv nets —
+/// shared by [`pop_convnet_from_state`] and the pipeline's spawn-time
+/// validation so the check lives exactly once.
+pub fn conv_field_dims(
+    artifact: &Artifact,
+    prefix: &str,
+    frame: (usize, usize, usize),
+) -> anyhow::Result<(usize, usize, usize)> {
+    let (h, wd, c) = frame;
+    let name = format!("{prefix}/conv/w");
+    let wf = artifact.field(&name)?;
+    anyhow::ensure!(wf.shape.len() == 5, "{name}: conv filter must be [P,kh,kw,C,F]");
+    anyhow::ensure!(
+        wf.shape[0] == artifact.pop,
+        "{name}: leading axis {} != pop {}",
+        wf.shape[0],
+        artifact.pop
+    );
+    let (kh, kw, in_ch, feats) = (wf.shape[1], wf.shape[2], wf.shape[3], wf.shape[4]);
+    anyhow::ensure!(in_ch == c, "{name}: conv in_ch {in_ch} != frame channels {c}");
+    anyhow::ensure!(
+        kh <= h && kw <= wd,
+        "{name}: kernel {kh}x{kw} larger than frame {h}x{wd}"
+    );
+    Ok((kh, kw, feats))
+}
+
+/// Build the WHOLE population's DQN conv net in packed form (fields
+/// `{prefix}/conv/*` with filters `[P, kh, kw, C, F]` plus the packed
+/// `{prefix}/head/*` MLP), for frame `[h, w, c]` — one contiguous read
+/// per manifest field, no per-agent strided copies. Refresh it later with
+/// [`PopConvNet::sync_from_state`].
+pub fn pop_convnet_from_state(
+    artifact: &Artifact,
+    state: &[f32],
+    prefix: &str,
+    frame: (usize, usize, usize),
+) -> anyhow::Result<PopConvNet> {
+    let (h, wd, c) = frame;
+    let (kh, kw, feats) = conv_field_dims(artifact, prefix, frame)?;
+    let w = artifact.read(state, &format!("{prefix}/conv/w"))?.to_vec();
+    let b = artifact.read(state, &format!("{prefix}/conv/b"))?.to_vec();
+    let head = pop_mlp_from_state(artifact, state, &format!("{prefix}/head"),
+                                  Activation::Relu, Activation::None)?;
+    let flat = (h - kh + 1) * (wd - kw + 1) * feats;
+    anyhow::ensure!(
+        head.in_dim() == flat,
+        "{prefix}/head input dim {} != conv output dim {flat} (frame {h}x{wd}x{c})",
+        head.in_dim()
+    );
+    Ok(PopConvNet::new(artifact.pop, w, b, kh, kw, c, feats, h, wd, head))
 }
 
 /// The deterministic-policy activation pair per algorithm.

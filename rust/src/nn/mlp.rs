@@ -84,6 +84,12 @@ impl Mlp {
         self.forward(obs, &mut out);
         out
     }
+
+    /// Unwrap into the inner one-member [`PopMlp`] (e.g. to serve as the
+    /// head of a scalar conv net built on the population path).
+    pub fn into_pop_mlp(self) -> PopMlp {
+        self.inner
+    }
 }
 
 /// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out],

@@ -7,16 +7,21 @@
 //! manifest) and runs a native Rust forward pass whose numerics are tested
 //! against the AOT-lowered `*fwd` artifacts (see `rust/tests/`).
 //!
-//! The population-batched [`PopMlp`] is the primary actor-side network:
-//! it keeps all P members' weights packed `[P, in, out]` (the manifest
-//! layout) and forwards a whole `[n_agents, obs_dim]` observation block in
-//! one call. The scalar [`Mlp`] is its one-member special case.
+//! The population-batched nets are the primary actor-side networks:
+//! [`PopMlp`] keeps all P members' MLP weights packed `[P, in, out]` and
+//! [`PopConvNet`] keeps all P conv filters packed `[P, kh, kw, C, F]`
+//! (both exactly the manifest layout, so a parameter sync is one
+//! contiguous copy per field), and each forwards a whole `[n, ...]`
+//! observation/frame block in one call. The scalar [`Mlp`] and
+//! [`ConvNet`] are their one-member special cases.
 
 pub mod conv;
 pub mod from_state;
 pub mod mlp;
+pub mod pop_conv;
 pub mod pop_mlp;
 
 pub use conv::ConvNet;
 pub use mlp::{Activation, Mlp};
+pub use pop_conv::PopConvNet;
 pub use pop_mlp::PopMlp;

@@ -1,0 +1,425 @@
+//! Population-batched conv-net inference for the pixel/DQN actor hot path.
+//!
+//! # Layout contract
+//!
+//! [`PopConvNet`] packs every member's conv filter in structure-of-arrays
+//! form: `w: f32[P, kh, kw, in_ch, features]` (member-major HWIO per
+//! member) and `b: f32[P, features]` — byte-identical to the flat
+//! train-state fields `{prefix}/conv/w` / `{prefix}/conv/b` that
+//! `python/compile/networks.py::conv_fields` serializes into the manifest.
+//! The q-head is a packed [`PopMlp`] over the `{prefix}/head/*` fields.
+//! Because the packing matches the manifest layout exactly,
+//! [`PopConvNet::sync_from_state`] refreshes ALL members with one
+//! contiguous copy per field — replacing the per-sync
+//! `convnet_from_state` reallocation (P strided per-agent reads plus P
+//! fresh `Vec`s) the scalar path needed.
+//!
+//! # Forward
+//!
+//! [`PopConvNet::forward_block`] forwards an `[n, H*W*C]` frame block in
+//! one call; row `k` uses member `members[k]`'s filter and head weights.
+//! Consecutive rows owned by the same member are convolved back to back
+//! with that member's filter hot in cache, then the whole `[n, flat]`
+//! activation block goes through [`PopMlp::forward_block`] in one pass.
+//! The scalar [`ConvNet`](crate::nn::conv::ConvNet) is the P=1 special
+//! case and delegates here.
+
+use crate::manifest::Artifact;
+use crate::nn::pop_mlp::PopMlp;
+
+/// VALID conv + relu of ONE HWC frame against ONE HWIO filter:
+/// `frame: [h, wd, in_ch]` flat, `w: [kh, kw, in_ch, f]` flat,
+/// `out: [ho, wo, f]` flat. Zero input pixels are skipped (MinAtar-style
+/// frames are sparse binary planes, so most lanes are dead).
+pub fn conv2d_valid_relu(
+    w: &[f32],
+    b: &[f32],
+    frame: &[f32],
+    out: &mut [f32],
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    f: usize,
+    h: usize,
+    wd: usize,
+) {
+    let (ho, wo) = (h - kh + 1, wd - kw + 1);
+    debug_assert_eq!(frame.len(), h * wd * in_ch);
+    debug_assert_eq!(out.len(), ho * wo * f);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let dst = &mut out[(oy * wo + ox) * f..(oy * wo + ox + 1) * f];
+            dst.copy_from_slice(b);
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let iy = oy + ky;
+                    let ix = ox + kx;
+                    let px = &frame[(iy * wd + ix) * in_ch..];
+                    for c in 0..in_ch {
+                        let xv = px[c];
+                        if xv == 0.0 {
+                            continue; // sparse binary frames: skip zeros
+                        }
+                        let wrow = &w[((ky * kw + kx) * in_ch + c) * f..];
+                        for (d, &wv) in dst.iter_mut().zip(&wrow[..f]) {
+                            *d += xv * wv;
+                        }
+                    }
+                }
+            }
+            for d in dst.iter_mut() {
+                *d = d.max(0.0);
+            }
+        }
+    }
+}
+
+/// All population members' DQN conv nets in one packed
+/// structure-of-arrays net (conv filter bank + [`PopMlp`] q-head).
+#[derive(Clone, Debug)]
+pub struct PopConvNet {
+    pop: usize,
+    /// `[P, kh, kw, in_ch, features]` flat, member-major (manifest layout).
+    w: Vec<f32>,
+    /// `[P, features]` flat.
+    b: Vec<f32>,
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    features: usize,
+    /// Input frame H, W.
+    h: usize,
+    wd: usize,
+    pub head: PopMlp,
+    /// Conv activation scratch `[n, ho*wo*features]`, grown on demand.
+    conv_out: Vec<f32>,
+}
+
+impl PopConvNet {
+    pub fn new(
+        pop: usize,
+        w: Vec<f32>,
+        b: Vec<f32>,
+        kh: usize,
+        kw: usize,
+        in_ch: usize,
+        features: usize,
+        h: usize,
+        wd: usize,
+        head: PopMlp,
+    ) -> Self {
+        assert!(pop > 0, "population must be non-empty");
+        assert_eq!(w.len(), pop * kh * kw * in_ch * features, "conv filter size");
+        assert_eq!(b.len(), pop * features, "conv bias size");
+        assert_eq!(head.pop(), pop, "head population mismatch");
+        let (ho, wo) = (h - kh + 1, wd - kw + 1);
+        assert_eq!(head.in_dim(), ho * wo * features, "head input dim");
+        PopConvNet { pop, w, b, kh, kw, in_ch, features, h, wd, head, conv_out: Vec::new() }
+    }
+
+    pub fn pop(&self) -> usize {
+        self.pop
+    }
+
+    /// Input frame length `H * W * C`.
+    pub fn frame_len(&self) -> usize {
+        self.h * self.wd * self.in_ch
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        (self.h - self.kh + 1, self.wd - self.kw + 1)
+    }
+
+    /// Q-values per frame (= the head's output dim).
+    pub fn out_dim(&self) -> usize {
+        self.head.out_dim()
+    }
+
+    /// One member's conv `(w, b)` slices (`[kh, kw, in_ch, f]` / `[f]`).
+    pub fn member_conv(&self, member: usize) -> (&[f32], &[f32]) {
+        assert!(member < self.pop, "member out of range");
+        let ws = self.kh * self.kw * self.in_ch * self.features;
+        (
+            &self.w[member * ws..(member + 1) * ws],
+            &self.b[member * self.features..(member + 1) * self.features],
+        )
+    }
+
+    /// Replace ONE member's conv filter in place.
+    pub fn set_member_conv(&mut self, member: usize, w: &[f32], b: &[f32]) {
+        assert!(member < self.pop, "member out of range");
+        let ws = self.kh * self.kw * self.in_ch * self.features;
+        assert_eq!(w.len(), ws, "conv filter size");
+        assert_eq!(b.len(), self.features, "conv bias size");
+        self.w[member * ws..(member + 1) * ws].copy_from_slice(w);
+        self.b[member * self.features..(member + 1) * self.features].copy_from_slice(b);
+    }
+
+    /// Replace ALL members' conv filters from packed `[P, kh, kw, C, F]` /
+    /// `[P, F]` slices — one memcpy per array.
+    pub fn set_conv_packed(&mut self, w: &[f32], b: &[f32]) {
+        assert_eq!(w.len(), self.w.len(), "conv filter size");
+        assert_eq!(b.len(), self.b.len(), "conv bias size");
+        self.w.copy_from_slice(w);
+        self.b.copy_from_slice(b);
+    }
+
+    /// Refresh every member from a host copy of the flat train state in
+    /// one pass: `{prefix}/conv/w` is stored `[P, kh, kw, C, F]` flat —
+    /// exactly this net's packing — so the filter bank, the bias bank, and
+    /// each head layer are one contiguous copy per field.
+    pub fn sync_from_state(
+        &mut self,
+        artifact: &Artifact,
+        state: &[f32],
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let w = artifact.read(state, &format!("{prefix}/conv/w"))?;
+        let b = artifact.read(state, &format!("{prefix}/conv/b"))?;
+        self.set_conv_packed(w, b);
+        self.head.sync_from_state(artifact, state, &format!("{prefix}/head"))
+    }
+
+    /// Forward a frame block `frames: [n, H*W*C]` in one call; row `k`
+    /// uses member `members[k]`'s weights. Writes q-values
+    /// `out: [n, out_dim]`. Consecutive rows with the same member reuse
+    /// that member's filter back to back.
+    pub fn forward_block(&mut self, members: &[usize], frames: &[f32], out: &mut [f32]) {
+        let n = members.len();
+        let fl = self.frame_len();
+        let (ho, wo) = self.out_hw();
+        let flat = ho * wo * self.features;
+        assert_eq!(frames.len(), n * fl, "frame block size mismatch");
+        assert_eq!(out.len(), n * self.out_dim(), "out block size mismatch");
+        debug_assert!(members.iter().all(|&m| m < self.pop), "member out of range");
+        // Take the scratch out of `self` for the duration of the pass so
+        // the filter bank stays borrowable (allocation-free steady state).
+        let mut conv_out = std::mem::take(&mut self.conv_out);
+        conv_out.resize(n * flat, 0.0);
+        let ws = self.kh * self.kw * self.in_ch * self.features;
+        let f = self.features;
+        let mut row = 0;
+        while row < n {
+            let m = members[row];
+            let mut end = row + 1;
+            while end < n && members[end] == m {
+                end += 1;
+            }
+            let mw = &self.w[m * ws..(m + 1) * ws];
+            let mb = &self.b[m * f..(m + 1) * f];
+            for k in row..end {
+                conv2d_valid_relu(
+                    mw,
+                    mb,
+                    &frames[k * fl..(k + 1) * fl],
+                    &mut conv_out[k * flat..(k + 1) * flat],
+                    self.kh,
+                    self.kw,
+                    self.in_ch,
+                    f,
+                    self.h,
+                    self.wd,
+                );
+            }
+            row = end;
+        }
+        self.head.forward_block(members, &conv_out, out);
+        self.conv_out = conv_out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Artifact, Dtype, EnvDesc, Field};
+    use crate::nn::conv::ConvNet;
+    use crate::nn::mlp::{Activation, Mlp};
+    use crate::util::rng::Rng;
+
+    const FRAME: (usize, usize, usize) = (6, 5, 2);
+    const K: usize = 3;
+    const FEATS: usize = 4;
+    const HEAD_HIDDEN: usize = 8;
+    const N_ACTIONS: usize = 3;
+
+    struct Member {
+        cw: Vec<f32>,
+        cb: Vec<f32>,
+        head: Vec<(Vec<f32>, Vec<f32>)>,
+    }
+
+    fn head_dims() -> [usize; 3] {
+        let (h, w, _) = FRAME;
+        [(h - K + 1) * (w - K + 1) * FEATS, HEAD_HIDDEN, N_ACTIONS]
+    }
+
+    fn random_members(rng: &mut Rng, pop: usize) -> Vec<Member> {
+        let (_, _, c) = FRAME;
+        let dims = head_dims();
+        (0..pop)
+            .map(|_| {
+                let mut cw = vec![0.0f32; K * K * c * FEATS];
+                let mut cb = vec![0.0f32; FEATS];
+                rng.fill_normal(&mut cw, 0.5);
+                rng.fill_normal(&mut cb, 0.2);
+                let head = dims
+                    .windows(2)
+                    .map(|d| {
+                        let mut w = vec![0.0f32; d[0] * d[1]];
+                        let mut b = vec![0.0f32; d[1]];
+                        rng.fill_normal(&mut w, 0.3);
+                        rng.fill_normal(&mut b, 0.1);
+                        (w, b)
+                    })
+                    .collect();
+                Member { cw, cb, head }
+            })
+            .collect()
+    }
+
+    fn pack(members: &[Member]) -> PopConvNet {
+        let (h, w, c) = FRAME;
+        let dims = head_dims();
+        let pop = members.len();
+        let mut head = PopMlp::new(pop, Activation::Relu, Activation::None);
+        for (li, d) in dims.windows(2).enumerate() {
+            let mut hw = Vec::new();
+            let mut hb = Vec::new();
+            for m in members {
+                hw.extend_from_slice(&m.head[li].0);
+                hb.extend_from_slice(&m.head[li].1);
+            }
+            head.push_layer(hw, hb, d[0], d[1]);
+        }
+        let mut cw = Vec::new();
+        let mut cb = Vec::new();
+        for m in members {
+            cw.extend_from_slice(&m.cw);
+            cb.extend_from_slice(&m.cb);
+        }
+        PopConvNet::new(pop, cw, cb, K, K, c, FEATS, h, w, head)
+    }
+
+    fn scalar_net(m: &Member) -> ConvNet {
+        let (h, w, c) = FRAME;
+        let dims = head_dims();
+        let mut head = Mlp::new(Activation::Relu, Activation::None);
+        for (li, d) in dims.windows(2).enumerate() {
+            head.push_layer(m.head[li].0.clone(), m.head[li].1.clone(), d[0], d[1]);
+        }
+        ConvNet::new(m.cw.clone(), m.cb.clone(), K, K, c, FEATS, h, w, head)
+    }
+
+    /// The tentpole parity contract: PopConvNet::forward_block row k ==
+    /// member k's scalar ConvNet::forward, at pop 1/4/16, tol 1e-5.
+    #[test]
+    fn forward_block_matches_scalar_convnets() {
+        let (h, w, c) = FRAME;
+        let fl = h * w * c;
+        let mut rng = Rng::new(31);
+        for &pop in &[1usize, 4, 16] {
+            let members = random_members(&mut rng, pop);
+            let mut net = pack(&members);
+            // one row per member plus duplicate rows (same-member runs)
+            let mut ids: Vec<usize> = (0..pop).collect();
+            ids.push(0);
+            ids.push(pop - 1);
+            let n = ids.len();
+            // mix of binary {0,1} planes (the MinAtar case) and dense rows
+            let mut frames = vec![0.0f32; n * fl];
+            for (i, v) in frames.iter_mut().enumerate() {
+                *v = if i % 2 == 0 {
+                    (rng.below(3) == 0) as u8 as f32
+                } else {
+                    rng.normal() as f32
+                };
+            }
+            let mut out = vec![0.0f32; n * N_ACTIONS];
+            net.forward_block(&ids, &frames, &mut out);
+            for (k, &m) in ids.iter().enumerate() {
+                let want = scalar_net(&members[m]).forward_vec(&frames[k * fl..(k + 1) * fl]);
+                for (j, &wv) in want.iter().enumerate() {
+                    let gv = out[k * N_ACTIONS + j];
+                    assert!(
+                        (gv - wv).abs() < 1e-5,
+                        "pop {pop} row {k} member {m} q {j}: {gv} vs {wv}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// sync_from_state pulls the packed conv + head fields with the
+    /// manifest layout (one contiguous lane per field).
+    #[test]
+    fn sync_from_state_reads_packed_fields() {
+        let (pop, kh, c, f) = (2usize, 1usize, 1usize, 2usize);
+        let (h, w) = (2usize, 2usize);
+        let flat = h * w * f; // 1x1 conv keeps spatial dims
+        let n_act = 2usize;
+        let sizes = [pop * kh * kh * c * f, pop * f, pop * flat * n_act, pop * n_act];
+        let names = ["q/conv/w", "q/conv/b", "q/head/w0", "q/head/b0"];
+        let shapes: [Vec<usize>; 4] = [
+            vec![pop, kh, kh, c, f],
+            vec![pop, f],
+            vec![pop, flat, n_act],
+            vec![pop, n_act],
+        ];
+        let mut fields = Vec::new();
+        let mut offset = 0;
+        for i in 0..4 {
+            fields.push(Field {
+                name: names[i].into(),
+                offset,
+                size: sizes[i],
+                shape: shapes[i].clone(),
+                dtype: Dtype::F32,
+                init: "zeros".into(),
+                group: "critic".into(),
+                per_agent: true,
+            });
+            offset += sizes[i];
+        }
+        let art = Artifact::new(
+            "t".into(),
+            std::path::PathBuf::new(),
+            "dqn".into(),
+            "minatar".into(),
+            EnvDesc::default(),
+            pop,
+            1,
+            4,
+            vec![],
+            offset,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        );
+        let state: Vec<f32> = (0..offset).map(|v| v as f32).collect();
+        let mut head = PopMlp::new(pop, Activation::Relu, Activation::None);
+        head.push_layer(vec![0.0; pop * flat * n_act], vec![0.0; pop * n_act], flat, n_act);
+        let (zw, zb) = (vec![0.0; sizes[0]], vec![0.0; sizes[1]]);
+        let mut net = PopConvNet::new(pop, zw, zb, kh, kh, c, f, h, w, head);
+        net.sync_from_state(&art, &state, "q").unwrap();
+        for m in 0..pop {
+            let (cw, cb) = net.member_conv(m);
+            assert_eq!(cw[0], (m * kh * kh * c * f) as f32);
+            assert_eq!(cb[0], (sizes[0] + m * f) as f32);
+            let (hw, hb) = net.head.member_layer(m, 0);
+            assert_eq!(hw[0], (sizes[0] + sizes[1] + m * flat * n_act) as f32);
+            assert_eq!(hb[0], (sizes[0] + sizes[1] + sizes[2] + m * n_act) as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "head input dim")]
+    fn mismatched_head_panics() {
+        let head = {
+            let mut h = PopMlp::new(1, Activation::Relu, Activation::None);
+            h.push_layer(vec![0.0; 3], vec![0.0; 3], 1, 3); // wrong in_dim
+            h
+        };
+        let _ = PopConvNet::new(1, vec![0.0; 4], vec![0.0; 1], 2, 2, 1, 1, 3, 3, head);
+    }
+}

@@ -61,6 +61,46 @@ impl PixelReplayBuffer {
         self.total_inserted += 1;
     }
 
+    /// Insert `n` transitions from contiguous `[n, ...]` blocks in one
+    /// call — one `copy_from_slice` per field per contiguous ring run (at
+    /// most two runs unless `n > capacity`). Frames arrive already
+    /// quantized to the buffer's u8 `{0,1}` storage (the
+    /// [`PixelTransitionBlock`](crate::data::pipeline::PixelTransitionBlock)
+    /// wire format), so insertion is a straight memcpy. Row order is
+    /// preserved: the result is exactly `n` repeated
+    /// [`PixelReplayBuffer::push`] calls.
+    pub fn push_batch(
+        &mut self,
+        n: usize,
+        obs: &[u8],
+        act: &[i32],
+        rew: &[f32],
+        next_obs: &[u8],
+        done: &[f32],
+    ) {
+        let fl = self.frame_len;
+        debug_assert_eq!(obs.len(), n * fl);
+        debug_assert_eq!(act.len(), n);
+        debug_assert_eq!(rew.len(), n);
+        debug_assert_eq!(next_obs.len(), n * fl);
+        debug_assert_eq!(done.len(), n);
+        let mut row = 0;
+        while row < n {
+            let i = self.head;
+            let run = (n - row).min(self.capacity - i);
+            self.obs[i * fl..(i + run) * fl].copy_from_slice(&obs[row * fl..(row + run) * fl]);
+            self.next_obs[i * fl..(i + run) * fl]
+                .copy_from_slice(&next_obs[row * fl..(row + run) * fl]);
+            self.act[i..i + run].copy_from_slice(&act[row..row + run]);
+            self.rew[i..i + run].copy_from_slice(&rew[row..row + run]);
+            self.done[i..i + run].copy_from_slice(&done[row..row + run]);
+            self.head = (self.head + run) % self.capacity;
+            self.len = (self.len + run).min(self.capacity);
+            self.total_inserted += run as u64;
+            row += run;
+        }
+    }
+
     pub fn sample_into(
         &self,
         rng: &mut Rng,
@@ -109,6 +149,92 @@ mod tests {
         assert_eq!(a[0], 2);
         assert_eq!(r[0], 1.5);
         assert_eq!(d[0], 1.0);
+    }
+
+    /// push_batch must be byte-identical to the same rows pushed one by
+    /// one — including head position, live length, and wraparound order.
+    #[test]
+    fn push_batch_equals_repeated_push() {
+        let mut rng = Rng::new(11);
+        for case in 0..200 {
+            let cap = 1 + rng.below(12);
+            let fl = 1 + rng.below(5);
+            let mut a = PixelReplayBuffer::new(cap, fl);
+            let mut b = PixelReplayBuffer::new(cap, fl);
+            for _ in 0..6 {
+                // batch sizes deliberately straddle the capacity (n > cap
+                // wraps more than once)
+                let n = 1 + rng.below(2 * cap);
+                // random binary frames, both as f32 planes (push) and
+                // pre-quantized u8 (push_batch wire format)
+                let obs_f: Vec<f32> = (0..n * fl).map(|_| (rng.below(2) as f32)).collect();
+                let nobs_f: Vec<f32> = (0..n * fl).map(|_| (rng.below(2) as f32)).collect();
+                let obs_u: Vec<u8> = obs_f.iter().map(|&v| (v != 0.0) as u8).collect();
+                let nobs_u: Vec<u8> = nobs_f.iter().map(|&v| (v != 0.0) as u8).collect();
+                let act: Vec<i32> = (0..n).map(|_| rng.below(5) as i32).collect();
+                let mut rew = vec![0.0f32; n];
+                rng.fill_normal(&mut rew, 1.0);
+                let done: Vec<f32> = (0..n).map(|_| (rng.below(2) == 0) as u8 as f32).collect();
+                a.push_batch(n, &obs_u, &act, &rew, &nobs_u, &done);
+                for r in 0..n {
+                    b.push(
+                        &obs_f[r * fl..(r + 1) * fl],
+                        act[r] as usize,
+                        rew[r],
+                        &nobs_f[r * fl..(r + 1) * fl],
+                        done[r] > 0.5,
+                    );
+                }
+                assert_eq!(a.len, b.len, "case {case}");
+                assert_eq!(a.head, b.head, "case {case}");
+                assert_eq!(a.total_inserted, b.total_inserted, "case {case}");
+                assert_eq!(a.obs, b.obs, "case {case}");
+                assert_eq!(a.act, b.act, "case {case}");
+                assert_eq!(a.rew, b.rew, "case {case}");
+                assert_eq!(a.next_obs, b.next_obs, "case {case}");
+                assert_eq!(a.done, b.done, "case {case}");
+            }
+        }
+    }
+
+    /// Sampling after push_batch keeps rows aligned across all arrays:
+    /// the reward value identifies the row, and the obs/next_obs planes
+    /// must carry that row's bit pattern.
+    #[test]
+    fn push_batch_rows_stay_aligned_under_sampling() {
+        let fl = 4;
+        let cap = 16;
+        let mut buf = PixelReplayBuffer::new(cap, fl);
+        let n = 10;
+        let mut obs = vec![0u8; n * fl];
+        let mut nobs = vec![0u8; n * fl];
+        let mut act = vec![0i32; n];
+        let mut rew = vec![0.0f32; n];
+        let mut done = vec![0.0f32; n];
+        for r in 0..n {
+            for j in 0..fl {
+                obs[r * fl + j] = ((r >> j) & 1) as u8; // bit pattern of r
+                nobs[r * fl + j] = ((!r >> j) & 1) as u8;
+            }
+            act[r] = (r % 3) as i32;
+            rew[r] = r as f32;
+            done[r] = (r % 2) as f32;
+        }
+        buf.push_batch(n, &obs, &act, &rew, &nobs, &done);
+        let mut rng = Rng::new(3);
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; fl], vec![0i32; 1], vec![0.0; 1], vec![0.0; fl], vec![0.0; 1]);
+        for _ in 0..100 {
+            buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+            let row = r[0] as usize;
+            assert!(row < n);
+            for j in 0..fl {
+                assert_eq!(o[j], ((row >> j) & 1) as f32, "row {row} bit {j}");
+                assert_eq!(no[j], ((!row >> j) & 1) as f32, "row {row} bit {j}");
+            }
+            assert_eq!(a[0], (row % 3) as i32);
+            assert_eq!(d[0], (row % 2) as f32);
+        }
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Vendored **stub** of the `xla` PJRT bindings (xla-rs-compatible API
+//! surface), so the crate graph resolves offline: the real bindings need
+//! a registry pin plus a local `xla_extension` install that the CI/build
+//! images do not ship. Every runtime entry point reports PJRT as
+//! unavailable through the normal error path — `PjRtClient::cpu()` fails
+//! cleanly, `Runtime::cpu()` surfaces the message, and the integration
+//! tests (which already skip without artifacts) stay green — while the
+//! type signatures match exactly the subset of the real crate the
+//! coordinator uses (client/compile/upload/execute/download). Re-point
+//! the root `Cargo.toml` `xla` dependency at a real xla-rs checkout to
+//! execute the AOT-lowered artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Message-only mirror of the real bindings' error type.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (vendored xla stub; \
+         point Cargo.toml at real xla bindings to execute artifacts)"
+    ))
+}
+
+/// Element types the host-buffer APIs accept.
+pub trait NativeType: Copy + Default {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u8 {}
+
+/// PJRT client handle. The stub cannot construct one, so every
+/// buffer/executable method below is statically unreachable at runtime.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({:?})",
+            path.as_ref()
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+
+    pub fn copy_raw_to_host_sync<T: NativeType>(&self, _dst: &mut [T], _offset: usize)
+                                                -> Result<()> {
+        Err(unavailable("PjRtBuffer::copy_raw_to_host_sync"))
+    }
+}
+
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_fails_cleanly_with_stub_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not hand out clients");
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT is unavailable"), "{msg}");
+        assert!(msg.contains("stub"), "{msg}");
+    }
+
+    #[test]
+    fn hlo_text_load_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("artifacts/nope.hlo.txt").is_err());
+    }
+}
