@@ -1,253 +1,61 @@
-//! DQN on the MinAtar-style pixel games — the pixel/discrete pipeline of
-//! the paper's Fig 2 DQN rows, run end to end on the population-batched
-//! actor path: epsilon-greedy actors on `PopConvNet` block q-values
-//! (`PixelActorPool` threads stepping a `PixelVecEnv`), u8-frame block
-//! transport into per-agent `PixelReplayBuffer`s (one `push_batch` per
-//! run — no per-transition pushes), vectorized device update steps, and
-//! periodic parameter publishes back to the actors through the shared
-//! `ParamView`. Per-agent exploration epsilons live in the state field
-//! `eps_greedy` (the `HyperSpec::dqn` search space).
+//! DQN on the MinAtar-style pixel games — the paper's Fig 2 DQN rows —
+//! through the SAME generic `Trainer` loop as the continuous tasks: the
+//! pixel path is a `Domain` implementation (`Trainer::<Pixel>`), not a
+//! bespoke learner. Epsilon-greedy actors on `PopConvNet` block q-values
+//! feed u8-frame blocks into per-agent `PixelReplayBuffer`s, the shared
+//! loop drives vectorized device update steps, enforces the two-sided
+//! update:env ratio, publishes parameters every `sync_every` executions,
+//! and logs the learning curve.
 //!
 //!     cargo run --release --example dqn_minatar -- [updates] [pop] [config]
 //!
-//! Config keys (`[dqn]` section, all optional — the former hardcoded
-//! exploration schedule): warmup_steps (500), eps_greedy (0.1 — written
-//! into every agent's eps_greedy state field when sample_hypers is
-//! false), sync_every (25), ratio (0.25 per-agent updates:env-steps,
-//! enforced two-sided — actor throttle + learner gate — with 0 =
-//! unthrottled), replay_capacity (20000), actor_threads (1),
-//! drain_bound (16384),
-//! sample_hypers (true = sample per-agent lr/gamma/eps_greedy from the
-//! HyperSpec::dqn priors instead).
+//! Config keys (`[dqn]` section, all optional): warmup_steps (500),
+//! eps_greedy (0.1 — baked into every agent's eps_greedy state field
+//! when sample_hypers is false), sync_every (25), ratio (0.25 per-agent
+//! updates:env-steps, two-sided, 0 = unthrottled), replay_capacity
+//! (20000), actor_threads (1), drain_bound (16384), sample_hypers (true
+//! = per-agent lr/gamma/eps_greedy sampled from the HyperSpec::dqn
+//! priors).
 
 use fastpbrl::coordinator::hyperparams::HyperSpec;
-use fastpbrl::coordinator::population::Population;
-use fastpbrl::data::pipeline::{PixelActorConfig, PixelActorPool, PixelTransitionBlock, Throttle};
-use fastpbrl::manifest::{Dtype, Manifest};
-use fastpbrl::replay::{PixelReplayBuffer, RatioGate};
-use fastpbrl::runtime::Runtime;
+use fastpbrl::coordinator::trainer::{NoController, Pixel, Trainer, TrainerConfig};
+use fastpbrl::manifest::Manifest;
 use fastpbrl::util::config::Config;
-use fastpbrl::util::log::CsvLogger;
-use fastpbrl::util::rng::Rng;
-
-/// Insert one drained block into per-agent replay: rows are grouped into
-/// runs that target the same buffer and each run lands as one contiguous
-/// `push_batch` (frames are already in the buffers' u8 storage format).
-/// With today's one-env-per-agent block layout every run has length 1;
-/// the grouping mirrors `Trainer::push_block` and starts paying off as
-/// soon as a block carries multiple rows per agent (multi-env actors) or
-/// replay is shared.
-fn push_block(replays: &mut [PixelReplayBuffer], block: &PixelTransitionBlock) {
-    let fl = block.frame_len;
-    let mut start = 0;
-    while start < block.n {
-        let a = block.agents[start];
-        let mut end = start + 1;
-        while end < block.n && block.agents[end] == a {
-            end += 1;
-        }
-        replays[a].push_batch(
-            end - start,
-            &block.obs[start * fl..end * fl],
-            &block.act[start..end],
-            &block.rew[start..end],
-            &block.next_obs[start * fl..end * fl],
-            &block.done[start..end],
-        );
-        start = end;
-    }
-}
-
-/// Absorb one drained block (replay insert + episode bookkeeping);
-/// returns the number of transitions it carried.
-fn absorb_block(
-    block: &PixelTransitionBlock,
-    replays: &mut [PixelReplayBuffer],
-    population: &mut Population,
-    best_return: &mut [f64],
-) -> u64 {
-    push_block(replays, block);
-    for ep in &block.episodes {
-        best_return[ep.agent] = best_return[ep.agent].max(ep.ret);
-        population.returns[ep.agent].push(ep.ret);
-    }
-    block.n as u64
-}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let updates: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2_000);
     let pop: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
-    let cfg = match args.get(2) {
+    let file = match args.get(2) {
         Some(path) => Config::load(path)?,
         None => Config::new(),
     };
-    let warmup_steps = cfg.get_usize("dqn.warmup_steps", 500)?;
-    let eps_fallback = cfg.get_f64("dqn.eps_greedy", 0.1)? as f32;
-    let sync_every = cfg.get_usize("dqn.sync_every", 25)? as u64;
-    let ratio = cfg.get_f64("dqn.ratio", 0.25)?;
-    let replay_capacity = cfg.get_usize("dqn.replay_capacity", 20_000)?;
-    let n_actor_threads = cfg.get_usize("dqn.actor_threads", 1)?;
-    let drain_bound = cfg.get_usize("dqn.drain_bound", 16 * 1024)? as u64;
-    let sample_hypers = cfg.get_bool("dqn.sample_hypers", true)?;
+    let mut cfg = TrainerConfig::new("dqn", "minatar")
+        .with_pop(pop)
+        .with_updates(updates)
+        .with_seed(5)
+        .with_csv("results/dqn_minatar.csv");
+    cfg.num_steps = Some(1);
+    cfg.warmup_steps = file.get_usize("dqn.warmup_steps", 500)?;
+    cfg.eps_greedy = file.get_f64("dqn.eps_greedy", 0.1)? as f32;
+    cfg.sync_every = file.get_usize("dqn.sync_every", 25)? as u64;
+    cfg.ratio = file.get_f64("dqn.ratio", 0.25)?;
+    cfg.replay_capacity = file.get_usize("dqn.replay_capacity", 20_000)?;
+    cfg.n_actor_threads = file.get_usize("dqn.actor_threads", 1)?;
+    cfg.drain_bound = file.get_usize("dqn.drain_bound", 16 * 1024)? as u64;
+    if file.get_bool("dqn.sample_hypers", true)? {
+        cfg.hyper_spec = Some(HyperSpec::dqn());
+    }
 
     let manifest = Manifest::load("artifacts")?;
-    let art = manifest.find("dqn", "minatar", pop, Some(1))?.clone();
-    let (h, w, c) = art.env_desc.frame.expect("pixel artifact");
-    let frame_len = h * w * c;
-    let batch = art.batch;
-
-    let rt = Runtime::cpu()?;
-    let exe = rt.load(&art)?;
-    let mut rng = Rng::new(5);
-    let hyper_spec = if sample_hypers { Some(HyperSpec::dqn()) } else { None };
-    let mut population = Population::init(&rt, &art, &mut rng, 13, hyper_spec, 10)?;
-    if !sample_hypers {
-        // The actor reads the per-agent eps_greedy state field, which the
-        // artifact bakes to a constant — make the configured epsilon
-        // authoritative when the priors are not sampled.
-        let mut host = population.view.with(|h| h.to_vec());
-        if let Ok(eps) = art.read_mut(&mut host, "eps_greedy") {
-            eps.fill(eps_fallback);
-        }
-        population.load_host(&rt, host)?;
-    }
-
-    let mut replays: Vec<PixelReplayBuffer> =
-        (0..pop).map(|_| PixelReplayBuffer::new(replay_capacity, frame_len)).collect();
-
-    // staging for [P, B, ...] batches
-    let mut st_obs = vec![0.0f32; pop * batch * frame_len];
-    let mut st_act = vec![0i32; pop * batch];
-    let mut st_rew = vec![0.0f32; pop * batch];
-    let mut st_next = vec![0.0f32; pop * batch * frame_len];
-    let mut st_done = vec![0.0f32; pop * batch];
-    let mut best_return = vec![f64::NEG_INFINITY; pop];
-    let mut csv = CsvLogger::create("results/dqn_minatar.csv",
-                                    &["updates", "env_steps", "best_return"])?;
-
-    // Actors: PopConvNet block inference + PixelVecEnv stepping in
-    // threads, throttled to the configured per-agent update:env ratio
-    // (Throttle counts global env steps, hence the /pop).
-    let throttle = Throttle::new();
-    let pool = PixelActorPool::spawn(
-        &art,
-        population.view.clone(),
-        PixelActorConfig {
-            env: art.env.clone(),
-            warmup_steps,
-            eps_greedy: eps_fallback,
-            seed: 5 ^ 0xAC70,
-            ratio: ratio / pop.max(1) as f64,
-            lead_steps: 4 * batch as u64 * pop as u64,
-            ..Default::default()
-        },
-        n_actor_threads,
-        throttle.clone(),
-    )?;
-
-    // Learner-side half of the ratio contract: the Throttle above stops
-    // actors from running ahead, this gate stops the learner from
-    // re-fitting a nearly static replay when actors are the bottleneck
-    // (the two-sided pairing Trainer uses). ratio = 0 disables both
-    // sides (unthrottled).
-    let mut gate = if ratio > 0.0 {
-        Some(RatioGate::new(ratio / pop.max(1) as f64, 64.0, (warmup_steps * pop) as u64))
-    } else {
-        None
-    };
-    let mut env_steps: u64 = 0;
-    let mut done_updates: u64 = 0;
-    let mut since_sync: u64 = 0;
-    let start = std::time::Instant::now();
-
-    while done_updates < updates {
-        // ---- drain actor blocks into per-agent replay ----------------
-        let mut drained = 0u64;
-        while let Ok(block) = pool.rx.try_recv() {
-            let n = absorb_block(&block, &mut replays, &mut population, &mut best_return);
-            env_steps += n;
-            drained += n;
-            if let Some(g) = gate.as_mut() {
-                g.on_env_steps(n);
-            }
-            pool.recycle(block);
-            if drained >= drain_bound {
-                break; // bounded drain per iteration
-            }
-        }
-        let may_update = match gate.as_ref() {
-            Some(g) => g.may_update(1),
-            None => true,
-        };
-        if replays.iter().any(|r| r.len() < batch) || !may_update {
-            // replay warmup / ratio wait: park on the channel instead of
-            // busy-spinning a core against the actor threads
-            if let Ok(block) = pool.rx.recv_timeout(std::time::Duration::from_millis(5)) {
-                let n = absorb_block(&block, &mut replays, &mut population, &mut best_return);
-                env_steps += n;
-                if let Some(g) = gate.as_mut() {
-                    g.on_env_steps(n);
-                }
-                pool.recycle(block);
-            }
-            continue;
-        }
-
-        // ---- one vectorized DQN update -------------------------------
-        for (a, buf) in replays.iter().enumerate() {
-            buf.sample_into(
-                &mut rng,
-                batch,
-                &mut st_obs[a * batch * frame_len..(a + 1) * batch * frame_len],
-                &mut st_act[a * batch..(a + 1) * batch],
-                &mut st_rew[a * batch..(a + 1) * batch],
-                &mut st_next[a * batch * frame_len..(a + 1) * batch * frame_len],
-                &mut st_done[a * batch..(a + 1) * batch],
-            );
-        }
-        let mut bufs = Vec::new();
-        for inp in &art.inputs[1..] {
-            let b = match (inp.name.as_str(), inp.dtype.clone()) {
-                ("obs", _) => rt.upload_f32(&st_obs, &inp.shape)?,
-                ("act", Dtype::I32) => rt.upload_i32(&st_act, &inp.shape)?,
-                ("rew", _) => rt.upload_f32(&st_rew, &inp.shape)?,
-                ("next_obs", _) => rt.upload_f32(&st_next, &inp.shape)?,
-                ("done", _) => rt.upload_f32(&st_done, &inp.shape)?,
-                other => anyhow::bail!("unexpected input {other:?}"),
-            };
-            bufs.push(b);
-        }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        population.train_state.step(&exe, &refs)?;
-        throttle.updates.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        if let Some(g) = gate.as_mut() {
-            g.on_update_steps(1);
-        }
-        done_updates += 1;
-        since_sync += 1;
-
-        // ---- publish parameters to the actor pool --------------------
-        if since_sync >= sync_every.max(1) || done_updates >= updates {
-            since_sync = 0;
-            // one contiguous device download, published to the ParamView;
-            // actors refresh their PopConvNet with one memcpy per field
-            population.sync_to_host()?;
-            let best = best_return.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-            csv.row(&[done_updates as f64, env_steps as f64,
-                      if best.is_finite() { best } else { -1.0 }])?;
-        }
-    }
-    pool.stop();
-    csv.flush()?;
-    let host = population.train_state.to_host()?;
-    let loss = art.read(&host, "loss")?;
-    let best = best_return.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let mut trainer = Trainer::<Pixel>::new(&manifest, cfg)?;
+    let summary = trainer.run(&mut NoController)?;
+    // best_return is the best per-agent windowed MEAN return (the PBT
+    // fitness), not the single best episode the pre-unification example
+    // tracked — label it accordingly.
     println!(
-        "dqn_minatar: {done_updates} updates, {env_steps} env steps in {:.1}s; \
-         best episode return {best:.1}; final loss {:?}",
-        start.elapsed().as_secs_f64(),
-        &loss[..loss.len().min(4)]
+        "dqn_minatar: {} updates, {} env steps in {:.1}s; best windowed mean return {:.1}",
+        summary.updates, summary.env_steps, summary.wall_seconds, summary.best_return
     );
     println!("curve -> results/dqn_minatar.csv");
     Ok(())

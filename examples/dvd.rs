@@ -11,7 +11,7 @@
 //! after regenerating an artifact for it — see DESIGN.md).
 
 use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
-use fastpbrl::coordinator::trainer::{Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::{run_training, TrainerConfig};
 use fastpbrl::manifest::Manifest;
 
 fn main() -> anyhow::Result<()> {
@@ -20,24 +20,19 @@ fn main() -> anyhow::Result<()> {
     let updates: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10_000);
 
     let manifest = Manifest::load("artifacts")?;
-    let cfg = TrainerConfig {
-        env: env.clone(),
-        algo: "dvd".into(),
-        pop: 5, // same population size as the original study
-        total_updates: updates,
-        sync_every: 50,
-        warmup_steps: 1000,
-        shared_replay: true, // DvD mixes all agents' data in one buffer
-        seed: 11,
-        csv_path: format!("results/dvd_{env}.csv"),
-        max_seconds: 1500.0,
-        ..TrainerConfig::default()
-    };
+    let cfg = TrainerConfig::new("dvd", &env)
+        .with_pop(5) // same population size as the original study
+        .with_updates(updates)
+        .with_sync_every(50)
+        .with_warmup(1000)
+        .with_shared_replay(true) // DvD mixes all agents' data in one buffer
+        .with_seed(11)
+        .with_csv(format!("results/dvd_{env}.csv"))
+        .with_max_seconds(1500.0);
     let mut controller = DvdLambdaSchedule::default_for(updates);
-    let mut trainer = Trainer::new(&manifest, cfg)?;
     println!("DvD pop=5 on {env}: {updates} updates, lambda {:.2} -> {:.2}",
              controller.value_at(0), controller.value_at(updates));
-    let summary = trainer.run(&mut controller)?;
+    let summary = run_training(&manifest, cfg, &mut controller)?;
     println!(
         "wall {:.1}s | updates {} | env steps {} | best return {:.1} | mean {:.1}",
         summary.wall_seconds, summary.updates, summary.env_steps,

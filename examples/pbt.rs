@@ -11,7 +11,7 @@
 
 use fastpbrl::coordinator::hyperparams::HyperSpec;
 use fastpbrl::coordinator::pbt::{Explore, PbtController};
-use fastpbrl::coordinator::trainer::{Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::{run_training, TrainerConfig};
 use fastpbrl::manifest::Manifest;
 
 fn main() -> anyhow::Result<()> {
@@ -28,23 +28,17 @@ fn main() -> anyhow::Result<()> {
     let interval = (updates / 8).max(1);
     let mut controller = PbtController::new(spec.clone(), interval, 0.3, Explore::Resample);
 
-    let cfg = TrainerConfig {
-        env: env.clone(),
-        algo: algo.clone(),
-        pop,
-        total_updates: updates,
-        sync_every: 50,
-        warmup_steps: 1000,
-        seed: 7,
-        csv_path: format!("results/pbt_{algo}_{env}.csv"),
-        max_seconds: 1800.0,
-        hyper_spec: Some(spec),
-        return_window: 10,
-        ..TrainerConfig::default()
-    };
-    let mut trainer = Trainer::new(&manifest, cfg)?;
+    let cfg = TrainerConfig::new(&algo, &env)
+        .with_pop(pop)
+        .with_updates(updates)
+        .with_sync_every(50)
+        .with_warmup(1000)
+        .with_seed(7)
+        .with_csv(format!("results/pbt_{algo}_{env}.csv"))
+        .with_max_seconds(1800.0)
+        .with_hypers(spec);
     println!("PBT {algo} pop={pop} on {env}: {updates} updates, evolve every {interval}");
-    let summary = trainer.run(&mut controller)?;
+    let summary = run_training(&manifest, cfg, &mut controller)?;
     println!(
         "wall {:.1}s | updates {} | env steps {} | best return {:.1} | mean {:.1}",
         summary.wall_seconds, summary.updates, summary.env_steps,

@@ -10,7 +10,7 @@
 //! returns improve over the random baseline. Results land in
 //! `results/quickstart.csv` and are summarized in EXPERIMENTS.md.
 
-use fastpbrl::coordinator::trainer::{NoController, Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::{run_training, NoController, TrainerConfig};
 use fastpbrl::manifest::Manifest;
 
 fn main() -> anyhow::Result<()> {
@@ -19,24 +19,19 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(20_000);
     let manifest = Manifest::load("artifacts")?;
-    let cfg = TrainerConfig {
-        env: "pendulum".into(),
-        algo: "td3".into(),
-        pop: 4,
-        total_updates: updates,
-        sync_every: 50,
-        warmup_steps: 500,
-        seed: 1,
-        csv_path: "results/quickstart.csv".into(),
-        max_seconds: 900.0,
-        ..TrainerConfig::default()
-    };
-    let mut trainer = Trainer::new(&manifest, cfg)?;
+    let cfg = TrainerConfig::new("td3", "pendulum")
+        .with_pop(4)
+        .with_updates(updates)
+        .with_sync_every(50)
+        .with_warmup(500)
+        .with_seed(1)
+        .with_csv("results/quickstart.csv")
+        .with_max_seconds(900.0);
     println!(
         "quickstart: TD3 population of {} on pendulum, {} update steps",
-        trainer.artifact().pop, updates
+        cfg.pop, updates
     );
-    let summary = trainer.run(&mut NoController)?;
+    let summary = run_training(&manifest, cfg, &mut NoController)?;
     println!(
         "wall {:.1}s | updates {} | env steps {} | best return {:.1} | mean {:.1}",
         summary.wall_seconds, summary.updates, summary.env_steps,

@@ -22,7 +22,7 @@
 use std::collections::VecDeque;
 
 use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
-use fastpbrl::data::pipeline::{argmax, quantize_frames, PixelTransitionBlock};
+use fastpbrl::data::pipeline::{quantize_frames, PixelTransitionBlock};
 use fastpbrl::envs::pixel_vec_env::PixelVecEnv;
 use fastpbrl::envs::{make_pixel_env, PixelEnv};
 use fastpbrl::nn::pop_mlp::PopMlp;
@@ -30,6 +30,7 @@ use fastpbrl::nn::{Activation, ConvNet, Mlp, PopConvNet};
 use fastpbrl::replay::PixelReplayBuffer;
 use fastpbrl::util::json::{arr, num, obj, s, Json};
 use fastpbrl::util::rng::Rng;
+use fastpbrl::util::stats::argmax;
 
 const ENV: &str = "breakout";
 const K: usize = 3;

@@ -196,6 +196,108 @@ mod tests {
                 "lr={lr}");
     }
 
+    /// PBT exploit/explore over DQN hyperparameters: truncation must
+    /// replace a weak agent's per-agent `eps_greedy`/`lr` state fields
+    /// (exploit copies the q-net, explore re-samples the hypers) and
+    /// flag its episode-return window for clearing.
+    #[test]
+    fn dqn_truncation_replaces_eps_and_lr_and_resets_returns() {
+        let pop = 4;
+        let mut fields = Vec::new();
+        let mut off = 0;
+        let push = |name: &str, shape: Vec<usize>, group: &str, init: &str,
+                        fields: &mut Vec<Field>, off: &mut usize| {
+            let size: usize = shape.iter().product();
+            fields.push(Field {
+                name: name.into(),
+                offset: *off,
+                size,
+                shape,
+                dtype: Dtype::F32,
+                init: init.into(),
+                group: group.into(),
+                per_agent: true,
+            });
+            *off += size;
+        };
+        push("q/w0", vec![pop, 2, 3], "critic", "lecun_uniform:2", &mut fields, &mut off);
+        push("lr", vec![pop], "hyper", "const:0.0003", &mut fields, &mut off);
+        push("gamma", vec![pop], "hyper", "const:0.99", &mut fields, &mut off);
+        push("eps_greedy", vec![pop], "hyper", "const:0.1", &mut fields, &mut off);
+        let art = Artifact::new(
+            "toy_dqn".into(),
+            PathBuf::new(),
+            "dqn".into(),
+            "minatar".into(),
+            EnvDesc { frame: Some((4, 4, 2)), n_actions: 3, ..Default::default() },
+            pop,
+            1,
+            4,
+            vec![],
+            off,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        );
+        let mut seed_rng = Rng::new(3);
+        let mut host = art.init_state(&mut seed_rng, 0);
+        // distinct q rows: agent i filled with i; hypers parked OUTSIDE
+        // the dqn prior support so replacement is unambiguous
+        for agent in 0..pop {
+            let f = art.field("q/w0").unwrap();
+            let stride = f.agent_stride();
+            for v in &mut host[f.offset + agent * stride..f.offset + (agent + 1) * stride] {
+                *v = agent as f32;
+            }
+        }
+        art.read_mut(&mut host, "eps_greedy").unwrap().fill(0.5); // > prior max 0.2
+        art.read_mut(&mut host, "lr").unwrap().fill(0.5); // > prior max 3e-3
+
+        let fitness = vec![1.0, 9.0, 5.0, -2.0]; // best = 1, worst = 3
+        let mut rng = Rng::new(0);
+        let mut ctrl = PbtController::new(HyperSpec::dqn(), 10, 0.26, Explore::Resample);
+        let mut ctx = EvolveCtx {
+            artifact: &art,
+            host: &mut host,
+            fitness: &fitness,
+            rng: &mut rng,
+            updates_done: 100,
+            env_steps: 100,
+            mutated: false,
+            reset_returns: Vec::new(),
+        };
+        ctrl.on_sync(&mut ctx).unwrap();
+        assert!(ctx.mutated);
+        let resets = ctx.reset_returns.clone();
+        drop(ctx);
+
+        // exploit: the loser's q-net is now the winner's copy
+        let w3 = art.read_agent(&host, "q/w0", 3).unwrap();
+        assert!(w3.iter().all(|&v| v == 1.0), "clone mismatch: {w3:?}");
+        // explore: the loser's eps_greedy/lr were re-sampled into the dqn
+        // prior support; survivors keep their (out-of-prior) values
+        let eps3 = art.read_agent(&host, "eps_greedy", 3).unwrap()[0] as f64;
+        assert!((0.01..=0.2).contains(&eps3), "eps {eps3} not re-sampled");
+        let lr3 = art.read_agent(&host, "lr", 3).unwrap()[0] as f64;
+        assert!((3e-5..=3e-3).contains(&lr3), "lr {lr3} not re-sampled");
+        for survivor in 0..3 {
+            let eps = art.read_agent(&host, "eps_greedy", survivor).unwrap()[0];
+            assert_eq!(eps, 0.5, "survivor {survivor} eps must be untouched");
+        }
+        // the trainer clears flagged windows at the sync point — emulate
+        // that contract on a ReturnWindow
+        assert_eq!(resets, vec![3]);
+        let mut w = crate::coordinator::population::ReturnWindow::new(4);
+        w.push(1.0);
+        assert!(w.mean().is_some());
+        for &agent in &resets {
+            assert_eq!(agent, 3);
+            w.clear();
+        }
+        assert!(w.mean().is_none(), "reset_returns must clear the window");
+    }
+
     #[test]
     fn no_evolution_before_interval_or_without_fitness() {
         let art = toy_artifact(4);

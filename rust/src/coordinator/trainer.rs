@@ -4,13 +4,28 @@
 //! updates (the paper's "50 update steps in a row without copying to host"
 //! trick), and a pluggable [`Controller`] evolves the population at sync
 //! points (PBT truncation, CEM distribution updates, DvD schedules).
+//!
+//! One loop serves every workload: [`Trainer`] is generic over a
+//! [`Domain`] that bundles what used to be hardcoded per data path — the
+//! transport block type, the replay buffer, actor-pool spawn, and the
+//! staging-buffer fill layout. [`Continuous`] drives TD3/SAC/CEM-RL/DvD
+//! on vector observations; [`Pixel`] drives DQN on frame observations.
+//! Controllers, the [`RatioGate`] pairing, checkpoint save/restore and
+//! CSV logging all live in the shared loop, so PBT over DQN
+//! hyperparameters works exactly like PBT over TD3. [`run_training`]
+//! dispatches to the right domain from artifact metadata alone (the CLI
+//! entry point).
 
+use std::marker::PhantomData;
 use std::time::Instant;
 
-use crate::coordinator::population::Population;
-use crate::data::pipeline::{ActorConfig, ActorPool, PolicyKind, Throttle};
+use crate::coordinator::population::{ParamView, Population};
+use crate::data::pipeline::{
+    ActorConfig, ActorPool, BlockPool, PixelActorConfig, PixelActorPool, PolicyKind, Throttle,
+    TransitionBlock, TransportBlock,
+};
 use crate::manifest::{Artifact, Dtype, Manifest};
-use crate::replay::{RatioGate, ReplayBuffer};
+use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, Staging};
 use crate::runtime::Runtime;
 use crate::util::log::CsvLogger;
 use crate::util::rng::Rng;
@@ -22,6 +37,11 @@ pub const AGENT_STATE_GROUPS: &[&str] = &[
     "policy", "policy_target", "critic", "critic_target", "opt", "alpha", "step",
 ];
 
+/// Full configuration of one training run — one struct for every domain
+/// (the pixel keys `eps_greedy`/`expl_noise` simply go unused by domains
+/// that do not read them). Construct with struct-update syntax or the
+/// builder-style chainers ([`TrainerConfig::new`] + `with_*`).
+#[derive(Clone, Debug)]
 pub struct TrainerConfig {
     pub env: String,
     pub algo: String,
@@ -34,7 +54,8 @@ pub struct TrainerConfig {
     pub sync_every: u64,
     pub warmup_steps: usize,
     pub replay_capacity: usize,
-    /// Update:env-step ratio target (1.0 = SOTA default).
+    /// Update:env-step ratio target (1.0 = SOTA default; 0 = unthrottled
+    /// on both the actor and the learner side).
     pub ratio: f64,
     pub ratio_slack: f64,
     /// One shared replay buffer (CEM-RL/DvD) instead of one per agent.
@@ -45,6 +66,13 @@ pub struct TrainerConfig {
     pub drain_bound: u64,
     /// Actor backoff sleep while ratio-throttled, in microseconds.
     pub actor_sleep_us: u64,
+    /// TD3 exploration noise fallback (continuous domain; the per-agent
+    /// state field `expl_noise` takes precedence when present).
+    pub expl_noise: f32,
+    /// Epsilon-greedy exploration fallback (pixel domain; baked into the
+    /// per-agent `eps_greedy` state field when `hyper_spec` is `None`,
+    /// otherwise the sampled per-agent values are authoritative).
+    pub eps_greedy: f32,
     pub seed: u64,
     /// CSV output path ("" = no logging).
     pub csv_path: String,
@@ -74,6 +102,8 @@ impl Default for TrainerConfig {
             n_actor_threads: 1,
             drain_bound: 16 * 1024,
             actor_sleep_us: 200,
+            expl_noise: 0.1,
+            eps_greedy: 0.1,
             seed: 0,
             csv_path: String::new(),
             max_seconds: 0.0,
@@ -81,6 +111,263 @@ impl Default for TrainerConfig {
             hyper_spec: None,
             checkpoint_path: String::new(),
         }
+    }
+}
+
+impl TrainerConfig {
+    /// Start a builder chain for the given algo/env pairing; every other
+    /// key starts at its [`Default`] value.
+    pub fn new(algo: &str, env: &str) -> TrainerConfig {
+        TrainerConfig { algo: algo.into(), env: env.into(), ..Default::default() }
+    }
+
+    pub fn with_pop(mut self, pop: usize) -> Self {
+        self.pop = pop;
+        self
+    }
+
+    pub fn with_updates(mut self, total_updates: u64) -> Self {
+        self.total_updates = total_updates;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_ratio(mut self, ratio: f64) -> Self {
+        self.ratio = ratio;
+        self
+    }
+
+    pub fn with_warmup(mut self, warmup_steps: usize) -> Self {
+        self.warmup_steps = warmup_steps;
+        self
+    }
+
+    pub fn with_sync_every(mut self, sync_every: u64) -> Self {
+        self.sync_every = sync_every;
+        self
+    }
+
+    pub fn with_replay_capacity(mut self, replay_capacity: usize) -> Self {
+        self.replay_capacity = replay_capacity;
+        self
+    }
+
+    pub fn with_shared_replay(mut self, shared: bool) -> Self {
+        self.shared_replay = shared;
+        self
+    }
+
+    pub fn with_eps_greedy(mut self, eps: f32) -> Self {
+        self.eps_greedy = eps;
+        self
+    }
+
+    pub fn with_expl_noise(mut self, noise: f32) -> Self {
+        self.expl_noise = noise;
+        self
+    }
+
+    pub fn with_csv(mut self, path: impl Into<String>) -> Self {
+        self.csv_path = path.into();
+        self
+    }
+
+    pub fn with_checkpoint(mut self, path: impl Into<String>) -> Self {
+        self.checkpoint_path = path.into();
+        self
+    }
+
+    pub fn with_max_seconds(mut self, seconds: f64) -> Self {
+        self.max_seconds = seconds;
+        self
+    }
+
+    pub fn with_hypers(mut self, spec: crate::coordinator::hyperparams::HyperSpec) -> Self {
+        self.hyper_spec = Some(spec);
+        self
+    }
+
+    pub fn with_actor_threads(mut self, n: usize) -> Self {
+        self.n_actor_threads = n;
+        self
+    }
+}
+
+/// Everything the shared learner loop needs that differs between the
+/// continuous-control and the pixel/DQN data paths. A domain bundles the
+/// transport block type its actors emit, the replay buffer those blocks
+/// land in, how the actor pool is spawned from a [`TrainerConfig`], and
+/// which state fields the CSV logger reports — so [`Trainer`] contains
+/// no per-path branches at all.
+pub trait Domain: Send + Sized + 'static {
+    /// Transport block the domain's actor pool emits.
+    type Block: TransportBlock;
+    /// Replay buffer implementation fed by those blocks.
+    type Replay: Replay<Block = Self::Block>;
+
+    /// Domain name for logs and error messages.
+    const NAME: &'static str;
+
+    /// Can this domain drive `artifact`? Continuous artifacts carry env
+    /// vector dims, pixel artifacts a frame shape; a mismatch must error
+    /// here with a pointer to the right domain.
+    fn check(artifact: &Artifact) -> anyhow::Result<()>;
+
+    /// Construct one replay shard (per agent, or one shared).
+    fn make_replay(artifact: &Artifact, capacity: usize) -> Self::Replay;
+
+    /// Domain-specific host-state preparation before the first upload
+    /// (e.g. baking the configured epsilon into the per-agent
+    /// `eps_greedy` field when hyperparameter sampling is off). Returns
+    /// true when `host` was mutated.
+    fn prepare_host(artifact: &Artifact, cfg: &TrainerConfig, host: &mut [f32]) -> bool {
+        let _ = (artifact, cfg, host);
+        false
+    }
+
+    /// Spawn the domain's actor pool against the shared parameter view.
+    fn spawn_actors(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: &TrainerConfig,
+        throttle: Throttle,
+    ) -> anyhow::Result<BlockPool<Self::Block>>;
+
+    /// `(CSV column, state field)` pairs whose per-population means are
+    /// logged at every sync point.
+    fn metrics() -> &'static [(&'static str, &'static str)];
+}
+
+/// The continuous-control domain: TD3/SAC policies on vector
+/// observations ([`TransitionBlock`] transport into [`ReplayBuffer`]s).
+pub struct Continuous;
+
+impl Domain for Continuous {
+    type Block = TransitionBlock;
+    type Replay = ReplayBuffer;
+
+    const NAME: &'static str = "continuous";
+
+    fn check(artifact: &Artifact) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            artifact.env_desc.obs_dim > 0 && artifact.env_desc.act_dim > 0,
+            "artifact {} carries no continuous env dims (obs_dim/act_dim); \
+             pixel/DQN artifacts train through Trainer::<Pixel> (or let \
+             run_training dispatch from the artifact metadata)",
+            artifact.name
+        );
+        Ok(())
+    }
+
+    fn make_replay(artifact: &Artifact, capacity: usize) -> ReplayBuffer {
+        ReplayBuffer::new(capacity, artifact.env_desc.obs_dim, artifact.env_desc.act_dim)
+    }
+
+    fn spawn_actors(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: &TrainerConfig,
+        throttle: Throttle,
+    ) -> anyhow::Result<ActorPool> {
+        ActorPool::spawn(
+            artifact,
+            view,
+            ActorConfig {
+                env: cfg.env.clone(),
+                policy: PolicyKind::for_algo(&cfg.algo),
+                warmup_steps: cfg.warmup_steps,
+                expl_noise: cfg.expl_noise,
+                // in blocks: one message carries one transition per agent
+                // of the sending thread
+                queue_cap: 1024,
+                seed: cfg.seed ^ 0xAC70,
+                ratio: cfg.ratio / artifact.pop.max(1) as f64,
+                lead_steps: 4 * artifact.batch as u64 * artifact.pop as u64,
+                throttle_sleep_us: cfg.actor_sleep_us,
+            },
+            cfg.n_actor_threads,
+            throttle,
+        )
+    }
+
+    fn metrics() -> &'static [(&'static str, &'static str)] {
+        &[("critic_loss", "critic_loss"), ("policy_loss", "policy_loss")]
+    }
+}
+
+/// The pixel/DQN domain: epsilon-greedy q-policies on frame observations
+/// ([`PixelTransitionBlock`](crate::data::pipeline::PixelTransitionBlock)
+/// transport into [`PixelReplayBuffer`]s).
+pub struct Pixel;
+
+impl Domain for Pixel {
+    type Block = crate::data::pipeline::PixelTransitionBlock;
+    type Replay = PixelReplayBuffer;
+
+    const NAME: &'static str = "pixel";
+
+    fn check(artifact: &Artifact) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            artifact.env_desc.frame.is_some(),
+            "artifact {} carries no frame shape; continuous-control \
+             artifacts train through Trainer::<Continuous> (or let \
+             run_training dispatch from the artifact metadata)",
+            artifact.name
+        );
+        Ok(())
+    }
+
+    fn make_replay(artifact: &Artifact, capacity: usize) -> PixelReplayBuffer {
+        let (h, w, c) = artifact.env_desc.frame.expect("checked by Pixel::check");
+        PixelReplayBuffer::new(capacity, h * w * c)
+    }
+
+    fn prepare_host(artifact: &Artifact, cfg: &TrainerConfig, host: &mut [f32]) -> bool {
+        if cfg.hyper_spec.is_some() {
+            // sampled per-agent epsilons are authoritative
+            return false;
+        }
+        // the artifact bakes eps_greedy to a constant; make the
+        // configured epsilon authoritative when priors are not sampled
+        match artifact.read_mut(host, "eps_greedy") {
+            Ok(eps) => {
+                eps.fill(cfg.eps_greedy);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn spawn_actors(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: &TrainerConfig,
+        throttle: Throttle,
+    ) -> anyhow::Result<PixelActorPool> {
+        PixelActorPool::spawn(
+            artifact,
+            view,
+            PixelActorConfig {
+                env: cfg.env.clone(),
+                warmup_steps: cfg.warmup_steps,
+                eps_greedy: cfg.eps_greedy,
+                queue_cap: 1024,
+                seed: cfg.seed ^ 0xAC70,
+                ratio: cfg.ratio / artifact.pop.max(1) as f64,
+                lead_steps: 4 * artifact.batch as u64 * artifact.pop as u64,
+                throttle_sleep_us: cfg.actor_sleep_us,
+            },
+            cfg.n_actor_threads,
+            throttle,
+        )
+    }
+
+    fn metrics() -> &'static [(&'static str, &'static str)] {
+        &[("loss", "loss")]
     }
 }
 
@@ -114,6 +401,7 @@ impl Controller for NoController {
     }
 }
 
+#[derive(Clone, Debug)]
 pub struct Summary {
     pub wall_seconds: f64,
     pub updates: u64,
@@ -123,36 +411,41 @@ pub struct Summary {
     pub timers: PhaseTimer,
 }
 
-pub struct Trainer {
+/// The population trainer, generic over its [`Domain`] — one learner
+/// loop for every algo/env pairing: `Trainer::<Continuous>` for TD3/SAC
+/// control tasks, `Trainer::<Pixel>` for DQN on frames, with
+/// controllers, ratio pairing, checkpointing and CSV logging shared.
+pub struct Trainer<D: Domain> {
     pub cfg: TrainerConfig,
     pub rt: Runtime,
     pub population: Population,
     exe: std::sync::Arc<crate::runtime::Executable>,
-    replays: Vec<ReplayBuffer>,
+    replays: Vec<D::Replay>,
     gate: RatioGate,
     rng: Rng,
-    // reusable host staging buffers, one per batch input
-    staging_f32: Vec<Vec<f32>>,
-    staging_i32: Vec<Vec<i32>>,
+    /// Reusable host staging buffers, one slot per (step, agent).
+    staging: Staging,
+    _domain: PhantomData<D>,
 }
 
-impl Trainer {
-    pub fn new(manifest: &Manifest, cfg: TrainerConfig) -> anyhow::Result<Trainer> {
-        let artifact = manifest
-            .find(&cfg.algo, &cfg.env, cfg.pop, cfg.num_steps)
-            .or_else(|_| manifest.find(&cfg.algo, &cfg.env, cfg.pop, None))?
-            .clone();
-        anyhow::ensure!(
-            artifact.env_desc.obs_dim > 0,
-            "Trainer drives continuous-control artifacts; pixel/DQN \
-             artifacts run on the block pipeline's pixel path \
-             (data::pipeline::PixelActorPool + PixelReplayBuffer — see \
-             examples/dqn_minatar.rs for the learner loop)"
-        );
+/// The artifact lookup shared by [`Trainer::new`] and [`run_training`]:
+/// prefer the configured `num_steps`, fall back to any step count for
+/// the same algo/env/pop — one rule, so dispatch and construction can
+/// never resolve different artifacts.
+fn find_artifact<'a>(manifest: &'a Manifest, cfg: &TrainerConfig) -> anyhow::Result<&'a Artifact> {
+    manifest
+        .find(&cfg.algo, &cfg.env, cfg.pop, cfg.num_steps)
+        .or_else(|_| manifest.find(&cfg.algo, &cfg.env, cfg.pop, None))
+}
+
+impl<D: Domain> Trainer<D> {
+    pub fn new(manifest: &Manifest, cfg: TrainerConfig) -> anyhow::Result<Trainer<D>> {
+        let artifact = find_artifact(manifest, &cfg)?.clone();
+        D::check(&artifact)?;
         let rt = Runtime::cpu()?;
         let exe = rt.load(&artifact)?;
         let mut rng = Rng::new(cfg.seed);
-        let population = Population::init(
+        let mut population = Population::init(
             &rt,
             &artifact,
             &mut rng,
@@ -160,33 +453,40 @@ impl Trainer {
             cfg.hyper_spec.clone(),
             cfg.return_window,
         )?;
-        let (od, ad) = (artifact.env_desc.obs_dim, artifact.env_desc.act_dim);
+        // domain hook: e.g. Pixel bakes cfg.eps_greedy into the state
+        // when hyperparameter sampling is off
+        {
+            let mut host = population.view.with(|h| h.to_vec());
+            if D::prepare_host(&artifact, &cfg, &mut host) {
+                population.load_host(&rt, host)?;
+            }
+        }
         let n_buffers = if cfg.shared_replay { 1 } else { artifact.pop };
         let replays = (0..n_buffers)
-            .map(|_| ReplayBuffer::new(cfg.replay_capacity, od, ad))
+            .map(|_| D::make_replay(&artifact, cfg.replay_capacity))
             .collect();
-        let staging_f32 = artifact.inputs[1..]
-            .iter()
-            .map(|i| {
-                if i.dtype == Dtype::F32 { vec![0.0f32; i.numel()] } else { Vec::new() }
-            })
-            .collect();
-        let staging_i32 = artifact.inputs[1..]
-            .iter()
-            .map(|i| {
-                if i.dtype == Dtype::I32 { vec![0i32; i.numel()] } else { Vec::new() }
-            })
-            .collect();
+        let staging = Staging::for_artifact(&artifact);
         // The gate counts *global* env steps but *per-agent* update steps
         // (one vectorized execution = 1 update for each of the P agents),
         // so the per-agent target ratio divides by the population size.
+        // ratio <= 0 means unthrottled; the loop bypasses the gate then
+        // (the gate itself requires a positive target).
         let gate = RatioGate::new(
-            cfg.ratio / artifact.pop.max(1) as f64,
+            if cfg.ratio > 0.0 { cfg.ratio / artifact.pop.max(1) as f64 } else { 1.0 },
             cfg.ratio_slack,
             (cfg.warmup_steps * artifact.pop) as u64,
         );
-        let mut trainer =
-            Trainer { cfg, rt, population, exe, replays, gate, rng, staging_f32, staging_i32 };
+        let mut trainer = Trainer {
+            cfg,
+            rt,
+            population,
+            exe,
+            replays,
+            gate,
+            rng,
+            staging,
+            _domain: PhantomData,
+        };
         // resume from checkpoint when one exists for this artifact
         let ckpt = trainer.cfg.checkpoint_path.clone();
         if !ckpt.is_empty() && std::path::Path::new(&ckpt).exists() {
@@ -205,64 +505,54 @@ impl Trainer {
         &self.population.artifact
     }
 
-    fn buffer_for(&self, agent: usize) -> usize {
-        if self.cfg.shared_replay {
-            0
-        } else {
-            agent
+    /// Absorb one drained block: replay insert + ratio bookkeeping +
+    /// episode-return windows. Returns how many episodes it carried
+    /// (the caller recycles the block).
+    fn absorb_block(&mut self, block: &D::Block) -> u64 {
+        self.push_block(block);
+        self.gate.on_env_steps(block.rows() as u64);
+        let mut eps = 0;
+        for ep in block.episodes() {
+            self.population.returns[ep.agent].push(ep.ret);
+            eps += 1;
         }
+        eps
     }
 
-    /// Insert a transition block into replay: rows are grouped into runs
+    /// Insert a transport block into replay: rows are grouped into runs
     /// that target the same buffer (one run per agent, or the whole block
-    /// when replay is shared) and each run lands as one `push_batch`.
-    fn push_block(&mut self, block: &crate::data::pipeline::TransitionBlock) {
-        let (od, ad) = (block.obs_dim, block.act_dim);
+    /// when replay is shared) and each run lands as one contiguous
+    /// insert.
+    fn push_block(&mut self, block: &D::Block) {
+        let shared = self.cfg.shared_replay;
+        let agents = block.agents();
+        let n = block.rows();
         let mut start = 0;
-        while start < block.n {
-            let b = self.buffer_for(block.agents[start]);
+        while start < n {
+            let b = if shared { 0 } else { agents[start] };
             let mut end = start + 1;
-            while end < block.n && self.buffer_for(block.agents[end]) == b {
+            while end < n && (shared || agents[end] == b) {
                 end += 1;
             }
-            self.replays[b].push_batch(
-                end - start,
-                &block.obs[start * od..end * od],
-                &block.act[start * ad..end * ad],
-                &block.rew[start..end],
-                &block.next_obs[start * od..end * od],
-                &block.done[start..end],
-            );
+            self.replays[b].push_rows(block, start, end);
             start = end;
         }
     }
 
     /// Fill all staging buffers from replay: for every chained step (the
-    /// leading `k` axis when num_steps > 1) and every agent, draw a batch.
+    /// leading `k` axis when num_steps > 1) and every agent, draw a
+    /// batch into slot `step * pop + agent`.
     fn fill_batches(&mut self) {
-        let art = &self.population.artifact;
-        let (pop, batch) = (art.pop, art.batch);
-        let (od, ad) = (art.env_desc.obs_dim, art.env_desc.act_dim);
-        let k = art.num_steps;
-        // input order fixed by transition_batch_args: obs, act, rew,
-        // next_obs, done — each [k?, P, B, ...]
+        let (pop, batch, k) = {
+            let a = &self.population.artifact;
+            (a.pop, a.batch, a.num_steps)
+        };
+        let shared = self.cfg.shared_replay;
+        let Trainer { replays, rng, staging, .. } = self;
         for step in 0..k {
             for agent in 0..pop {
-                let buf = &self.replays[if self.cfg.shared_replay { 0 } else { agent }];
-                let base = step * pop + agent;
-                let (s0, rest) = self.staging_f32.split_at_mut(1);
-                let (s1, rest) = rest.split_at_mut(1);
-                let (s2, rest) = rest.split_at_mut(1);
-                let (s3, s4) = rest.split_at_mut(1);
-                buf.sample_into(
-                    &mut self.rng,
-                    batch,
-                    &mut s0[0][base * batch * od..(base + 1) * batch * od],
-                    &mut s1[0][base * batch * ad..(base + 1) * batch * ad],
-                    &mut s2[0][base * batch..(base + 1) * batch],
-                    &mut s3[0][base * batch * od..(base + 1) * batch * od],
-                    &mut s4[0][base * batch..(base + 1) * batch],
-                );
+                let buf = &replays[if shared { 0 } else { agent }];
+                buf.sample_slot(rng, batch, staging, step * pop + agent);
             }
         }
     }
@@ -273,8 +563,8 @@ impl Trainer {
         let mut bufs = Vec::with_capacity(art.inputs.len() - 1);
         for (i, inp) in art.inputs[1..].iter().enumerate() {
             let b = match inp.dtype {
-                Dtype::I32 => self.rt.upload_i32(&self.staging_i32[i], &inp.shape)?,
-                _ => self.rt.upload_f32(&self.staging_f32[i], &inp.shape)?,
+                Dtype::I32 => self.rt.upload_i32(&self.staging.i32s[i], &inp.shape)?,
+                _ => self.rt.upload_f32(&self.staging.f32s[i], &inp.shape)?,
             };
             bufs.push(b);
         }
@@ -294,33 +584,18 @@ impl Trainer {
         let mut csv = if self.cfg.csv_path.is_empty() {
             None
         } else {
-            Some(CsvLogger::create(
-                &self.cfg.csv_path,
-                &[
-                    "wall_s", "updates", "env_steps", "best_return", "mean_return",
-                    "episodes", "critic_loss", "policy_loss",
-                ],
-            )?)
+            let mut cols: Vec<&str> = vec![
+                "wall_s", "updates", "env_steps", "best_return", "mean_return", "episodes",
+            ];
+            cols.extend(D::metrics().iter().map(|(col, _)| *col));
+            Some(CsvLogger::create(&self.cfg.csv_path, &cols)?)
         };
 
         let throttle = Throttle::new();
-        let pool = ActorPool::spawn(
+        let pool = D::spawn_actors(
             &art,
             self.population.view.clone(),
-            ActorConfig {
-                env: self.cfg.env.clone(),
-                policy: PolicyKind::for_algo(&self.cfg.algo),
-                warmup_steps: self.cfg.warmup_steps,
-                expl_noise: 0.1,
-                // in blocks now: one message carries one transition per
-                // agent of the sending thread
-                queue_cap: 1024,
-                seed: self.cfg.seed ^ 0xAC70,
-                ratio: self.cfg.ratio / art.pop.max(1) as f64,
-                lead_steps: 4 * art.batch as u64 * art.pop as u64,
-                throttle_sleep_us: self.cfg.actor_sleep_us,
-            },
-            self.cfg.n_actor_threads,
+            &self.cfg,
             throttle.clone(),
         )?;
 
@@ -339,13 +614,8 @@ impl Trainer {
                 let t0 = Instant::now();
                 let mut drained = 0u64;
                 while let Ok(block) = pool.rx.try_recv() {
-                    self.push_block(&block);
-                    self.gate.on_env_steps(block.n as u64);
-                    drained += block.n as u64;
-                    for ep in &block.episodes {
-                        self.population.returns[ep.agent].push(ep.ret);
-                        episodes += 1;
-                    }
+                    drained += block.rows() as u64;
+                    episodes += self.absorb_block(&block);
                     pool.recycle(block);
                     if drained >= self.cfg.drain_bound {
                         break; // bounded drain per iteration
@@ -355,7 +625,8 @@ impl Trainer {
 
                 // ---- update step -----------------------------------------
                 let min_fill = self.replays.iter().map(|r| r.len()).min().unwrap_or(0);
-                if min_fill >= art.batch && self.gate.may_update(k) {
+                let gate_open = self.cfg.ratio <= 0.0 || self.gate.may_update(k);
+                if min_fill >= art.batch && gate_open {
                     let t1 = Instant::now();
                     self.fill_batches();
                     timers.add("sample", t1.elapsed().as_secs_f64());
@@ -365,7 +636,15 @@ impl Trainer {
                     updates += k;
                     since_sync += 1;
                 } else {
-                    std::thread::yield_now();
+                    // replay warmup / ratio wait: park on the channel
+                    // instead of busy-spinning a core against the actor
+                    // threads that must produce the missing transitions
+                    if let Ok(block) =
+                        pool.rx.recv_timeout(std::time::Duration::from_millis(5))
+                    {
+                        episodes += self.absorb_block(&block);
+                        pool.recycle(block);
+                    }
                 }
 
                 // ---- sync + evolve ---------------------------------------
@@ -420,16 +699,16 @@ impl Trainer {
                                 })
                                 .unwrap_or(f64::NAN)
                         };
-                        csv.row(&[
+                        let mut row = vec![
                             start.elapsed().as_secs_f64(),
                             updates as f64,
                             self.gate.env_steps() as f64,
                             if best.is_finite() { best } else { f64::NAN },
                             stats::mean(&finite),
                             episodes as f64,
-                            metric_mean("critic_loss"),
-                            metric_mean("policy_loss"),
-                        ])?;
+                        ];
+                        row.extend(D::metrics().iter().map(|(_, field)| metric_mean(field)));
+                        csv.row(&row)?;
                         csv.flush()?;
                     }
                 }
@@ -449,5 +728,151 @@ impl Trainer {
             mean_return: stats::mean(&finite),
             timers,
         })
+    }
+}
+
+/// Train any algo/env pairing through one entry point: look the artifact
+/// up, pick the [`Domain`] from its metadata (pixel artifacts carry a
+/// frame shape, continuous ones vector dims), and run the shared loop —
+/// controllers, checkpointing and CSV logging included. This is what the
+/// `fastpbrl train` subcommand calls, so
+/// `fastpbrl train --algo dqn --env minatar` and
+/// `fastpbrl train --algo td3 --env pendulum` go down the same path.
+pub fn run_training(
+    manifest: &Manifest,
+    cfg: TrainerConfig,
+    controller: &mut dyn Controller,
+) -> anyhow::Result<Summary> {
+    let artifact = find_artifact(manifest, &cfg)?;
+    if artifact.env_desc.frame.is_some() {
+        Trainer::<Pixel>::new(manifest, cfg)?.run(controller)
+    } else {
+        Trainer::<Continuous>::new(manifest, cfg)?.run(controller)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{EnvDesc, Field};
+    use std::path::PathBuf;
+
+    fn artifact_with_env(env_desc: EnvDesc, fields: Vec<Field>, state_size: usize) -> Artifact {
+        Artifact::new(
+            "toy".into(),
+            PathBuf::new(),
+            "td3".into(),
+            "pendulum".into(),
+            env_desc,
+            2,
+            1,
+            4,
+            vec![],
+            state_size,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        )
+    }
+
+    #[test]
+    fn builder_chain_sets_fields() {
+        let cfg = TrainerConfig::new("dqn", "minatar")
+            .with_pop(8)
+            .with_updates(123)
+            .with_seed(9)
+            .with_ratio(0.25)
+            .with_warmup(50)
+            .with_sync_every(10)
+            .with_replay_capacity(777)
+            .with_shared_replay(true)
+            .with_eps_greedy(0.05)
+            .with_expl_noise(0.2)
+            .with_csv("out.csv")
+            .with_checkpoint("ckpt.bin")
+            .with_max_seconds(3.5)
+            .with_actor_threads(2);
+        assert_eq!(cfg.algo, "dqn");
+        assert_eq!(cfg.env, "minatar");
+        assert_eq!(cfg.pop, 8);
+        assert_eq!(cfg.total_updates, 123);
+        assert_eq!(cfg.seed, 9);
+        assert!((cfg.ratio - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.warmup_steps, 50);
+        assert_eq!(cfg.sync_every, 10);
+        assert_eq!(cfg.replay_capacity, 777);
+        assert!(cfg.shared_replay);
+        assert!((cfg.eps_greedy - 0.05).abs() < 1e-7);
+        assert!((cfg.expl_noise - 0.2).abs() < 1e-7);
+        assert_eq!(cfg.csv_path, "out.csv");
+        assert_eq!(cfg.checkpoint_path, "ckpt.bin");
+        assert!((cfg.max_seconds - 3.5).abs() < 1e-12);
+        assert_eq!(cfg.n_actor_threads, 2);
+        // the config is Clone + Debug (sweeps copy it, tests print it)
+        let copy = cfg.clone();
+        assert!(format!("{copy:?}").contains("minatar"));
+    }
+
+    #[test]
+    fn domains_reject_mismatched_artifacts() {
+        let continuous =
+            artifact_with_env(EnvDesc { obs_dim: 3, act_dim: 1, ..Default::default() },
+                              vec![], 0);
+        let pixel = artifact_with_env(
+            EnvDesc { frame: Some((4, 4, 2)), n_actions: 3, ..Default::default() },
+            vec![],
+            0,
+        );
+        assert!(Continuous::check(&continuous).is_ok());
+        assert!(Pixel::check(&pixel).is_ok());
+        let err = Continuous::check(&pixel).unwrap_err().to_string();
+        assert!(err.contains("Trainer::<Pixel>"), "{err}");
+        let err = Pixel::check(&continuous).unwrap_err().to_string();
+        assert!(err.contains("Trainer::<Continuous>"), "{err}");
+    }
+
+    #[test]
+    fn pixel_prepare_host_bakes_configured_epsilon() {
+        let fields = vec![Field {
+            name: "eps_greedy".into(),
+            offset: 0,
+            size: 2,
+            shape: vec![2],
+            dtype: Dtype::F32,
+            init: "const:0.1".into(),
+            group: "hyper".into(),
+            per_agent: true,
+        }];
+        let art = artifact_with_env(
+            EnvDesc { frame: Some((4, 4, 2)), n_actions: 3, ..Default::default() },
+            fields,
+            2,
+        );
+        let mut host = vec![0.1f32, 0.1];
+        let cfg = TrainerConfig::new("dqn", "minatar").with_eps_greedy(0.03);
+        assert!(Pixel::prepare_host(&art, &cfg, &mut host));
+        assert_eq!(host, vec![0.03, 0.03]);
+        // sampled hypers stay authoritative
+        let cfg = cfg.with_hypers(crate::coordinator::hyperparams::HyperSpec::dqn());
+        let mut host = vec![0.07f32, 0.09];
+        assert!(!Pixel::prepare_host(&art, &cfg, &mut host));
+        assert_eq!(host, vec![0.07, 0.09]);
+    }
+
+    #[test]
+    fn domain_replay_construction_matches_env_dims() {
+        let continuous =
+            artifact_with_env(EnvDesc { obs_dim: 3, act_dim: 1, ..Default::default() },
+                              vec![], 0);
+        let buf = Continuous::make_replay(&continuous, 16);
+        assert_eq!(Replay::capacity(&buf), 16);
+        let pixel = artifact_with_env(
+            EnvDesc { frame: Some((4, 4, 2)), n_actions: 3, ..Default::default() },
+            vec![],
+            0,
+        );
+        let buf = Pixel::make_replay(&pixel, 8);
+        assert_eq!(Replay::capacity(&buf), 8);
     }
 }

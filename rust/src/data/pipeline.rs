@@ -21,7 +21,7 @@
 //! Two instantiations exist:
 //!
 //! * [`ActorPool`] — continuous control: [`TransitionBlock`] rows of f32
-//!   obs/act, TD3/SAC action selection ([`actor_loop`]).
+//!   obs/act, TD3/SAC action selection (`actor_loop`).
 //! * [`PixelActorPool`] — DQN: [`PixelTransitionBlock`] rows carrying
 //!   frames as u8 `{0,1}` planes (4x less channel bandwidth than f32, and
 //!   exactly [`PixelReplayBuffer`](crate::replay::PixelReplayBuffer)'s
@@ -41,6 +41,7 @@ use crate::manifest::Artifact;
 use crate::nn::from_state::{conv_field_dims, pop_convnet_from_state, pop_mlp_from_state};
 use crate::nn::mlp::Activation;
 use crate::util::rng::Rng;
+use crate::util::stats::argmax;
 
 /// One finished episode with this undiscounted return, tagged by agent.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -51,22 +52,33 @@ pub struct EpisodeReport {
 }
 
 /// A recyclable actor→learner message. After the learner drains a block
-/// it goes back to the spawning thread's return lane for reuse; the two
-/// hooks are what the shared transport ([`BlockPool`]) needs to route and
-/// refurbish blocks without knowing their payload.
+/// it goes back to the spawning thread's return lane for reuse. The
+/// routing hooks (`thread`/`reset`) are what the shared transport
+/// ([`BlockPool`]) needs to move blocks without knowing their payload;
+/// the row accessors (`rows`/`agents`/`episodes`) are what the generic
+/// learner loop ([`Trainer`](crate::coordinator::trainer::Trainer))
+/// needs to group rows into per-agent replay runs and harvest episode
+/// returns without knowing the domain.
 pub trait TransportBlock: Send + 'static {
     /// Spawning actor-thread index (the recycling route).
     fn thread(&self) -> usize;
     /// Clear for reuse (capacity and agent ids are kept).
     fn reset(&mut self);
+    /// Valid rows in the block.
+    fn rows(&self) -> usize;
+    /// Agent id per row (sorted runs of equal ids).
+    fn agents(&self) -> &[usize];
+    /// Episodes that finished during the block's iteration.
+    fn episodes(&self) -> &[EpisodeReport];
 }
 
 /// One actor iteration's transitions for all of the thread's agents, in
 /// flat structure-of-arrays form: row `k` is agent `agents[k]`'s
 /// transition, fields are contiguous `[n, ...]` blocks that the learner
-/// feeds straight into [`ReplayBuffer::push_batch`]
-/// (`crate::replay::ReplayBuffer::push_batch`) — no per-transition heap
-/// traffic. Finished episodes ride along in `episodes`.
+/// feeds straight into
+/// [`ReplayBuffer::push_batch`](crate::replay::ReplayBuffer::push_batch)
+/// — no per-transition heap traffic. Finished episodes ride along in
+/// `episodes`.
 pub struct TransitionBlock {
     /// Spawning actor-thread index (the recycling route).
     thread: usize,
@@ -140,14 +152,25 @@ impl TransportBlock for TransitionBlock {
     fn reset(&mut self) {
         TransitionBlock::reset(self)
     }
+
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn agents(&self) -> &[usize] {
+        &self.agents
+    }
+
+    fn episodes(&self) -> &[EpisodeReport] {
+        &self.episodes
+    }
 }
 
 /// The pixel path's transport unit: like [`TransitionBlock`] but frames
 /// travel as u8 `{0,1}` planes (MinAtar-style binary frames) — a 4x
 /// bandwidth saving over f32 on the actor channel, and exactly the dtype
-/// [`PixelReplayBuffer::push_batch`]
-/// (`crate::replay::PixelReplayBuffer::push_batch`) stores, so the
-/// learner-side insert is a straight memcpy.
+/// [`PixelReplayBuffer::push_batch`](crate::replay::PixelReplayBuffer::push_batch)
+/// stores, so the learner-side insert is a straight memcpy.
 pub struct PixelTransitionBlock {
     /// Spawning actor-thread index (the recycling route).
     thread: usize,
@@ -214,6 +237,18 @@ impl TransportBlock for PixelTransitionBlock {
 
     fn reset(&mut self) {
         PixelTransitionBlock::reset(self)
+    }
+
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn agents(&self) -> &[usize] {
+        &self.agents
+    }
+
+    fn episodes(&self) -> &[EpisodeReport] {
+        &self.episodes
     }
 }
 
@@ -737,19 +772,6 @@ fn validate_pixel_layout(
     Ok(())
 }
 
-/// Greedy argmax over one row of q-values (first index wins ties) — the
-/// action-selection helper of the pixel actor loop, shared with the
-/// pixel throughput bench so both paths break ties identically.
-pub fn argmax(q: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &v) in q.iter().enumerate().skip(1) {
-        if v > q[best] {
-            best = i;
-        }
-    }
-    best
-}
-
 /// Per-agent hyperparameter from the state when the field exists (e.g.
 /// "expl_noise" for TD3 actors, "eps_greedy" for DQN actors).
 fn hyper_for(artifact: &Artifact, host: &[f32], name: &str, agent: usize, fallback: f32) -> f32 {
@@ -829,13 +851,6 @@ mod tests {
         assert_eq!(PolicyKind::for_algo("sac"), PolicyKind::Sac);
         assert_eq!(PolicyKind::for_algo("td3"), PolicyKind::Td3);
         assert_eq!(PolicyKind::for_algo("cem"), PolicyKind::Td3);
-    }
-
-    #[test]
-    fn argmax_picks_first_max() {
-        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[-5.0]), 0);
-        assert_eq!(argmax(&[0.0, -1.0, 7.0]), 2);
     }
 
     #[test]

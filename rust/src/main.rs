@@ -3,7 +3,8 @@
 //!
 //! Subcommands:
 //!   list                       show available AOT artifacts
-//!   train  [--pbt-interval N]  (PBT-)population training (TD3/SAC)
+//!   train  [--pbt-interval N]  (PBT-)population training (TD3/SAC/DQN —
+//!                              the domain is picked from the artifact)
 //!   cemrl  ...                 CEM-RL with the shared critic (§5.2)
 //!   dvd    ...                 DvD diversity training (§5.3)
 
@@ -11,7 +12,7 @@ use fastpbrl::coordinator::cem::{run_cemrl, CemRlConfig};
 use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
 use fastpbrl::coordinator::hyperparams::HyperSpec;
 use fastpbrl::coordinator::pbt::{Explore, PbtController};
-use fastpbrl::coordinator::trainer::{Controller, NoController, Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::{run_training, Controller, NoController, TrainerConfig};
 use fastpbrl::manifest::Manifest;
 use fastpbrl::util::cli::Cli;
 use fastpbrl::util::config::Config;
@@ -109,21 +110,19 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .opt("updates", "2000", "total update steps")
         .opt("seed", "0", "random seed")
         .opt("csv", "", "CSV metrics output path")
+        .opt("checkpoint", "", "checkpoint file (saved at sync points; resumed when present)")
         .opt("max-seconds", "0", "wall-clock budget (0 = unlimited)")
 }
 
 fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
                        -> anyhow::Result<TrainerConfig> {
-    let mut cfg = TrainerConfig {
-        env: args.get("env").to_string(),
-        algo: algo.to_string(),
-        pop: args.get_usize("pop")?,
-        total_updates: args.get_u64("updates")?,
-        seed: args.get_u64("seed")?,
-        csv_path: args.get("csv").to_string(),
-        max_seconds: args.get_f64("max-seconds")?,
-        ..TrainerConfig::default()
-    };
+    let mut cfg = TrainerConfig::new(algo, args.get("env"))
+        .with_pop(args.get_usize("pop")?)
+        .with_updates(args.get_u64("updates")?)
+        .with_seed(args.get_u64("seed")?)
+        .with_csv(args.get("csv"))
+        .with_checkpoint(args.get("checkpoint"))
+        .with_max_seconds(args.get_f64("max-seconds")?);
     // optional config file refinements
     let path = args.get("config");
     if !path.is_empty() {
@@ -138,16 +137,22 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
             file.get_usize("train.drain_bound", cfg.drain_bound as usize)? as u64;
         cfg.actor_sleep_us =
             file.get_usize("train.actor_sleep_us", cfg.actor_sleep_us as usize)? as u64;
+        cfg.expl_noise = file.get_f64("train.expl_noise", cfg.expl_noise as f64)? as f32;
+        cfg.eps_greedy = file.get_f64("train.eps_greedy", cfg.eps_greedy as f64)? as f32;
     }
     Ok(cfg)
 }
 
 fn train(argv: &[String]) -> anyhow::Result<()> {
-    let cli = base_cli("fastpbrl train", "population training (TD3/SAC), optional PBT")
-        .opt("algo", "td3", "td3 | sac")
-        .opt("pbt-interval", "0", "PBT evolution interval in updates (0 = no PBT)")
-        .opt("pbt-frac", "0.3", "PBT truncation fraction")
-        .opt("explore", "resample", "PBT explore: resample | perturb");
+    let cli = base_cli(
+        "fastpbrl train",
+        "population training (TD3/SAC/DQN — continuous and pixel artifacts \
+         dispatch through the same loop), optional PBT",
+    )
+    .opt("algo", "td3", "td3 | sac | dqn")
+    .opt("pbt-interval", "0", "PBT evolution interval in updates (0 = no PBT)")
+    .opt("pbt-frac", "0.3", "PBT truncation fraction")
+    .opt("explore", "resample", "PBT explore: resample | perturb");
     let args = cli.parse(argv)?;
     let manifest = Manifest::load(args.get("artifacts"))?;
     let algo = args.get("algo").to_string();
@@ -168,15 +173,11 @@ fn train(argv: &[String]) -> anyhow::Result<()> {
     } else {
         Box::new(NoController)
     };
-    let mut trainer = Trainer::new(&manifest, cfg)?;
     info(&format!(
         "training {} pop={} env={} ({} updates)",
-        algo,
-        trainer.artifact().pop,
-        trainer.artifact().env,
-        trainer.cfg.total_updates
+        algo, cfg.pop, cfg.env, cfg.total_updates
     ));
-    let summary = trainer.run(controller.as_mut())?;
+    let summary = run_training(&manifest, cfg, controller.as_mut())?;
     info(&format!(
         "done: {:.1}s wall, {} updates, {} env steps, best return {:.1}, mean {:.1}",
         summary.wall_seconds, summary.updates, summary.env_steps,
@@ -224,12 +225,11 @@ fn dvd(argv: &[String]) -> anyhow::Result<()> {
     cfg.shared_replay = true;
     let total = cfg.total_updates;
     let mut controller = DvdLambdaSchedule::default_for(total);
-    let mut trainer = Trainer::new(&manifest, cfg)?;
     info(&format!(
         "dvd training pop={} env={} ({} updates)",
-        trainer.artifact().pop, trainer.artifact().env, total
+        cfg.pop, cfg.env, total
     ));
-    let summary = trainer.run(&mut controller)?;
+    let summary = run_training(&manifest, cfg, &mut controller)?;
     info(&format!(
         "dvd done: {:.1}s wall, {} updates, best return {:.1}, mean {:.1}",
         summary.wall_seconds, summary.updates, summary.best_return, summary.mean_return

@@ -6,6 +6,8 @@
 //! population fills the `[P, B, ...]` host staging buffer with no
 //! intermediate allocation.
 
+use crate::data::pipeline::TransitionBlock;
+use crate::replay::{Replay, Staging};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -143,6 +145,60 @@ impl ReplayBuffer {
     pub fn clear(&mut self) {
         self.len = 0;
         self.head = 0;
+    }
+}
+
+/// The continuous-control side of the unified replay interface: block
+/// rows are f32 `[n, obs_dim]` / `[n, act_dim]` slices handed straight to
+/// [`ReplayBuffer::push_batch`], and sampling fills all five staging
+/// inputs as f32.
+impl Replay for ReplayBuffer {
+    type Block = TransitionBlock;
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear(&mut self) {
+        ReplayBuffer::clear(self)
+    }
+
+    fn push_rows(&mut self, block: &TransitionBlock, start: usize, end: usize) {
+        let (od, ad) = (block.obs_dim, block.act_dim);
+        debug_assert_eq!(od, self.obs_dim);
+        debug_assert_eq!(ad, self.act_dim);
+        self.push_batch(
+            end - start,
+            &block.obs[start * od..end * od],
+            &block.act[start * ad..end * ad],
+            &block.rew[start..end],
+            &block.next_obs[start * od..end * od],
+            &block.done[start..end],
+        );
+    }
+
+    fn sample_slot(&self, rng: &mut Rng, batch: usize, st: &mut Staging, slot: usize) {
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        debug_assert_eq!(st.stride(0), batch * od);
+        debug_assert_eq!(st.stride(1), batch * ad);
+        // canonical transition input order: obs, act, rew, next_obs, done
+        let (s0, rest) = st.f32s.split_at_mut(1);
+        let (s1, rest) = rest.split_at_mut(1);
+        let (s2, rest) = rest.split_at_mut(1);
+        let (s3, s4) = rest.split_at_mut(1);
+        self.sample_into(
+            rng,
+            batch,
+            &mut s0[0][slot * batch * od..(slot + 1) * batch * od],
+            &mut s1[0][slot * batch * ad..(slot + 1) * batch * ad],
+            &mut s2[0][slot * batch..(slot + 1) * batch],
+            &mut s3[0][slot * batch * od..(slot + 1) * batch * od],
+            &mut s4[0][slot * batch..(slot + 1) * batch],
+        );
     }
 }
 

@@ -1,4 +1,13 @@
 //! Replay storage + update/insert ratio control (paper Appendix A).
+//!
+//! Both training domains store transitions behind one interface: the
+//! [`Replay`] trait abstracts over [`ReplayBuffer`] (continuous control,
+//! f32 obs/act rows) and [`PixelReplayBuffer`] (DQN, u8 frame planes +
+//! i32 actions) so the generic learner loop
+//! ([`Trainer`](crate::coordinator::trainer::Trainer)) inserts transport
+//! blocks and assembles `[k?, P, B, ...]` update batches without knowing
+//! which domain it is driving. [`Staging`] is the host-side batch
+//! assembly area the trait fills slot by slot.
 
 pub mod buffer;
 pub mod pixel;
@@ -8,72 +17,283 @@ pub use buffer::ReplayBuffer;
 pub use pixel::PixelReplayBuffer;
 pub use ratio::RatioGate;
 
+use crate::manifest::{Artifact, Dtype};
 use crate::util::rng::Rng;
 
-/// Batch staging area for a whole population: flat `[P, B, ...]` host
-/// buffers matching the artifact's batch inputs, filled per-agent by
-/// `ReplayBuffer::sample_into`.
-pub struct BatchStage {
-    pub pop: usize,
-    pub batch: usize,
-    pub obs_dim: usize,
-    pub act_dim: usize,
-    pub obs: Vec<f32>,
-    pub act: Vec<f32>,
-    pub rew: Vec<f32>,
-    pub next_obs: Vec<f32>,
-    pub done: Vec<f32>,
+/// Host staging for one vectorized update execution: one flat buffer per
+/// batch input of the artifact (f32 or i32 following the input's dtype),
+/// each shaped `[k?, P, B, ...]` and filled slot by slot through
+/// [`Replay::sample_slot`] — slot `step * pop + agent` is one agent's
+/// batch for one chained update step. The canonical transition input
+/// order is `obs, act, rew, next_obs, done` (the layout emitted by the
+/// python side's `transition_batch_args`).
+pub struct Staging {
+    /// One buffer per input; empty when that input is not f32.
+    pub f32s: Vec<Vec<f32>>,
+    /// One buffer per input; empty when that input is not i32.
+    pub i32s: Vec<Vec<i32>>,
+    strides: Vec<usize>,
 }
 
-impl BatchStage {
-    pub fn new(pop: usize, batch: usize, obs_dim: usize, act_dim: usize) -> Self {
-        BatchStage {
-            pop,
-            batch,
-            obs_dim,
-            act_dim,
-            obs: vec![0.0; pop * batch * obs_dim],
-            act: vec![0.0; pop * batch * act_dim],
-            rew: vec![0.0; pop * batch],
-            next_obs: vec![0.0; pop * batch * obs_dim],
-            done: vec![0.0; pop * batch],
+impl Staging {
+    /// Build from an explicit per-input layout of `(dtype, slot_stride)`
+    /// pairs, with `slots` (= num_steps * pop) slots per input.
+    pub fn new(layout: &[(Dtype, usize)], slots: usize) -> Staging {
+        let mut f32s = Vec::with_capacity(layout.len());
+        let mut i32s = Vec::with_capacity(layout.len());
+        let mut strides = Vec::with_capacity(layout.len());
+        for (dt, stride) in layout {
+            f32s.push(if *dt == Dtype::F32 { vec![0.0; stride * slots] } else { Vec::new() });
+            i32s.push(if *dt == Dtype::I32 { vec![0; stride * slots] } else { Vec::new() });
+            strides.push(*stride);
         }
+        Staging { f32s, i32s, strides }
     }
 
-    /// Fill agent `i`'s slice of every array from its replay buffer.
-    pub fn fill_agent(&mut self, i: usize, buf: &ReplayBuffer, rng: &mut Rng) {
-        assert!(i < self.pop);
-        let (b, od, ad) = (self.batch, self.obs_dim, self.act_dim);
-        buf.sample_into(
-            rng,
-            b,
-            &mut self.obs[i * b * od..(i + 1) * b * od],
-            &mut self.act[i * b * ad..(i + 1) * b * ad],
-            &mut self.rew[i * b..(i + 1) * b],
-            &mut self.next_obs[i * b * od..(i + 1) * b * od],
-            &mut self.done[i * b..(i + 1) * b],
-        );
+    /// Build for an artifact's batch inputs (`inputs[1..]` — the leading
+    /// input is the train state itself and is never staged).
+    pub fn for_artifact(artifact: &Artifact) -> Staging {
+        let slots = (artifact.num_steps * artifact.pop).max(1);
+        let layout: Vec<(Dtype, usize)> = artifact
+            .inputs
+            .get(1..)
+            .unwrap_or(&[])
+            .iter()
+            .map(|i| (i.dtype.clone(), i.numel() / slots))
+            .collect();
+        Staging::new(&layout, slots)
     }
+
+    /// Number of staged inputs.
+    pub fn num_inputs(&self) -> usize {
+        self.strides.len()
+    }
+
+    /// Per-slot element stride of input `input`.
+    pub fn stride(&self, input: usize) -> usize {
+        self.strides[input]
+    }
+
+    /// Slot `slot` of f32 input `input`.
+    pub fn slot_f32(&mut self, input: usize, slot: usize) -> &mut [f32] {
+        let s = self.strides[input];
+        &mut self.f32s[input][slot * s..(slot + 1) * s]
+    }
+
+    /// Slot `slot` of i32 input `input`.
+    pub fn slot_i32(&mut self, input: usize, slot: usize) -> &mut [i32] {
+        let s = self.strides[input];
+        &mut self.i32s[input][slot * s..(slot + 1) * s]
+    }
+}
+
+/// The unified replay interface both training domains implement — the
+/// learner loop's whole view of storage. `Block` ties a buffer to the
+/// transport block type whose rows it ingests
+/// ([`TransitionBlock`](crate::data::pipeline::TransitionBlock) for
+/// [`ReplayBuffer`],
+/// [`PixelTransitionBlock`](crate::data::pipeline::PixelTransitionBlock)
+/// for [`PixelReplayBuffer`]). Implementations must preserve row order on
+/// insert (a `push_rows` equals that many repeated single pushes) and
+/// draw the same uniform sample stream for the same RNG state, so the
+/// two buffers behave identically through `dyn Replay`.
+pub trait Replay: Send {
+    /// Transport block type whose rows this buffer stores.
+    type Block;
+
+    /// Live transitions.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity.
+    fn capacity(&self) -> usize;
+
+    /// Drop all contents (PBT exploit replaces an agent's data lineage —
+    /// its hyperparameters changed, so the old data's distribution did
+    /// too).
+    fn clear(&mut self);
+
+    /// Insert rows `start..end` of a transport block as one contiguous
+    /// batch (one copy per field per ring run).
+    fn push_rows(&mut self, block: &Self::Block, start: usize, end: usize);
+
+    /// Sample `batch` transitions uniformly with replacement into slot
+    /// `slot` of the staging buffers.
+    fn sample_slot(&self, rng: &mut Rng, batch: usize, staging: &mut Staging, slot: usize);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::pipeline::{PixelTransitionBlock, TransitionBlock};
 
     #[test]
-    fn fill_agent_targets_correct_slice() {
-        let mut stage = BatchStage::new(3, 4, 2, 1);
-        let mut buf = ReplayBuffer::new(8, 2, 1);
-        for k in 0..8 {
-            let v = 100.0 + k as f32;
-            buf.push(&[v, v], &[v], v, &[v, v], false);
+    fn staging_layout_and_slots() {
+        // obs [B,2] f32, act [B] i32, rew [B] f32 — two slots
+        let layout = [(Dtype::F32, 8), (Dtype::I32, 4), (Dtype::F32, 4)];
+        let mut st = Staging::new(&layout, 2);
+        assert_eq!(st.num_inputs(), 3);
+        assert_eq!(st.f32s[0].len(), 16);
+        assert!(st.f32s[1].is_empty());
+        assert_eq!(st.i32s[1].len(), 8);
+        st.slot_f32(0, 1).fill(7.0);
+        assert!(st.f32s[0][..8].iter().all(|&v| v == 0.0), "slot 0 untouched");
+        assert!(st.f32s[0][8..].iter().all(|&v| v == 7.0));
+        st.slot_i32(1, 0).fill(3);
+        assert_eq!(&st.i32s[1], &[3, 3, 3, 3, 0, 0, 0, 0]);
+    }
+
+    /// Continuous domain: inserts and samples through `dyn Replay` must
+    /// match the inherent `push_batch`/`sample_into` byte for byte
+    /// (ordering parity — the satellite contract of the unified trait).
+    #[test]
+    fn replay_trait_matches_inherent_continuous() {
+        let (od, ad, cap, rows, batch) = (2usize, 1usize, 8usize, 4usize, 3usize);
+        let agents = [0usize, 0, 1, 1];
+        let mut block = TransitionBlock::new(0, &agents, od, ad);
+        for r in 0..rows {
+            for j in 0..od {
+                block.obs[r * od + j] = (10 * r + j) as f32;
+                block.next_obs[r * od + j] = (100 + 10 * r + j) as f32;
+            }
+            block.act[r] = r as f32;
+            block.rew[r] = r as f32;
+            block.done[r] = (r % 2) as f32;
         }
+        block.n = rows;
+
+        let mut via_trait = ReplayBuffer::new(cap, od, ad);
+        {
+            let dynbuf: &mut dyn Replay<Block = TransitionBlock> = &mut via_trait;
+            dynbuf.push_rows(&block, 0, rows);
+            assert_eq!(dynbuf.len(), rows);
+            assert_eq!(dynbuf.capacity(), cap);
+        }
+        let mut direct = ReplayBuffer::new(cap, od, ad);
+        direct.push_batch(rows, &block.obs, &block.act, &block.rew, &block.next_obs,
+                          &block.done);
+
+        // same rng stream -> same sampled rows, landing in the right slot
+        let layout = [
+            (Dtype::F32, batch * od),
+            (Dtype::F32, batch * ad),
+            (Dtype::F32, batch),
+            (Dtype::F32, batch * od),
+            (Dtype::F32, batch),
+        ];
+        let mut st = Staging::new(&layout, 2);
+        let mut rng_t = Rng::new(7);
+        (&via_trait as &dyn Replay<Block = TransitionBlock>)
+            .sample_slot(&mut rng_t, batch, &mut st, 1);
+        let mut rng_d = Rng::new(7);
+        let (mut o, mut a, mut r, mut no, mut d) = (
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch * ad],
+            vec![0.0f32; batch],
+            vec![0.0f32; batch * od],
+            vec![0.0f32; batch],
+        );
+        direct.sample_into(&mut rng_d, batch, &mut o, &mut a, &mut r, &mut no, &mut d);
+        assert_eq!(st.slot_f32(0, 1), &o[..]);
+        assert_eq!(st.slot_f32(1, 1), &a[..]);
+        assert_eq!(st.slot_f32(2, 1), &r[..]);
+        assert_eq!(st.slot_f32(3, 1), &no[..]);
+        assert_eq!(st.slot_f32(4, 1), &d[..]);
+        // slot 0 stays zeroed
+        assert!(st.slot_f32(0, 0).iter().all(|&v| v == 0.0));
+
+        // clear through the trait empties the ring
+        (&mut via_trait as &mut dyn Replay<Block = TransitionBlock>).clear();
+        assert!(via_trait.is_empty());
+    }
+
+    /// Pixel domain: same parity contract — u8 frames and i32 actions
+    /// route through the identical trait surface.
+    #[test]
+    fn replay_trait_matches_inherent_pixel() {
+        let (fl, cap, rows, batch) = (4usize, 8usize, 4usize, 3usize);
+        let agents = [0usize, 1, 2, 3];
+        let mut block = PixelTransitionBlock::new(0, &agents, fl);
+        for r in 0..rows {
+            for j in 0..fl {
+                block.obs[r * fl + j] = ((r >> j) & 1) as u8;
+                block.next_obs[r * fl + j] = ((!r >> j) & 1) as u8;
+            }
+            block.act[r] = r as i32;
+            block.rew[r] = r as f32;
+            block.done[r] = (r % 2) as f32;
+        }
+        block.n = rows;
+
+        let mut via_trait = PixelReplayBuffer::new(cap, fl);
+        {
+            let dynbuf: &mut dyn Replay<Block = PixelTransitionBlock> = &mut via_trait;
+            dynbuf.push_rows(&block, 0, rows);
+            assert_eq!(dynbuf.len(), rows);
+        }
+        let mut direct = PixelReplayBuffer::new(cap, fl);
+        direct.push_batch(rows, &block.obs, &block.act, &block.rew, &block.next_obs,
+                          &block.done);
+
+        let layout = [
+            (Dtype::F32, batch * fl),
+            (Dtype::I32, batch),
+            (Dtype::F32, batch),
+            (Dtype::F32, batch * fl),
+            (Dtype::F32, batch),
+        ];
+        let mut st = Staging::new(&layout, 2);
+        let mut rng_t = Rng::new(11);
+        (&via_trait as &dyn Replay<Block = PixelTransitionBlock>)
+            .sample_slot(&mut rng_t, batch, &mut st, 0);
+        let mut rng_d = Rng::new(11);
+        let (mut o, mut a, mut r, mut no, mut d) = (
+            vec![0.0f32; batch * fl],
+            vec![0i32; batch],
+            vec![0.0f32; batch],
+            vec![0.0f32; batch * fl],
+            vec![0.0f32; batch],
+        );
+        direct.sample_into(&mut rng_d, batch, &mut o, &mut a, &mut r, &mut no, &mut d);
+        assert_eq!(st.slot_f32(0, 0), &o[..]);
+        assert_eq!(st.slot_i32(1, 0), &a[..]);
+        assert_eq!(st.slot_f32(2, 0), &r[..]);
+        assert_eq!(st.slot_f32(3, 0), &no[..]);
+        assert_eq!(st.slot_f32(4, 0), &d[..]);
+        assert!(st.slot_f32(0, 1).iter().all(|&v| v == 0.0), "slot 1 untouched");
+
+        (&mut via_trait as &mut dyn Replay<Block = PixelTransitionBlock>).clear();
+        assert!(via_trait.is_empty());
+    }
+
+    /// Partial-run insert: push_rows(start, end) must land exactly the
+    /// addressed rows, in order — the learner's per-agent run grouping
+    /// depends on it.
+    #[test]
+    fn push_rows_respects_run_bounds() {
+        let (od, ad) = (1usize, 1usize);
+        let agents = [0usize, 0, 1];
+        let mut block = TransitionBlock::new(0, &agents, od, ad);
+        block.obs.copy_from_slice(&[10.0, 20.0, 30.0]);
+        block.act.copy_from_slice(&[1.0, 2.0, 3.0]);
+        block.rew.copy_from_slice(&[0.1, 0.2, 0.3]);
+        block.next_obs.copy_from_slice(&[11.0, 21.0, 31.0]);
+        block.done.copy_from_slice(&[0.0, 1.0, 0.0]);
+        block.n = 3;
+        let mut buf = ReplayBuffer::new(4, od, ad);
+        let dynbuf: &mut dyn Replay<Block = TransitionBlock> = &mut buf;
+        dynbuf.push_rows(&block, 1, 3); // rows 1..3 only
+        assert_eq!(dynbuf.len(), 2);
         let mut rng = Rng::new(0);
-        stage.fill_agent(1, &buf, &mut rng);
-        // agent 0 and 2 slices untouched (still zero)
-        assert!(stage.rew[0..4].iter().all(|&v| v == 0.0));
-        assert!(stage.rew[8..12].iter().all(|&v| v == 0.0));
-        assert!(stage.rew[4..8].iter().all(|&v| v >= 100.0));
-        assert!(stage.obs[1 * 4 * 2..2 * 4 * 2].iter().all(|&v| v >= 100.0));
+        let (mut o, mut a, mut r, mut no, mut d) =
+            (vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1]);
+        for _ in 0..50 {
+            buf.sample_into(&mut rng, 1, &mut o, &mut a, &mut r, &mut no, &mut d);
+            assert!(o[0] == 20.0 || o[0] == 30.0, "row 0 must not be present");
+            assert_eq!(no[0], o[0] + 1.0);
+        }
     }
 }

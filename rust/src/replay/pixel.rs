@@ -4,6 +4,8 @@
 //! expanded to f32 at sample time — an 4x memory saving that mirrors the
 //! uint8 frame storage of Atari replay buffers.
 
+use crate::data::pipeline::PixelTransitionBlock;
+use crate::replay::{Replay, Staging};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -42,6 +44,17 @@ impl PixelReplayBuffer {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drop all contents (PBT exploit step over DQN replaces an agent's
+    /// data lineage exactly like the continuous buffer does).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.head = 0;
     }
 
     pub fn push(&mut self, obs: &[f32], act: usize, rew: f32, next_obs: &[f32], done: bool) {
@@ -127,6 +140,61 @@ impl PixelReplayBuffer {
             rew[b] = self.rew[i];
             done[b] = self.done[i];
         }
+    }
+}
+
+/// The pixel/DQN side of the unified replay interface: block rows are u8
+/// `[n, frame_len]` planes + i32 actions handed straight to
+/// [`PixelReplayBuffer::push_batch`] (no requantization), and sampling
+/// expands frames to f32 while actions land in the i32 staging input.
+impl Replay for PixelReplayBuffer {
+    type Block = PixelTransitionBlock;
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear(&mut self) {
+        PixelReplayBuffer::clear(self)
+    }
+
+    fn push_rows(&mut self, block: &PixelTransitionBlock, start: usize, end: usize) {
+        let fl = block.frame_len;
+        debug_assert_eq!(fl, self.frame_len);
+        self.push_batch(
+            end - start,
+            &block.obs[start * fl..end * fl],
+            &block.act[start..end],
+            &block.rew[start..end],
+            &block.next_obs[start * fl..end * fl],
+            &block.done[start..end],
+        );
+    }
+
+    fn sample_slot(&self, rng: &mut Rng, batch: usize, st: &mut Staging, slot: usize) {
+        let fl = self.frame_len;
+        debug_assert_eq!(st.stride(0), batch * fl);
+        debug_assert_eq!(st.stride(1), batch);
+        // canonical transition input order: obs, act(i32), rew, next_obs,
+        // done — the act slot lives in the i32 staging lane.
+        let (s0, rest) = st.f32s.split_at_mut(1);
+        let (_act_f32, rest) = rest.split_at_mut(1);
+        let (s2, rest) = rest.split_at_mut(1);
+        let (s3, s4) = rest.split_at_mut(1);
+        let act = &mut st.i32s[1][slot * batch..(slot + 1) * batch];
+        self.sample_into(
+            rng,
+            batch,
+            &mut s0[0][slot * batch * fl..(slot + 1) * batch * fl],
+            act,
+            &mut s2[0][slot * batch..(slot + 1) * batch],
+            &mut s3[0][slot * batch * fl..(slot + 1) * batch * fl],
+            &mut s4[0][slot * batch..(slot + 1) * batch],
+        );
     }
 }
 

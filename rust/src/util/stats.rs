@@ -78,6 +78,19 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(&v, 50.0)
 }
 
+/// Greedy argmax over one row of values (first index wins ties) — e.g.
+/// q-value action selection in the pixel actor loop and the pixel
+/// throughput bench, which must break ties identically.
+pub fn argmax(q: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in q.iter().enumerate().skip(1) {
+        if v > q[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Indices that would sort `xs` descending (best-first ranking).
 pub fn argsort_desc(xs: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
@@ -114,6 +127,13 @@ mod tests {
     #[test]
     fn argsort_desc_ranks() {
         assert_eq!(argsort_desc(&[3.0, 1.0, 2.0]), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        assert_eq!(argmax(&[0.0, -1.0, 7.0]), 2);
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! End-to-end integration tests over the coordinator: full training loops
 //! (actors + replay + vectorized device updates + controllers) on the fast
-//! pendulum artifacts. Skipped gracefully when `make artifacts` has not
-//! run yet.
+//! pendulum artifacts, plus the pixel/DQN domain through the same generic
+//! loop. Skipped gracefully when `make artifacts` has not run yet.
 
 use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
 use fastpbrl::coordinator::hyperparams::HyperSpec;
 use fastpbrl::coordinator::pbt::{Explore, PbtController};
-use fastpbrl::coordinator::trainer::{Controller, NoController, Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::{
+    run_training, Continuous, Controller, NoController, Pixel, Trainer, TrainerConfig,
+};
 use fastpbrl::manifest::Manifest;
 
 fn manifest() -> Option<Manifest> {
@@ -34,10 +36,26 @@ fn base_cfg(updates: u64) -> TrainerConfig {
     }
 }
 
+/// The pixel/DQN mirror of `base_cfg` (small budgets; skipped when no
+/// dqn artifact has been generated).
+fn dqn_cfg(updates: u64) -> TrainerConfig {
+    let mut cfg = TrainerConfig::new("dqn", "minatar")
+        .with_pop(2)
+        .with_updates(updates)
+        .with_ratio(0.25)
+        .with_warmup(50)
+        .with_replay_capacity(5_000)
+        .with_seed(42)
+        .with_max_seconds(120.0);
+    cfg.num_steps = Some(1);
+    cfg.sync_every = 10;
+    cfg
+}
+
 #[test]
 fn trainer_runs_to_completion_and_respects_ratio() {
     let Some(m) = manifest() else { return };
-    let mut trainer = Trainer::new(&m, base_cfg(300)).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, base_cfg(300)).unwrap();
     let summary = trainer.run(&mut NoController).unwrap();
     assert_eq!(summary.updates, 300);
     assert!(summary.env_steps > 0);
@@ -59,7 +77,7 @@ fn trainer_reports_finite_fitness_after_episodes() {
     let Some(m) = manifest() else { return };
     let mut cfg = base_cfg(400);
     cfg.warmup_steps = 50;
-    let mut trainer = Trainer::new(&m, cfg).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
     let summary = trainer.run(&mut NoController).unwrap();
     // pendulum episodes are 200 steps; with ~100+ env steps per agent the
     // population should have finished episodes and reported returns
@@ -78,7 +96,7 @@ fn pbt_controller_evolves_population_during_training() {
     cfg.warmup_steps = 50;
     cfg.hyper_spec = Some(HyperSpec::td3());
     let mut pbt = PbtController::new(HyperSpec::td3(), 150, 0.26, Explore::Resample);
-    let mut trainer = Trainer::new(&m, cfg).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
     let summary = trainer.run(&mut pbt).unwrap();
     assert_eq!(summary.updates, 600);
     assert!(
@@ -109,7 +127,7 @@ fn dvd_schedule_writes_lambda_into_state() {
     cfg.warmup_steps = 100;
     let mut ctrl = DvdLambdaSchedule::default_for(120);
     let expected_start = ctrl.value_at(25) as f32; // first sync at ~25 updates
-    let mut trainer = Trainer::new(&m, cfg).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
     let summary = trainer.run(&mut ctrl).unwrap();
     assert_eq!(summary.updates, 120);
     let host = trainer.population.view.with(|h| h.to_vec());
@@ -126,7 +144,7 @@ fn sac_trainer_also_composes() {
     }
     let mut cfg = base_cfg(200);
     cfg.algo = "sac".into();
-    let mut trainer = Trainer::new(&m, cfg).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
     let summary = trainer.run(&mut NoController).unwrap();
     assert_eq!(summary.updates, 200);
     let host = trainer.population.view.with(|h| h.to_vec());
@@ -154,7 +172,7 @@ fn controller_sync_cadence_matches_config() {
     let mut cfg = base_cfg(200);
     cfg.sync_every = 50;
     let mut ctrl = CountingController { calls: 0 };
-    let mut trainer = Trainer::new(&m, cfg).unwrap();
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
     trainer.run(&mut ctrl).unwrap();
     // 200 updates / 50 per sync = 4 syncs (+1 tolerance for the final flush)
     assert!(
@@ -171,7 +189,7 @@ fn checkpoint_roundtrip_resumes_training() {
     let _ = std::fs::remove_file(&path);
     let mut cfg = base_cfg(100);
     cfg.checkpoint_path = path.display().to_string();
-    let mut t1 = Trainer::new(&m, cfg).unwrap();
+    let mut t1 = Trainer::<Continuous>::new(&m, cfg).unwrap();
     t1.run(&mut NoController).unwrap();
     let ckpt = fastpbrl::runtime::checkpoint::Checkpoint::load(&path).unwrap();
     assert_eq!(ckpt.state.len(), t1.artifact().state_size);
@@ -180,8 +198,100 @@ fn checkpoint_roundtrip_resumes_training() {
     let mut cfg2 = base_cfg(100);
     cfg2.checkpoint_path = path.display().to_string();
     cfg2.seed = 99; // different seed -> different init unless restored
-    let t2 = Trainer::new(&m, cfg2).unwrap();
+    let t2 = Trainer::<Continuous>::new(&m, cfg2).unwrap();
     let restored = t2.population.view.with(|h| h.to_vec());
     assert_eq!(restored, ckpt.state, "trainer must resume from checkpoint");
     let _ = std::fs::remove_file(&path);
+}
+
+// ---- pixel/DQN domain through the SAME generic loop ---------------------
+
+#[test]
+fn pixel_trainer_runs_dqn_through_shared_loop() {
+    let Some(m) = manifest() else { return };
+    if m.find("dqn", "minatar", 2, None).is_err() {
+        eprintln!("skipping (no dqn minatar artifact)");
+        return;
+    }
+    let mut trainer = Trainer::<Pixel>::new(&m, dqn_cfg(60)).unwrap();
+    let summary = trainer.run(&mut NoController).unwrap();
+    assert_eq!(summary.updates, 60);
+    assert!(summary.env_steps > 0);
+    assert!(summary.timers.total("update_exec") > 0.0);
+}
+
+#[test]
+fn pixel_checkpoint_roundtrip_through_shared_loop() {
+    let Some(m) = manifest() else { return };
+    if m.find("dqn", "minatar", 2, None).is_err() {
+        eprintln!("skipping (no dqn minatar artifact)");
+        return;
+    }
+    let path = std::env::temp_dir().join("fastpbrl_it_pixel_ckpt.bin");
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = dqn_cfg(40);
+    cfg.checkpoint_path = path.display().to_string();
+    let mut t1 = Trainer::<Pixel>::new(&m, cfg).unwrap();
+    t1.run(&mut NoController).unwrap();
+    let ckpt = fastpbrl::runtime::checkpoint::Checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.state.len(), t1.artifact().state_size);
+
+    let mut cfg2 = dqn_cfg(40);
+    cfg2.checkpoint_path = path.display().to_string();
+    cfg2.seed = 99; // different seed -> different init unless restored
+    let t2 = Trainer::<Pixel>::new(&m, cfg2).unwrap();
+    let restored = t2.population.view.with(|h| h.to_vec());
+    assert_eq!(restored, ckpt.state, "pixel trainer must resume from checkpoint");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// PBT over DQN hyperparameters (per-agent eps_greedy/lr exploit-explore)
+/// is a first-class scenario of the unified loop.
+#[test]
+fn pbt_over_dqn_composes_through_shared_loop() {
+    let Some(m) = manifest() else { return };
+    if m.find("dqn", "minatar", 2, None).is_err() {
+        eprintln!("skipping (no dqn minatar artifact)");
+        return;
+    }
+    let mut cfg = dqn_cfg(120);
+    cfg.hyper_spec = Some(HyperSpec::dqn());
+    let mut pbt = PbtController::new(HyperSpec::dqn(), 30, 0.26, Explore::Resample);
+    let mut trainer = Trainer::<Pixel>::new(&m, cfg).unwrap();
+    let summary = trainer.run(&mut pbt).unwrap();
+    assert_eq!(summary.updates, 120);
+    // evolved or not (episodes may be scarce in a short run), per-agent
+    // epsilons must stay inside the dqn prior support
+    let host = trainer.population.view.with(|h| h.to_vec());
+    let art = trainer.artifact();
+    for agent in 0..art.pop {
+        let eps = art.read_agent(&host, "eps_greedy", agent).unwrap()[0] as f64;
+        assert!((0.01..=0.2).contains(&eps), "agent {agent} eps {eps}");
+    }
+}
+
+/// The unified entry point dispatches by artifact metadata: the same call
+/// drives a continuous artifact and (when present) a pixel one.
+#[test]
+fn run_training_dispatches_by_artifact_domain() {
+    let Some(m) = manifest() else { return };
+    let summary = run_training(&m, base_cfg(50), &mut NoController).unwrap();
+    assert_eq!(summary.updates, 50);
+    if m.find("dqn", "minatar", 2, None).is_ok() {
+        let summary = run_training(&m, dqn_cfg(20), &mut NoController).unwrap();
+        assert_eq!(summary.updates, 20);
+    }
+}
+
+/// Domain mismatches fail fast with a pointer to the right trainer
+/// instead of panicking inside actor threads.
+#[test]
+fn mismatched_domain_errors_at_construction() {
+    let Some(m) = manifest() else { return };
+    let err = Trainer::<Pixel>::new(&m, base_cfg(10)).unwrap_err().to_string();
+    assert!(err.contains("Trainer::<Continuous>"), "{err}");
+    if m.find("dqn", "minatar", 2, None).is_ok() {
+        let err = Trainer::<Continuous>::new(&m, dqn_cfg(10)).unwrap_err().to_string();
+        assert!(err.contains("Trainer::<Pixel>"), "{err}");
+    }
 }
