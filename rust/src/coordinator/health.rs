@@ -1,0 +1,312 @@
+//! Per-member parameter health: NaN/Inf/norm-explosion scanning over the
+//! `[P, ...]` host state and in-place quarantine repair.
+//!
+//! A single diverged member must not poison a multi-hour population run:
+//! its transitions feed shared replay (CEM-RL/DvD) and its NaNs survive
+//! every later update step. The repair primitive is the one PBT already
+//! uses for exploitation — [`Artifact::copy_agent`] from the best healthy
+//! member — so quarantine is "exploit as fault recovery": the diseased
+//! member is overwritten wholesale (networks, targets, optimizer state,
+//! step counters AND hyperparameters, since divergence is usually
+//! hyper-caused) and training continues.
+//!
+//! The scan runs on the learner thread right after each `to_host` sync
+//! (see `Trainer::run`), so it sees exactly the state a checkpoint would
+//! persist; `last_good` checkpoint promotion is keyed off
+//! [`HealthReport::all_healthy`].
+
+use crate::coordinator::trainer::AGENT_STATE_GROUPS;
+use crate::manifest::{Artifact, Dtype};
+
+/// Groups scanned for non-finite values and norm explosion: the f32
+/// learnable state. Bit-cast counter/key lanes (group `step`, u32 dtype)
+/// are excluded — their bit patterns may alias NaN legitimately.
+pub const SCAN_GROUPS: &[&str] = &[
+    "policy", "policy_target", "critic", "critic_target", "opt", "alpha",
+];
+
+/// Groups overwritten when repairing a quarantined member: the full
+/// per-agent training state ([`AGENT_STATE_GROUPS`]) plus `hyper`, so a
+/// divergence-inducing hyperparameter row dies with the member.
+pub fn repair_groups() -> Vec<&'static str> {
+    let mut g = AGENT_STATE_GROUPS.to_vec();
+    g.push("hyper");
+    g
+}
+
+/// Why one member was flagged by [`scan_members`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemberHealth {
+    pub member: usize,
+    /// NaN/Inf lanes found across the member's scanned fields.
+    pub non_finite: usize,
+    /// Largest finite |value| seen (norm-explosion evidence).
+    pub max_abs: f32,
+}
+
+/// One post-sync health scan over all `P` members.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    /// Members scanned (the population size).
+    pub pop: usize,
+    /// Flagged members, ascending by index.
+    pub unhealthy: Vec<MemberHealth>,
+}
+
+impl HealthReport {
+    pub fn all_healthy(&self) -> bool {
+        self.unhealthy.is_empty()
+    }
+
+    /// Indices of the flagged members.
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.unhealthy.iter().map(|m| m.member).collect()
+    }
+
+    fn is_unhealthy(&self, member: usize) -> bool {
+        self.unhealthy.iter().any(|m| m.member == member)
+    }
+}
+
+/// Scan every member's f32 learnable state ([`SCAN_GROUPS`]) for NaN/Inf
+/// lanes and values whose magnitude exceeds `norm_limit`
+/// (`norm_limit <= 0` disables the magnitude check). Runs in one linear
+/// pass per field; cost is one read of the state copy the trainer
+/// already paid `to_host` for.
+pub fn scan_members(artifact: &Artifact, state: &[f32], norm_limit: f32) -> HealthReport {
+    let pop = artifact.pop;
+    let mut non_finite = vec![0usize; pop];
+    let mut max_abs = vec![0.0f32; pop];
+    for f in &artifact.fields {
+        if !f.per_agent || f.dtype != Dtype::F32 {
+            continue;
+        }
+        if !SCAN_GROUPS.iter().any(|g| *g == f.group) {
+            continue;
+        }
+        let stride = f.agent_stride();
+        for member in 0..pop.min(if stride == 0 { 0 } else { f.size / stride }) {
+            let row = &state[f.offset + member * stride..f.offset + (member + 1) * stride];
+            for &v in row {
+                if !v.is_finite() {
+                    non_finite[member] += 1;
+                } else if v.abs() > max_abs[member] {
+                    max_abs[member] = v.abs();
+                }
+            }
+        }
+    }
+    let unhealthy = (0..pop)
+        .filter(|&m| non_finite[m] > 0 || (norm_limit > 0.0 && max_abs[m] > norm_limit))
+        .map(|m| MemberHealth { member: m, non_finite: non_finite[m], max_abs: max_abs[m] })
+        .collect();
+    HealthReport { pop, unhealthy }
+}
+
+/// What [`repair_members`] did: which donor seeded the copies and which
+/// members were overwritten.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RepairOutcome {
+    /// The healthy member whose row was copied into every quarantined one.
+    pub donor: usize,
+    /// Members repaired in place, ascending by index.
+    pub repaired: Vec<usize>,
+}
+
+/// Repair every quarantined member in place by copying the best healthy
+/// member's full row ([`repair_groups`]) over it. `fitness[m]` ranks
+/// donor candidates (windowed return; NaN ranks last — a member with no
+/// finished episodes can still donate if nothing better exists). Errors
+/// only when no healthy member remains: that run is unrecoverable from
+/// live state and must fall back to checkpoint lineage.
+pub fn repair_members(
+    artifact: &Artifact,
+    state: &mut [f32],
+    report: &HealthReport,
+    fitness: &[f64],
+) -> anyhow::Result<RepairOutcome> {
+    if report.all_healthy() {
+        return Ok(RepairOutcome { donor: 0, repaired: Vec::new() });
+    }
+    let donor = (0..report.pop)
+        .filter(|&m| !report.is_unhealthy(m))
+        .max_by(|&a, &b| {
+            let fa = fitness.get(a).copied().unwrap_or(f64::NEG_INFINITY);
+            let fb = fitness.get(b).copied().unwrap_or(f64::NEG_INFINITY);
+            // NaN (no episodes yet) ranks below every real return
+            let fa = if fa.is_nan() { f64::NEG_INFINITY } else { fa };
+            let fb = if fb.is_nan() { f64::NEG_INFINITY } else { fb };
+            fa.partial_cmp(&fb).unwrap()
+        })
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "all {} population members are unhealthy — no donor for repair",
+                report.pop
+            )
+        })?;
+    let groups = repair_groups();
+    let mut repaired = Vec::with_capacity(report.unhealthy.len());
+    for m in report.quarantined() {
+        artifact.copy_agent(state, &groups, donor, m);
+        repaired.push(m);
+    }
+    Ok(RepairOutcome { donor, repaired })
+}
+
+/// Fault injection: overwrite one lane of `member`'s first scanned field
+/// with NaN, simulating in-training divergence. Test builds only.
+#[cfg(feature = "fault-inject")]
+pub fn poison_member(artifact: &Artifact, state: &mut [f32], member: usize) {
+    for f in &artifact.fields {
+        if !f.per_agent || f.dtype != Dtype::F32 {
+            continue;
+        }
+        if !SCAN_GROUPS.iter().any(|g| *g == f.group) {
+            continue;
+        }
+        let stride = f.agent_stride();
+        if member < artifact.pop && stride > 0 {
+            state[f.offset + member * stride] = f32::NAN;
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Artifact, EnvDesc, Field};
+    use std::path::PathBuf;
+
+    /// Toy layout: per-agent policy + hyper rows plus a u32 `step` lane
+    /// whose bit patterns alias NaN (must never be scanned).
+    fn toy_artifact(pop: usize) -> Artifact {
+        let mut fields = Vec::new();
+        let mut off = 0;
+        let mut push = |name: &str, shape: Vec<usize>, group: &str, dtype: Dtype| {
+            let size: usize = shape.iter().product();
+            fields.push(Field {
+                name: name.into(),
+                offset: off,
+                size,
+                shape,
+                dtype,
+                init: "zeros".into(),
+                group: group.into(),
+                per_agent: true,
+            });
+            off += size;
+        };
+        push("policy/w0", vec![pop, 2, 2], "policy", Dtype::F32);
+        push("adam_policy/m0", vec![pop, 2, 2], "opt", Dtype::F32);
+        push("lr", vec![pop], "hyper", Dtype::F32);
+        push("step", vec![pop], "step", Dtype::U32);
+        Artifact::new(
+            "toy".into(),
+            PathBuf::new(),
+            "td3".into(),
+            "pendulum".into(),
+            EnvDesc::default(),
+            pop,
+            1,
+            4,
+            vec![],
+            off,
+            "state".into(),
+            vec![],
+            fields,
+            vec![],
+        )
+    }
+
+    fn fill_member(art: &Artifact, state: &mut [f32], field: &str, member: usize, v: f32) {
+        let f = art.field(field).unwrap();
+        let stride = f.agent_stride();
+        state[f.offset + member * stride..f.offset + (member + 1) * stride].fill(v);
+    }
+
+    #[test]
+    fn clean_state_is_healthy_even_with_nan_bitcast_counters() {
+        let art = toy_artifact(3);
+        let mut state = vec![0.0f32; art.state_size];
+        // u32 counter lanes bit-alias NaN: the scan must not care
+        let f = art.field("step").unwrap();
+        for v in &mut state[f.offset..f.offset + f.size] {
+            *v = f32::from_bits(0x7FC0_0001); // a quiet NaN pattern
+        }
+        let report = scan_members(&art, &state, 1e6);
+        assert_eq!(report.pop, 3);
+        assert!(report.all_healthy(), "{:?}", report.unhealthy);
+    }
+
+    #[test]
+    fn scan_flags_nan_inf_and_norm_explosion_per_member() {
+        let art = toy_artifact(4);
+        let mut state = vec![0.1f32; art.state_size];
+        let f = art.field("policy/w0").unwrap();
+        let stride = f.agent_stride();
+        state[f.offset + stride] = f32::NAN; // member 1
+        state[f.offset + 2 * stride + 1] = f32::INFINITY; // member 2
+        fill_member(&art, &mut state, "adam_policy/m0", 3, 1e9); // member 3: explosion
+        let report = scan_members(&art, &state, 1e6);
+        assert_eq!(report.quarantined(), vec![1, 2, 3]);
+        assert_eq!(report.unhealthy[0].non_finite, 1);
+        assert_eq!(report.unhealthy[1].non_finite, 1);
+        assert_eq!(report.unhealthy[2].non_finite, 0);
+        assert!(report.unhealthy[2].max_abs > 1e6);
+        // norm check off: only the non-finite members remain flagged
+        let lax = scan_members(&art, &state, 0.0);
+        assert_eq!(lax.quarantined(), vec![1, 2]);
+    }
+
+    #[test]
+    fn repair_copies_best_healthy_member_including_hypers() {
+        let art = toy_artifact(4);
+        let mut state = vec![0.0f32; art.state_size];
+        for m in 0..4 {
+            fill_member(&art, &mut state, "policy/w0", m, m as f32);
+            fill_member(&art, &mut state, "lr", m, 0.1 * (m + 1) as f32);
+        }
+        fill_member(&art, &mut state, "policy/w0", 1, f32::NAN);
+        let report = scan_members(&art, &state, 1e6);
+        assert_eq!(report.quarantined(), vec![1]);
+        // member 3 has the best return among healthy {0, 2, 3}
+        let fitness = vec![0.5, 99.0, 1.0, 2.0];
+        let out = repair_members(&art, &mut state, &report, &fitness).unwrap();
+        assert_eq!(out, RepairOutcome { donor: 3, repaired: vec![1] });
+        let f = art.field("policy/w0").unwrap();
+        let stride = f.agent_stride();
+        assert!(state[f.offset + stride..f.offset + 2 * stride].iter().all(|&v| v == 3.0));
+        let lr = art.field("lr").unwrap();
+        assert_eq!(state[lr.offset + 1], state[lr.offset + 3]); // hyper row cloned
+        assert!(scan_members(&art, &state, 1e6).all_healthy());
+    }
+
+    #[test]
+    fn repair_tolerates_nan_fitness_and_rejects_total_loss() {
+        let art = toy_artifact(2);
+        let mut state = vec![0.0f32; art.state_size];
+        fill_member(&art, &mut state, "policy/w0", 1, f32::NAN);
+        let report = scan_members(&art, &state, 0.0);
+        // no finished episodes yet: fitness all NaN, member 0 still donates
+        let out =
+            repair_members(&art, &mut state, &report, &[f64::NAN, f64::NAN]).unwrap();
+        assert_eq!(out.donor, 0);
+        assert_eq!(out.repaired, vec![1]);
+        // every member poisoned: unrecoverable from live state
+        fill_member(&art, &mut state, "policy/w0", 0, f32::NAN);
+        fill_member(&art, &mut state, "policy/w0", 1, f32::NAN);
+        let report = scan_members(&art, &state, 0.0);
+        assert!(repair_members(&art, &mut state, &report, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    #[cfg(feature = "fault-inject")]
+    fn poison_member_is_detected_by_scan() {
+        let art = toy_artifact(3);
+        let mut state = vec![0.0f32; art.state_size];
+        poison_member(&art, &mut state, 2);
+        let report = scan_members(&art, &state, 0.0);
+        assert_eq!(report.quarantined(), vec![2]);
+    }
+}

@@ -2,6 +2,7 @@
 pub mod cem;
 pub mod eval;
 pub mod dvd;
+pub mod health;
 pub mod hyperparams;
 pub mod pbt;
 pub mod population;

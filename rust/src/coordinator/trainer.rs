@@ -19,15 +19,18 @@
 use std::marker::PhantomData;
 use std::time::Instant;
 
+use crate::coordinator::health;
 use crate::coordinator::population::{ParamView, Population};
 use crate::data::pipeline::{
     ActorConfig, ActorPool, BlockPool, PixelActorConfig, PixelActorPool, PolicyKind, Throttle,
     TransitionBlock, TransportBlock,
 };
+use crate::data::supervisor::{RestartDecision, RestartPolicy, RestartTracker};
 use crate::manifest::{Artifact, Dtype, Manifest};
 use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, Staging};
+use crate::runtime::checkpoint::{Checkpoint, CheckpointLineage};
 use crate::runtime::Runtime;
-use crate::util::log::CsvLogger;
+use crate::util::log::{self, CsvLogger};
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::timer::PhaseTimer;
@@ -83,6 +86,24 @@ pub struct TrainerConfig {
     /// Write an integrity-checked checkpoint here at every sync point
     /// ("" = off); restored automatically at startup when present.
     pub checkpoint_path: String,
+    /// Rotated checkpoint generations kept next to `checkpoint_path`
+    /// (plus the `last_good` target, which is never pruned).
+    pub keep_checkpoints: usize,
+    /// Respawn budget per crashed actor thread (0 = never respawn).
+    pub max_actor_restarts: u32,
+    /// First-respawn backoff in milliseconds; doubles per restart,
+    /// capped at 5s.
+    pub restart_backoff_ms: u64,
+    /// Flag an actor thread as stalled after this many milliseconds
+    /// without a heartbeat (0 = watchdog off).
+    pub stall_timeout_ms: u64,
+    /// Per-member health scan: |param| above this is a norm explosion
+    /// (0 = magnitude check off; NaN/Inf are always faults).
+    pub health_norm_limit: f64,
+    /// Deterministic fault injection for resilience tests (see
+    /// [`FaultPlan`](crate::data::supervisor::FaultPlan)).
+    #[cfg(feature = "fault-inject")]
+    pub fault_plan: Option<std::sync::Arc<crate::data::supervisor::FaultPlan>>,
 }
 
 impl Default for TrainerConfig {
@@ -110,6 +131,13 @@ impl Default for TrainerConfig {
             return_window: 10,
             hyper_spec: None,
             checkpoint_path: String::new(),
+            keep_checkpoints: 3,
+            max_actor_restarts: 3,
+            restart_backoff_ms: 100,
+            stall_timeout_ms: 5_000,
+            health_norm_limit: 1e6,
+            #[cfg(feature = "fault-inject")]
+            fault_plan: None,
         }
     }
 }
@@ -193,6 +221,40 @@ impl TrainerConfig {
 
     pub fn with_actor_threads(mut self, n: usize) -> Self {
         self.n_actor_threads = n;
+        self
+    }
+
+    pub fn with_keep_checkpoints(mut self, n: usize) -> Self {
+        self.keep_checkpoints = n;
+        self
+    }
+
+    pub fn with_max_actor_restarts(mut self, n: u32) -> Self {
+        self.max_actor_restarts = n;
+        self
+    }
+
+    pub fn with_restart_backoff_ms(mut self, ms: u64) -> Self {
+        self.restart_backoff_ms = ms;
+        self
+    }
+
+    pub fn with_stall_timeout_ms(mut self, ms: u64) -> Self {
+        self.stall_timeout_ms = ms;
+        self
+    }
+
+    pub fn with_health_norm_limit(mut self, limit: f64) -> Self {
+        self.health_norm_limit = limit;
+        self
+    }
+
+    #[cfg(feature = "fault-inject")]
+    pub fn with_fault_plan(
+        mut self,
+        plan: std::sync::Arc<crate::data::supervisor::FaultPlan>,
+    ) -> Self {
+        self.fault_plan = Some(plan);
         self
     }
 }
@@ -288,6 +350,8 @@ impl Domain for Continuous {
                 ratio: cfg.ratio / artifact.pop.max(1) as f64,
                 lead_steps: 4 * artifact.batch as u64 * artifact.pop as u64,
                 throttle_sleep_us: cfg.actor_sleep_us,
+                #[cfg(feature = "fault-inject")]
+                fault_plan: cfg.fault_plan.clone(),
             },
             cfg.n_actor_threads,
             throttle,
@@ -360,6 +424,8 @@ impl Domain for Pixel {
                 ratio: cfg.ratio / artifact.pop.max(1) as f64,
                 lead_steps: 4 * artifact.batch as u64 * artifact.pop as u64,
                 throttle_sleep_us: cfg.actor_sleep_us,
+                #[cfg(feature = "fault-inject")]
+                fault_plan: cfg.fault_plan.clone(),
             },
             cfg.n_actor_threads,
             throttle,
@@ -408,6 +474,13 @@ pub struct Summary {
     pub env_steps: u64,
     pub best_return: f64,
     pub mean_return: f64,
+    /// Crashed actor threads respawned by the supervisor.
+    pub actor_restarts: u64,
+    /// Stall events flagged by the heartbeat watchdog (a thread can
+    /// recover and re-stall; each transition counts once).
+    pub stalled_actors: u64,
+    /// Quarantined members repaired in place from a healthy donor.
+    pub members_repaired: u64,
     pub timers: PhaseTimer,
 }
 
@@ -425,6 +498,8 @@ pub struct Trainer<D: Domain> {
     rng: Rng,
     /// Reusable host staging buffers, one slot per (step, agent).
     staging: Staging,
+    /// Rotated checkpoint history (None when checkpointing is off).
+    lineage: Option<CheckpointLineage>,
     _domain: PhantomData<D>,
 }
 
@@ -476,6 +551,11 @@ impl<D: Domain> Trainer<D> {
             cfg.ratio_slack,
             (cfg.warmup_steps * artifact.pop) as u64,
         );
+        let lineage = if cfg.checkpoint_path.is_empty() {
+            None
+        } else {
+            Some(CheckpointLineage::new(&cfg.checkpoint_path, cfg.keep_checkpoints))
+        };
         let mut trainer = Trainer {
             cfg,
             rt,
@@ -485,18 +565,34 @@ impl<D: Domain> Trainer<D> {
             gate,
             rng,
             staging,
+            lineage,
             _domain: PhantomData,
         };
-        // resume from checkpoint when one exists for this artifact
+        // Auto-resume: restore the newest checkpoint in the lineage that
+        // loads (magic + hash), matches this artifact, AND passes a
+        // member health scan — a checkpoint of a diverged population is
+        // skipped in favor of an older healthy one (`last_good`). A
+        // fully unrestorable lineage falls through to a fresh start
+        // instead of erroring: the run must come up.
         let ckpt = trainer.cfg.checkpoint_path.clone();
-        if !ckpt.is_empty() && std::path::Path::new(&ckpt).exists() {
-            let c = crate::runtime::checkpoint::Checkpoint::load(&ckpt)?;
-            trainer.population.train_state =
-                c.restore(&trainer.rt, &trainer.population.artifact)?;
-            trainer.population.view.publish(c.state);
-            crate::util::log::info(&format!(
-                "resumed from {ckpt} at {} updates", c.updates_done
-            ));
+        if !ckpt.is_empty() {
+            let art = trainer.population.artifact.clone();
+            let norm_limit = trainer.cfg.health_norm_limit as f32;
+            let found = CheckpointLineage::resume(std::path::Path::new(&ckpt), |c| {
+                c.artifact_name == art.name
+                    && c.state.len() == art.state_size
+                    && health::scan_members(&art, &c.state, norm_limit).all_healthy()
+            });
+            if let Some((path, c)) = found {
+                trainer.population.train_state =
+                    c.restore(&trainer.rt, &trainer.population.artifact)?;
+                trainer.population.view.publish(c.state);
+                log::info(&format!(
+                    "resumed from {} at {} updates",
+                    path.display(),
+                    c.updates_done
+                ));
+            }
         }
         Ok(trainer)
     }
@@ -586,18 +682,41 @@ impl<D: Domain> Trainer<D> {
         } else {
             let mut cols: Vec<&str> = vec![
                 "wall_s", "updates", "env_steps", "best_return", "mean_return", "episodes",
+                "actor_restarts", "stalled_actors", "members_repaired",
             ];
             cols.extend(D::metrics().iter().map(|(col, _)| *col));
             Some(CsvLogger::create(&self.cfg.csv_path, &cols)?)
         };
 
         let throttle = Throttle::new();
-        let pool = D::spawn_actors(
+        let mut pool = D::spawn_actors(
             &art,
             self.population.view.clone(),
             &self.cfg,
             throttle.clone(),
         )?;
+
+        // Supervision state: restart bookkeeping per actor thread, the
+        // watchdog's current stall flags, and the Summary counters.
+        let mut restarts = RestartTracker::new(
+            RestartPolicy {
+                max_restarts: self.cfg.max_actor_restarts,
+                backoff_base_ms: self.cfg.restart_backoff_ms.max(1),
+                backoff_cap_ms: self.cfg.restart_backoff_ms.max(5_000),
+            },
+            pool.threads(),
+        );
+        let mut actor_restarts: u64 = 0;
+        let mut stall_events: u64 = 0;
+        let mut members_repaired: u64 = 0;
+        let mut stalled_flags = vec![false; pool.threads()];
+        #[cfg(feature = "fault-inject")]
+        let mut nan_faults_fired: Vec<bool> = self
+            .cfg
+            .fault_plan
+            .as_ref()
+            .map(|p| vec![false; p.nan_members.len()])
+            .unwrap_or_default();
 
         let start = Instant::now();
         let mut updates: u64 = 0;
@@ -610,6 +729,51 @@ impl<D: Domain> Trainer<D> {
                 {
                     break;
                 }
+                // ---- supervise the actor pool ----------------------------
+                while let Some(exit) = pool.poll_exit() {
+                    if !exit.cause.is_failure() {
+                        continue; // clean stop (shutdown path)
+                    }
+                    log::warn(&format!(
+                        "actor thread {} (agents {:?}) died: {:?}",
+                        exit.thread, exit.agents, exit.cause
+                    ));
+                    match restarts.on_failure(exit.thread, Instant::now()) {
+                        RestartDecision::Scheduled => {}
+                        RestartDecision::GaveUp => log::warn(&format!(
+                            "actor thread {} exhausted its {} restarts; its agents \
+                             stay down for the rest of the run",
+                            exit.thread, self.cfg.max_actor_restarts
+                        )),
+                    }
+                }
+                for t in restarts.due(Instant::now()) {
+                    if pool.respawn(t) {
+                        actor_restarts += 1;
+                        log::info(&format!(
+                            "respawned actor thread {t} (restart #{actor_restarts})"
+                        ));
+                    }
+                }
+                if self.cfg.stall_timeout_ms > 0 {
+                    for t in 0..pool.threads() {
+                        let stalled =
+                            pool.heartbeats().is_stalled(t, self.cfg.stall_timeout_ms);
+                        if stalled && !stalled_flags[t] {
+                            stalled_flags[t] = true;
+                            stall_events += 1;
+                            log::warn(&format!(
+                                "actor thread {t} stalled: no heartbeat for {} ms \
+                                 (flagging only; threads cannot be force-killed)",
+                                pool.heartbeats().millis_since(t)
+                            ));
+                        } else if !stalled && stalled_flags[t] {
+                            stalled_flags[t] = false;
+                            log::info(&format!("actor thread {t} resumed heartbeats"));
+                        }
+                    }
+                }
+
                 // ---- drain actor messages --------------------------------
                 let t0 = Instant::now();
                 let mut drained = 0u64;
@@ -655,6 +819,48 @@ impl<D: Domain> Trainer<D> {
                     let t2 = Instant::now();
                     let mut host = self.population.sync_to_host()?;
                     timers.add("host_sync", t2.elapsed().as_secs_f64());
+                    // fault injection: simulate a member diverging by the
+                    // time this sync observes the state (fires once per
+                    // planned (member, update) entry)
+                    #[cfg(feature = "fault-inject")]
+                    if let Some(plan) = self.cfg.fault_plan.clone() {
+                        for (i, &(m, at)) in plan.nan_members.iter().enumerate() {
+                            if updates >= at && !nan_faults_fired[i] {
+                                nan_faults_fired[i] = true;
+                                health::poison_member(&art, &mut host, m);
+                                log::warn(&format!(
+                                    "fault-inject: NaN-poisoned member {m} at {updates} updates"
+                                ));
+                            }
+                        }
+                    }
+                    // ---- member health scan + quarantine repair ----------
+                    let t_h = Instant::now();
+                    let scan = health::scan_members(
+                        &art,
+                        &host,
+                        self.cfg.health_norm_limit as f32,
+                    );
+                    timers.add("health_scan", t_h.elapsed().as_secs_f64());
+                    let scan_clean = scan.all_healthy();
+                    let mut repaired_this_sync = false;
+                    if !scan_clean {
+                        let fitness = self.population.fitness();
+                        let outcome =
+                            health::repair_members(&art, &mut host, &scan, &fitness)?;
+                        members_repaired += outcome.repaired.len() as u64;
+                        repaired_this_sync = true;
+                        for &m in &outcome.repaired {
+                            // the repaired member is a new lineage: its old
+                            // returns would poison fitness ranking
+                            self.population.returns[m].clear();
+                        }
+                        log::warn(&format!(
+                            "quarantined members {:?} repaired from donor {} \
+                             ({} total repairs)",
+                            outcome.repaired, outcome.donor, members_repaired
+                        ));
+                    }
                     let fitness = self.population.fitness();
                     let mut ctx = EvolveCtx {
                         artifact: &art,
@@ -663,7 +869,7 @@ impl<D: Domain> Trainer<D> {
                         rng: &mut self.rng,
                         updates_done: updates,
                         env_steps: self.gate.env_steps(),
-                        mutated: false,
+                        mutated: repaired_this_sync,
                         reset_returns: Vec::new(),
                     };
                     controller.on_sync(&mut ctx)?;
@@ -678,10 +884,12 @@ impl<D: Domain> Trainer<D> {
                         self.population.load_host(&self.rt, host)?;
                         timers.add("evolve_upload", t3.elapsed().as_secs_f64());
                     }
-                    if !self.cfg.checkpoint_path.is_empty() {
-                        let c = crate::runtime::checkpoint::Checkpoint::capture(
-                            &self.population.train_state)?;
-                        c.save(&self.cfg.checkpoint_path)?;
+                    if self.lineage.is_some() {
+                        let c = Checkpoint::capture(&self.population.train_state)?;
+                        // `last_good` advances only when this sync's scan
+                        // (before any repair) found every member healthy —
+                        // so resume can always reach a pre-divergence state
+                        self.lineage.as_mut().unwrap().save(&c, scan_clean)?;
                     }
                     if let Some(csv) = csv.as_mut() {
                         let f = self.population.fitness();
@@ -706,6 +914,9 @@ impl<D: Domain> Trainer<D> {
                             if best.is_finite() { best } else { f64::NAN },
                             stats::mean(&finite),
                             episodes as f64,
+                            actor_restarts as f64,
+                            stalled_flags.iter().filter(|&&s| s).count() as f64,
+                            members_repaired as f64,
                         ];
                         row.extend(D::metrics().iter().map(|(_, field)| metric_mean(field)));
                         csv.row(&row)?;
@@ -726,6 +937,9 @@ impl<D: Domain> Trainer<D> {
             env_steps: self.gate.env_steps(),
             best_return: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
             mean_return: stats::mean(&finite),
+            actor_restarts,
+            stalled_actors: stall_events,
+            members_repaired,
             timers,
         })
     }
@@ -792,7 +1006,12 @@ mod tests {
             .with_csv("out.csv")
             .with_checkpoint("ckpt.bin")
             .with_max_seconds(3.5)
-            .with_actor_threads(2);
+            .with_actor_threads(2)
+            .with_keep_checkpoints(7)
+            .with_max_actor_restarts(5)
+            .with_restart_backoff_ms(250)
+            .with_stall_timeout_ms(1234)
+            .with_health_norm_limit(1e5);
         assert_eq!(cfg.algo, "dqn");
         assert_eq!(cfg.env, "minatar");
         assert_eq!(cfg.pop, 8);
@@ -809,6 +1028,11 @@ mod tests {
         assert_eq!(cfg.checkpoint_path, "ckpt.bin");
         assert!((cfg.max_seconds - 3.5).abs() < 1e-12);
         assert_eq!(cfg.n_actor_threads, 2);
+        assert_eq!(cfg.keep_checkpoints, 7);
+        assert_eq!(cfg.max_actor_restarts, 5);
+        assert_eq!(cfg.restart_backoff_ms, 250);
+        assert_eq!(cfg.stall_timeout_ms, 1234);
+        assert!((cfg.health_norm_limit - 1e5).abs() < 1e-9);
         // the config is Clone + Debug (sweeps copy it, tests print it)
         let copy = cfg.clone();
         assert!(format!("{copy:?}").contains("minatar"));

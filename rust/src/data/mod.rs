@@ -3,3 +3,4 @@
 //! [`pipeline::BlockPool`] and its two instantiations,
 //! [`pipeline::ActorPool`] and [`pipeline::PixelActorPool`]).
 pub mod pipeline;
+pub mod supervisor;

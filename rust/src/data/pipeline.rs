@@ -28,13 +28,25 @@
 //!   storage dtype) with epsilon-greedy action selection over the block's
 //!   q-values; per-agent epsilon comes from the state field `eps_greedy`
 //!   (the `HyperSpec::dqn` space) when present.
+//!
+//! The pool is **supervised**: every thread body runs under
+//! `catch_unwind` and reports a structured
+//! [`ActorExit`](crate::data::supervisor::ActorExit) on [`BlockPool`]'s
+//! event channel when it dies (panic or clean stop), every thread bumps a
+//! [`Heartbeats`](crate::data::supervisor::Heartbeats) slot each loop
+//! iteration for the learner-side stall watchdog, and
+//! [`BlockPool::respawn`] restarts a dead thread in place (fresh recycle
+//! lane, bumped incarnation `generation`). Dropping the pool sets the
+//! stop flag and joins all threads, so error paths never leak actors.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::population::ParamView;
+use crate::data::supervisor::{panic_message, ActorExit, ExitCause, Heartbeats};
 use crate::envs::pixel_vec_env::PixelVecEnv;
 use crate::envs::vec_env::{EpisodeEnd, VecEnv};
 use crate::manifest::Artifact;
@@ -298,6 +310,10 @@ pub struct ActorConfig {
     pub lead_steps: u64,
     /// Backoff sleep while ratio-throttled, in microseconds.
     pub throttle_sleep_us: u64,
+    /// Deterministic fault injection (tests only; see
+    /// [`FaultPlan`](crate::data::supervisor::FaultPlan)).
+    #[cfg(feature = "fault-inject")]
+    pub fault_plan: Option<Arc<crate::data::supervisor::FaultPlan>>,
 }
 
 impl Default for ActorConfig {
@@ -315,6 +331,8 @@ impl Default for ActorConfig {
             ratio: 1.0,
             lead_steps: 2048,
             throttle_sleep_us: 200,
+            #[cfg(feature = "fault-inject")]
+            fault_plan: None,
         }
     }
 }
@@ -339,6 +357,10 @@ pub struct PixelActorConfig {
     pub lead_steps: u64,
     /// Backoff sleep while ratio-throttled, in microseconds.
     pub throttle_sleep_us: u64,
+    /// Deterministic fault injection (tests only; see
+    /// [`FaultPlan`](crate::data::supervisor::FaultPlan)).
+    #[cfg(feature = "fault-inject")]
+    pub fault_plan: Option<Arc<crate::data::supervisor::FaultPlan>>,
 }
 
 impl Default for PixelActorConfig {
@@ -352,6 +374,8 @@ impl Default for PixelActorConfig {
             ratio: 0.0,
             lead_steps: 2048,
             throttle_sleep_us: 200,
+            #[cfg(feature = "fault-inject")]
+            fault_plan: None,
         }
     }
 }
@@ -388,17 +412,77 @@ impl Throttle {
     }
 }
 
+/// Everything one actor-thread incarnation needs from the pool: its
+/// identity (`thread`, `generation`), the agents it owns, the transport
+/// endpoints, the stop flag, and its heartbeat slot. Handed to the pool's
+/// [`ActorBody`] on every (re)spawn.
+pub struct ActorScope<B: TransportBlock> {
+    /// Actor-thread index within the pool.
+    pub thread: usize,
+    /// Incarnation count: 0 on first spawn, +1 per [`BlockPool::respawn`].
+    pub generation: u64,
+    /// Agents this thread owns (round-robin partition, stable across
+    /// respawns).
+    pub agents: Vec<usize>,
+    pub tx: SyncSender<B>,
+    pub recycle: Receiver<B>,
+    pub stop: Arc<AtomicBool>,
+    pub heartbeats: Heartbeats,
+}
+
+/// A respawnable actor-loop body. The pool keeps it for the lifetime of
+/// the run so [`BlockPool::respawn`] can restart a dead thread with a
+/// fresh [`ActorScope`].
+type ActorBody<B> = Arc<dyn Fn(ActorScope<B>) + Send + Sync>;
+
+/// Run one actor incarnation under `catch_unwind` and report the exit on
+/// the pool's event channel — the supervision contract: a panicking actor
+/// is never silent.
+fn launch<B: TransportBlock>(
+    body: ActorBody<B>,
+    scope: ActorScope<B>,
+    events: Sender<ActorExit>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let thread = scope.thread;
+        let agents = scope.agents.clone();
+        let cause = match std::panic::catch_unwind(AssertUnwindSafe(|| body(scope))) {
+            Ok(()) => ExitCause::Finished,
+            Err(payload) => ExitCause::Panic(panic_message(payload.as_ref())),
+        };
+        let _ = events.send(ActorExit { thread, agents, cause });
+    })
+}
+
 /// Actor thread pool plus its block transport, generic over the block
 /// type: a bounded channel of filled blocks (learner side: `rx`) and one
 /// bounded return lane per thread for drained blocks (the allocation-free
 /// steady state). [`ActorPool`] and [`PixelActorPool`] are its two
 /// instantiations.
+///
+/// Supervision surface: [`BlockPool::poll_exit`] yields structured
+/// [`ActorExit`] events, [`BlockPool::heartbeats`] exposes per-thread
+/// liveness for a stall watchdog, and [`BlockPool::respawn`] restarts a
+/// failed thread. Dropping the pool (or calling [`BlockPool::stop`])
+/// joins every thread.
 pub struct BlockPool<B: TransportBlock> {
     pub rx: Receiver<B>,
+    /// Kept for respawns (the channel stays open for the pool's life).
+    tx: SyncSender<B>,
     /// Per-thread return lanes for spent blocks (index = thread).
     recycle: Vec<SyncSender<B>>,
     stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
+    /// The loop body, retained so dead threads can be respawned.
+    body: ActorBody<B>,
+    /// Agents per thread (stable across respawns).
+    agents_by_thread: Vec<Vec<usize>>,
+    /// Incarnation count per thread.
+    generations: Vec<u64>,
+    heartbeats: Heartbeats,
+    events: Receiver<ActorExit>,
+    event_tx: Sender<ActorExit>,
+    queue_cap: usize,
 }
 
 /// The continuous-control actor pool ([`TransitionBlock`] transport).
@@ -418,38 +502,126 @@ impl<B: TransportBlock> BlockPool<B> {
         }
     }
 
-    pub fn stop(self) {
+    /// Number of actor threads (dead or alive).
+    pub fn threads(&self) -> usize {
+        self.agents_by_thread.len()
+    }
+
+    /// The agents owned by `thread`.
+    pub fn thread_agents(&self, thread: usize) -> &[usize] {
+        &self.agents_by_thread[thread]
+    }
+
+    /// Per-thread liveness timestamps for the learner-side watchdog.
+    pub fn heartbeats(&self) -> &Heartbeats {
+        &self.heartbeats
+    }
+
+    /// Next structured actor-exit event, if any (non-blocking).
+    pub fn poll_exit(&self) -> Option<ActorExit> {
+        self.events.try_recv().ok()
+    }
+
+    /// Restart a dead thread's loop in place: fresh recycle lane, bumped
+    /// `generation`, same agents. Returns false once the pool is
+    /// stopping (or for an unknown thread index). Respawning a thread
+    /// that is still alive is a caller bug — the two incarnations would
+    /// race on the env; only respawn threads that reported an exit.
+    pub fn respawn(&mut self, thread: usize) -> bool {
+        if thread >= self.agents_by_thread.len() || self.stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(self.queue_cap.max(4));
+        self.recycle[thread] = rtx;
+        self.generations[thread] += 1;
+        // fresh beat so the watchdog doesn't instantly re-flag the thread
+        // for time it spent dead
+        self.heartbeats.beat(thread);
+        let scope = ActorScope {
+            thread,
+            generation: self.generations[thread],
+            agents: self.agents_by_thread[thread].clone(),
+            tx: self.tx.clone(),
+            recycle: rrx,
+            stop: self.stop.clone(),
+            heartbeats: self.heartbeats.clone(),
+        };
+        self.handles.push(launch(self.body.clone(), scope, self.event_tx.clone()));
+        true
+    }
+
+    /// Set the stop flag, unblock senders, and join every thread.
+    /// Idempotent — also what [`Drop`] runs, so early `?` returns in a
+    /// training loop can never leak live actor threads.
+    pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // drain so blocked senders can observe the stop flag
         while self.rx.try_recv().is_ok() {}
-        for h in self.handles {
+        for h in std::mem::take(&mut self.handles) {
             let _ = h.join();
         }
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+}
+
+impl<B: TransportBlock> Drop for BlockPool<B> {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
 /// Shared pool scaffolding: partition `pop` agents round-robin over
-/// `n_threads`, wire the block channel + per-thread recycling lanes, and
-/// let `spawn_one` start each thread's loop.
+/// `n_threads`, wire the block channel + per-thread recycling lanes + the
+/// supervision side channel (exit events, heartbeats), and launch each
+/// thread's loop under `catch_unwind`.
 fn spawn_block_pool<B: TransportBlock>(
     pop: usize,
     n_threads: usize,
     queue_cap: usize,
-    spawn_one: impl Fn(usize, Vec<usize>, SyncSender<B>, Receiver<B>, Arc<AtomicBool>)
-        -> JoinHandle<()>,
+    body: ActorBody<B>,
 ) -> BlockPool<B> {
     let n_threads = n_threads.clamp(1, pop);
     let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
+    let (event_tx, events) = std::sync::mpsc::channel();
     let stop = Arc::new(AtomicBool::new(false));
+    let heartbeats = Heartbeats::new(n_threads);
     let mut handles = Vec::new();
     let mut recycle = Vec::new();
+    let mut agents_by_thread = Vec::new();
     for t in 0..n_threads {
         let agents: Vec<usize> = (0..pop).filter(|a| a % n_threads == t).collect();
         let (rtx, rrx) = std::sync::mpsc::sync_channel(queue_cap.max(4));
         recycle.push(rtx);
-        handles.push(spawn_one(t, agents, tx.clone(), rrx, stop.clone()));
+        heartbeats.beat(t); // liveness clock starts at spawn, not first block
+        let scope = ActorScope {
+            thread: t,
+            generation: 0,
+            agents: agents.clone(),
+            tx: tx.clone(),
+            recycle: rrx,
+            stop: stop.clone(),
+            heartbeats: heartbeats.clone(),
+        };
+        agents_by_thread.push(agents);
+        handles.push(launch(body.clone(), scope, event_tx.clone()));
     }
-    BlockPool { rx, recycle, stop, handles }
+    BlockPool {
+        rx,
+        tx,
+        recycle,
+        stop,
+        handles,
+        body,
+        agents_by_thread,
+        generations: vec![0; n_threads],
+        heartbeats,
+        events,
+        event_tx,
+        queue_cap,
+    }
 }
 
 impl BlockPool<TransitionBlock> {
@@ -480,15 +652,19 @@ impl BlockPool<TransitionBlock> {
             cfg.env,
             cfg.policy
         );
-        Ok(spawn_block_pool(artifact.pop, n_threads, cfg.queue_cap, |t, agents, tx, rrx, stop| {
-            let view2 = view.clone();
-            let art = artifact.clone();
-            let th = throttle.clone();
-            let cfg2 = ActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
-            std::thread::spawn(move || {
-                actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop, th);
-            })
-        }))
+        let art = artifact.clone();
+        let queue_cap = cfg.queue_cap;
+        let body: ActorBody<TransitionBlock> = Arc::new(move |scope: ActorScope<_>| {
+            // per-incarnation seed: respawned actors explore fresh
+            // trajectories instead of replaying the run that crashed
+            let seed = cfg
+                .seed
+                .wrapping_add(1000 + scope.thread as u64)
+                .wrapping_add(scope.generation.wrapping_mul(0x9E37_79B9));
+            let cfg2 = ActorConfig { seed, ..cfg.clone() };
+            actor_loop(&art, view.clone(), &cfg2, scope, throttle.clone());
+        });
+        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body))
     }
 }
 
@@ -508,16 +684,17 @@ impl BlockPool<PixelTransitionBlock> {
         // spawned thread and leave the learner polling an idle channel).
         let probe = PixelVecEnv::new(&cfg.env, 1)?;
         validate_pixel_layout(artifact, probe.frame(), probe.n_actions())?;
-        Ok(spawn_block_pool(artifact.pop, n_threads, cfg.queue_cap, |t, agents, tx, rrx, stop| {
-            let view2 = view.clone();
-            let art = artifact.clone();
-            let th = throttle.clone();
-            let cfg2 =
-                PixelActorConfig { seed: cfg.seed.wrapping_add(1000 + t as u64), ..cfg.clone() };
-            std::thread::spawn(move || {
-                pixel_actor_loop(&art, view2, &cfg2, t, &agents, tx, rrx, stop, th);
-            })
-        }))
+        let art = artifact.clone();
+        let queue_cap = cfg.queue_cap;
+        let body: ActorBody<PixelTransitionBlock> = Arc::new(move |scope: ActorScope<_>| {
+            let seed = cfg
+                .seed
+                .wrapping_add(1000 + scope.thread as u64)
+                .wrapping_add(scope.generation.wrapping_mul(0x9E37_79B9));
+            let cfg2 = PixelActorConfig { seed, ..cfg.clone() };
+            pixel_actor_loop(&art, view.clone(), &cfg2, scope, throttle.clone());
+        });
+        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body))
     }
 }
 
@@ -525,13 +702,12 @@ fn actor_loop(
     artifact: &Artifact,
     view: ParamView,
     cfg: &ActorConfig,
-    thread: usize,
-    agents: &[usize],
-    tx: SyncSender<TransitionBlock>,
-    recycle: Receiver<TransitionBlock>,
-    stop: Arc<AtomicBool>,
+    scope: ActorScope<TransitionBlock>,
     throttle: Throttle,
 ) {
+    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats } = scope;
+    let _ = generation; // used by the fault-inject hook only
+    let agents = &agents[..];
     let mut rng = Rng::new(cfg.seed);
     let n = agents.len();
     let mut venv = VecEnv::new(&cfg.env, n).unwrap();
@@ -559,8 +735,13 @@ fn actor_loop(
     let mut iters: usize = 0;
     let pop_total = artifact.pop as u64;
     loop {
+        heartbeats.beat(thread);
         if stop.load(Ordering::Relaxed) {
             break;
+        }
+        #[cfg(feature = "fault-inject")]
+        if let Some(plan) = &cfg.fault_plan {
+            plan.actor_tick(thread, iters, generation);
         }
         // Ratio throttling: wait while actors are too far ahead of the
         // learner (paper Appendix A blocking rule).
@@ -610,7 +791,7 @@ fn actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
-        if send_blocking(&tx, block, &stop).is_err() {
+        if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
             break;
         }
         // Reuse a drained block when the learner returned one; allocate
@@ -629,13 +810,12 @@ fn pixel_actor_loop(
     artifact: &Artifact,
     view: ParamView,
     cfg: &PixelActorConfig,
-    thread: usize,
-    agents: &[usize],
-    tx: SyncSender<PixelTransitionBlock>,
-    recycle: Receiver<PixelTransitionBlock>,
-    stop: Arc<AtomicBool>,
+    scope: ActorScope<PixelTransitionBlock>,
     throttle: Throttle,
 ) {
+    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats } = scope;
+    let _ = generation; // used by the fault-inject hook only
+    let agents = &agents[..];
     let mut rng = Rng::new(cfg.seed);
     let n = agents.len();
     let mut venv = PixelVecEnv::new(&cfg.env, n).unwrap();
@@ -660,8 +840,13 @@ fn pixel_actor_loop(
     let mut iters: usize = 0;
     let warmup_total = cfg.warmup_steps as u64 * artifact.pop as u64;
     loop {
+        heartbeats.beat(thread);
         if stop.load(Ordering::Relaxed) {
             break;
+        }
+        #[cfg(feature = "fault-inject")]
+        if let Some(plan) = &cfg.fault_plan {
+            plan.actor_tick(thread, iters, generation);
         }
         // Ratio throttling (paper Appendix A blocking rule).
         if !throttle.may_step_with(cfg.ratio, warmup_total, cfg.lead_steps) {
@@ -713,7 +898,7 @@ fn pixel_actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
-        if send_blocking(&tx, block, &stop).is_err() {
+        if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
             break;
         }
         block = match recycle.try_recv() {
@@ -803,8 +988,15 @@ fn select_action(kind: PolicyKind, raw: &[f32], act: &mut [f32], noise: f32, rng
 }
 
 /// Bounded-channel send that keeps checking the stop flag (so shutdown
-/// never deadlocks against a full queue).
-fn send_blocking<T>(tx: &SyncSender<T>, mut msg: T, stop: &AtomicBool) -> Result<(), ()> {
+/// never deadlocks against a full queue). `beat` keeps the sender's
+/// heartbeat fresh while it waits on a full queue — a backpressured
+/// actor is blocked, not stalled.
+fn send_blocking<T>(
+    tx: &SyncSender<T>,
+    mut msg: T,
+    stop: &AtomicBool,
+    beat: impl Fn(),
+) -> Result<(), ()> {
     loop {
         match tx.try_send(msg) {
             Ok(()) => return Ok(()),
@@ -812,6 +1004,7 @@ fn send_blocking<T>(tx: &SyncSender<T>, mut msg: T, stop: &AtomicBool) -> Result
                 if stop.load(Ordering::Relaxed) {
                     return Err(());
                 }
+                beat();
                 msg = m;
                 std::thread::yield_now();
             }
@@ -975,5 +1168,110 @@ mod tests {
         }
         assert!(th.env_steps.load(Ordering::Relaxed) > cfg.warmup_steps as u64 * pop);
         assert!(th.updates.load(Ordering::Relaxed) > 0);
+    }
+
+    /// A body that returns cleanly reports `Finished`; the pool joins all
+    /// threads on `stop` and agents partition round-robin.
+    #[test]
+    fn block_pool_reports_clean_exits() {
+        let body: ActorBody<TransitionBlock> = Arc::new(|scope: ActorScope<TransitionBlock>| {
+            scope.heartbeats.beat(scope.thread);
+            let b = TransitionBlock::new(scope.thread, &scope.agents, 1, 1);
+            let _ = scope.tx.send(b);
+        });
+        let pool = spawn_block_pool(4, 2, 4, body);
+        assert_eq!(pool.threads(), 2);
+        assert_eq!(pool.thread_agents(0), &[0, 2]);
+        assert_eq!(pool.thread_agents(1), &[1, 3]);
+        for _ in 0..2 {
+            let b = pool
+                .rx
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("each thread sends one block");
+            pool.recycle(b);
+        }
+        let mut finished = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while finished.len() < 2 {
+            assert!(std::time::Instant::now() < deadline, "missing exit events");
+            if let Some(e) = pool.poll_exit() {
+                assert!(!e.cause.is_failure(), "clean return must not be a failure");
+                assert_eq!(e.agents, pool.thread_agents(e.thread));
+                finished.push(e.thread);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![0, 1]);
+        pool.stop();
+    }
+
+    /// A panicking body surfaces as a structured `Panic` exit (message
+    /// preserved) and `respawn` restarts the thread with a bumped
+    /// generation — the next incarnation runs in its place.
+    #[test]
+    fn block_pool_respawns_after_panic() {
+        let body: ActorBody<TransitionBlock> = Arc::new(|scope: ActorScope<TransitionBlock>| {
+            if scope.generation == 0 {
+                panic!("planned pipeline-test panic");
+            }
+            // respawned incarnation: prove liveness, then idle until stop
+            let b = TransitionBlock::new(scope.thread, &scope.agents, 1, 1);
+            let _ = scope.tx.send(b);
+            while !scope.stop.load(Ordering::Relaxed) {
+                scope.heartbeats.beat(scope.thread);
+                std::thread::yield_now();
+            }
+        });
+        let mut pool = spawn_block_pool(2, 1, 4, body);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let exit = loop {
+            assert!(std::time::Instant::now() < deadline, "no panic exit observed");
+            match pool.poll_exit() {
+                Some(e) => break e,
+                None => std::thread::yield_now(),
+            }
+        };
+        assert_eq!(exit.thread, 0);
+        assert_eq!(exit.agents, vec![0, 1]);
+        assert!(exit.cause.is_failure());
+        match &exit.cause {
+            ExitCause::Panic(msg) => assert!(msg.contains("planned pipeline-test panic")),
+            other => panic!("expected Panic, got {other:?}"),
+        }
+        assert!(pool.respawn(0));
+        // the generation-1 incarnation is alive and producing blocks
+        let b = pool
+            .rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("respawned thread sends a block");
+        assert_eq!(b.thread(), 0);
+        pool.stop();
+    }
+
+    /// Dropping the pool (the early-`?` path in `Trainer::run`) sets the
+    /// stop flag and joins every thread; respawn is refused once stopping.
+    #[test]
+    fn block_pool_drop_stops_threads() {
+        let running = Arc::new(AtomicU64::new(0));
+        let r = running.clone();
+        let body: ActorBody<TransitionBlock> = Arc::new(move |scope: ActorScope<TransitionBlock>| {
+            r.fetch_add(1, Ordering::SeqCst);
+            while !scope.stop.load(Ordering::Relaxed) {
+                std::thread::yield_now();
+            }
+            r.fetch_sub(1, Ordering::SeqCst);
+        });
+        let mut pool = spawn_block_pool(2, 2, 4, body);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while running.load(Ordering::SeqCst) < 2 {
+            assert!(std::time::Instant::now() < deadline, "threads never started");
+            std::thread::yield_now();
+        }
+        pool.shutdown();
+        assert_eq!(running.load(Ordering::SeqCst), 0, "shutdown must join all threads");
+        assert!(!pool.respawn(0), "respawn after shutdown must be refused");
+        drop(pool); // second shutdown via Drop: must be a no-op, not a hang
     }
 }

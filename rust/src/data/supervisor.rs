@@ -1,0 +1,352 @@
+//! Actor-pool supervision: structured exit events, per-thread heartbeats,
+//! restart bookkeeping with capped exponential backoff, and (behind the
+//! `fault-inject` feature) a deterministic fault-injection plan.
+//!
+//! The paper's premise — a population trains at barely more than the cost
+//! of one agent — only holds if one bad actor thread cannot cost the whole
+//! multi-hour run. The pieces here let the learner treat its actor pool
+//! like a supervised process tree: every thread body runs under
+//! `catch_unwind` and reports an [`ActorExit`] on the pool's event
+//! channel; every thread bumps a [`Heartbeats`] slot each loop iteration
+//! so a learner-side watchdog can flag stalls; and a [`RestartTracker`]
+//! decides when a dead thread may be respawned (capped exponential
+//! backoff, bounded by `max_restarts` per thread).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why an actor thread's loop ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExitCause {
+    /// Clean exit: the stop flag was observed (or the channel closed).
+    Finished,
+    /// The loop body panicked; the payload's message, when extractable.
+    Panic(String),
+}
+
+impl ExitCause {
+    /// Does this exit warrant a respawn? Clean stops do not.
+    pub fn is_failure(&self) -> bool {
+        matches!(self, ExitCause::Panic(_))
+    }
+}
+
+/// Structured report sent by a dying actor thread over the pool's event
+/// channel — the learner's only reliable signal that a thread is gone
+/// (a panic inside `std::thread::spawn` is otherwise silent, and the
+/// learner would just watch a slowly starving block channel).
+#[derive(Clone, Debug)]
+pub struct ActorExit {
+    /// Actor-thread index within the pool.
+    pub thread: usize,
+    /// Agents the thread owned (round-robin partition at spawn).
+    pub agents: Vec<usize>,
+    pub cause: ExitCause,
+}
+
+/// Extract a human-readable message from a `catch_unwind` payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Per-thread liveness timestamps. Each actor stores "millis since the
+/// pool's epoch" into its slot once per loop iteration (one relaxed
+/// atomic store — noise next to an env step); the learner-side watchdog
+/// reads them to flag threads that have neither produced blocks nor
+/// exited: livelocks, runaway env steps, injected stalls.
+#[derive(Clone)]
+pub struct Heartbeats {
+    epoch: Instant,
+    beats: Arc<Vec<AtomicU64>>,
+}
+
+impl Heartbeats {
+    pub fn new(threads: usize) -> Self {
+        Heartbeats {
+            epoch: Instant::now(),
+            beats: Arc::new((0..threads).map(|_| AtomicU64::new(0)).collect()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.beats.len()
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Record that `thread` is alive right now.
+    pub fn beat(&self, thread: usize) {
+        if let Some(b) = self.beats.get(thread) {
+            b.store(self.now_ms(), Ordering::Relaxed);
+        }
+    }
+
+    /// Milliseconds since `thread` last beat.
+    pub fn millis_since(&self, thread: usize) -> u64 {
+        match self.beats.get(thread) {
+            Some(b) => self.now_ms().saturating_sub(b.load(Ordering::Relaxed)),
+            None => 0,
+        }
+    }
+
+    /// Is `thread` stalled under the given timeout? `timeout_ms == 0`
+    /// disables the watchdog.
+    pub fn is_stalled(&self, thread: usize, timeout_ms: u64) -> bool {
+        timeout_ms > 0 && self.millis_since(thread) > timeout_ms
+    }
+}
+
+/// Restart limits for failed actor threads.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    /// Respawns allowed per thread over the run (0 = never respawn).
+    pub max_restarts: u32,
+    /// First-restart backoff; doubles per subsequent restart.
+    pub backoff_base_ms: u64,
+    /// Backoff growth cap.
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy { max_restarts: 3, backoff_base_ms: 100, backoff_cap_ms: 5_000 }
+    }
+}
+
+impl RestartPolicy {
+    /// Backoff before restart number `restart` (1-based): capped
+    /// exponential `base * 2^(restart-1)`.
+    pub fn backoff(&self, restart: u32) -> Duration {
+        let exp = restart.saturating_sub(1).min(16);
+        let ms = self.backoff_base_ms.saturating_mul(1u64 << exp);
+        Duration::from_millis(ms.min(self.backoff_cap_ms))
+    }
+}
+
+/// Outcome of reporting a thread failure to the tracker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RestartDecision {
+    /// Respawn once the backoff elapses (poll [`RestartTracker::due`]).
+    Scheduled,
+    /// The thread exhausted its restart budget; its agents stay down.
+    GaveUp,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct ThreadRestarts {
+    restarts: u32,
+    pending_at: Option<Instant>,
+    gave_up: bool,
+}
+
+/// Learner-side bookkeeping of actor-thread failures: which threads are
+/// waiting out a backoff, which are out of budget, and how many restarts
+/// happened in total (the `Summary.actor_restarts` metric). Time is
+/// passed in by the caller so the schedule is testable without sleeping.
+pub struct RestartTracker {
+    policy: RestartPolicy,
+    threads: Vec<ThreadRestarts>,
+}
+
+impl RestartTracker {
+    pub fn new(policy: RestartPolicy, threads: usize) -> Self {
+        RestartTracker { policy, threads: vec![ThreadRestarts::default(); threads] }
+    }
+
+    /// Record a thread failure; schedules a respawn or gives up.
+    pub fn on_failure(&mut self, thread: usize, now: Instant) -> RestartDecision {
+        let Some(t) = self.threads.get_mut(thread) else { return RestartDecision::GaveUp };
+        if t.gave_up || t.restarts >= self.policy.max_restarts {
+            t.gave_up = true;
+            return RestartDecision::GaveUp;
+        }
+        t.restarts += 1;
+        t.pending_at = Some(now + self.policy.backoff(t.restarts));
+        RestartDecision::Scheduled
+    }
+
+    /// Threads whose backoff has elapsed — respawn them now. Each thread
+    /// is returned once per scheduled restart.
+    pub fn due(&mut self, now: Instant) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, t) in self.threads.iter_mut().enumerate() {
+            if let Some(at) = t.pending_at {
+                if now >= at {
+                    t.pending_at = None;
+                    out.push(i);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total restarts performed (scheduled) across all threads.
+    pub fn total_restarts(&self) -> u64 {
+        self.threads.iter().map(|t| t.restarts as u64).sum()
+    }
+
+    /// Threads that exhausted their restart budget.
+    pub fn gave_up(&self) -> Vec<usize> {
+        self.threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.gave_up)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Deterministic fault injection for resilience tests: panics and stalls
+/// keyed on (actor thread, loop iteration), NaN-poisoning keyed on
+/// (population member, learner update count). Compiled only under the
+/// `fault-inject` feature so release builds carry zero overhead; faults
+/// fire on an actor's first incarnation only (`generation == 0`), so a
+/// respawned thread proves the recovery path instead of re-dying.
+#[cfg(feature = "fault-inject")]
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// `(thread, iteration)`: panic that actor loop at that iteration.
+    pub actor_panics: Vec<(usize, usize)>,
+    /// `(thread, iteration, millis)`: sleep that long at that iteration.
+    pub actor_stalls: Vec<(usize, usize, u64)>,
+    /// `(member, update)`: NaN-poison that member's params once the
+    /// learner passes that many updates.
+    pub nan_members: Vec<(usize, u64)>,
+}
+
+#[cfg(feature = "fault-inject")]
+impl FaultPlan {
+    /// Actor-side hook, called at the top of each loop iteration.
+    /// Panics when the plan says so (first incarnation only).
+    pub fn actor_tick(&self, thread: usize, iteration: usize, generation: u64) {
+        if generation != 0 {
+            return;
+        }
+        for &(t, at, ms) in &self.actor_stalls {
+            if t == thread && at == iteration {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        for &(t, at) in &self.actor_panics {
+            if t == thread && at == iteration {
+                panic!("fault-inject: planned panic (thread {thread}, iteration {iteration})");
+            }
+        }
+    }
+
+    /// Members whose poisoning update threshold is now crossed.
+    pub fn members_due(&self, updates_done: u64) -> Vec<usize> {
+        self.nan_members
+            .iter()
+            .filter(|&&(_, at)| updates_done >= at)
+            .map(|&(m, _)| m)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy { max_restarts: 10, backoff_base_ms: 100, backoff_cap_ms: 1000 };
+        assert_eq!(p.backoff(1), Duration::from_millis(100));
+        assert_eq!(p.backoff(2), Duration::from_millis(200));
+        assert_eq!(p.backoff(3), Duration::from_millis(400));
+        assert_eq!(p.backoff(4), Duration::from_millis(800));
+        assert_eq!(p.backoff(5), Duration::from_millis(1000)); // capped
+        assert_eq!(p.backoff(30), Duration::from_millis(1000)); // shift-safe
+    }
+
+    #[test]
+    fn tracker_schedules_until_budget_then_gives_up() {
+        let p = RestartPolicy { max_restarts: 2, backoff_base_ms: 10, backoff_cap_ms: 100 };
+        let mut tr = RestartTracker::new(p, 2);
+        let t0 = Instant::now();
+        assert_eq!(tr.on_failure(0, t0), RestartDecision::Scheduled);
+        // not due before the backoff elapses
+        assert!(tr.due(t0).is_empty());
+        assert_eq!(tr.due(t0 + Duration::from_millis(10)), vec![0]);
+        // second failure: longer backoff, still within budget
+        assert_eq!(tr.on_failure(0, t0), RestartDecision::Scheduled);
+        assert!(tr.due(t0 + Duration::from_millis(10)).is_empty());
+        assert_eq!(tr.due(t0 + Duration::from_millis(20)), vec![0]);
+        // budget exhausted
+        assert_eq!(tr.on_failure(0, t0), RestartDecision::GaveUp);
+        assert_eq!(tr.total_restarts(), 2);
+        assert_eq!(tr.gave_up(), vec![0]);
+        // other threads unaffected
+        assert_eq!(tr.on_failure(1, t0), RestartDecision::Scheduled);
+        // out-of-range thread ids never schedule
+        assert_eq!(tr.on_failure(9, t0), RestartDecision::GaveUp);
+    }
+
+    #[test]
+    fn zero_budget_never_respawns() {
+        let p = RestartPolicy { max_restarts: 0, ..RestartPolicy::default() };
+        let mut tr = RestartTracker::new(p, 1);
+        assert_eq!(tr.on_failure(0, Instant::now()), RestartDecision::GaveUp);
+        assert_eq!(tr.total_restarts(), 0);
+    }
+
+    #[test]
+    fn heartbeats_flag_stalls_per_thread() {
+        let hb = Heartbeats::new(2);
+        assert_eq!(hb.threads(), 2);
+        hb.beat(0);
+        std::thread::sleep(Duration::from_millis(30));
+        hb.beat(1);
+        assert!(hb.millis_since(0) >= 25);
+        assert!(hb.millis_since(1) < 25);
+        assert!(hb.is_stalled(0, 20));
+        assert!(!hb.is_stalled(1, 20));
+        // timeout 0 disables the watchdog; unknown slots are never stalled
+        assert!(!hb.is_stalled(0, 0));
+        assert!(!hb.is_stalled(7, 20));
+    }
+
+    #[test]
+    fn exit_cause_classifies_failures() {
+        assert!(!ExitCause::Finished.is_failure());
+        assert!(ExitCause::Panic("boom".into()).is_failure());
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(p.as_ref()), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(p.as_ref()), "owned");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn fault_plan_is_deterministic_and_generation_gated() {
+        let plan = FaultPlan {
+            actor_panics: vec![(0, 5)],
+            actor_stalls: vec![(1, 2, 1)],
+            nan_members: vec![(2, 100), (0, 50)],
+        };
+        // wrong thread/iteration: no panic
+        plan.actor_tick(0, 4, 0);
+        plan.actor_tick(1, 5, 0);
+        // respawned incarnation never re-fires
+        plan.actor_tick(0, 5, 1);
+        // the planned (thread, iteration) does panic
+        let r = std::panic::catch_unwind(|| plan.actor_tick(0, 5, 0));
+        assert!(r.is_err());
+        assert!(plan.members_due(49).is_empty());
+        assert_eq!(plan.members_due(50), vec![0]);
+        let mut due = plan.members_due(200);
+        due.sort();
+        assert_eq!(due, vec![0, 2]);
+    }
+}

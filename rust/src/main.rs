@@ -111,6 +111,9 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .opt("seed", "0", "random seed")
         .opt("csv", "", "CSV metrics output path")
         .opt("checkpoint", "", "checkpoint file (saved at sync points; resumed when present)")
+        .opt("keep-checkpoints", "3", "rotated checkpoint generations to keep")
+        .opt("max-actor-restarts", "3", "respawn budget per crashed actor thread (0 = off)")
+        .opt("stall-timeout-ms", "5000", "actor stall watchdog timeout (0 = off)")
         .opt("max-seconds", "0", "wall-clock budget (0 = unlimited)")
 }
 
@@ -122,6 +125,9 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
         .with_seed(args.get_u64("seed")?)
         .with_csv(args.get("csv"))
         .with_checkpoint(args.get("checkpoint"))
+        .with_keep_checkpoints(args.get_usize("keep-checkpoints")?)
+        .with_max_actor_restarts(args.get_u32("max-actor-restarts")?)
+        .with_stall_timeout_ms(args.get_u64("stall-timeout-ms")?)
         .with_max_seconds(args.get_f64("max-seconds")?);
     // optional config file refinements
     let path = args.get("config");
@@ -139,6 +145,17 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
             file.get_usize("train.actor_sleep_us", cfg.actor_sleep_us as usize)? as u64;
         cfg.expl_noise = file.get_f64("train.expl_noise", cfg.expl_noise as f64)? as f32;
         cfg.eps_greedy = file.get_f64("train.eps_greedy", cfg.eps_greedy as f64)? as f32;
+        // supervision / fault-tolerance knobs
+        cfg.keep_checkpoints =
+            file.get_usize("train.keep_checkpoints", cfg.keep_checkpoints)?;
+        cfg.max_actor_restarts =
+            file.get_u64("train.max_actor_restarts", cfg.max_actor_restarts as u64)? as u32;
+        cfg.restart_backoff_ms =
+            file.get_u64("train.restart_backoff_ms", cfg.restart_backoff_ms)?;
+        cfg.stall_timeout_ms =
+            file.get_u64("train.stall_timeout_ms", cfg.stall_timeout_ms)?;
+        cfg.health_norm_limit =
+            file.get_f64("train.health_norm_limit", cfg.health_norm_limit)?;
     }
     Ok(cfg)
 }
@@ -183,6 +200,13 @@ fn train(argv: &[String]) -> anyhow::Result<()> {
         summary.wall_seconds, summary.updates, summary.env_steps,
         summary.best_return, summary.mean_return
     ));
+    if summary.actor_restarts > 0 || summary.stalled_actors > 0 || summary.members_repaired > 0
+    {
+        info(&format!(
+            "supervision: {} actor restarts, {} stall events, {} members repaired",
+            summary.actor_restarts, summary.stalled_actors, summary.members_repaired
+        ));
+    }
     print!("{}", summary.timers.report());
     Ok(())
 }

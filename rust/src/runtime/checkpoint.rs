@@ -83,11 +83,20 @@ impl Checkpoint {
         r.read_exact(&mut name)?;
         let mut u64b = [0u8; 8];
         r.read_exact(&mut u64b)?;
-        let state_size = u64::from_le_bytes(u64b) as usize;
+        let state_size_u64 = u64::from_le_bytes(u64b);
         r.read_exact(&mut u64b)?;
         let updates_done = u64::from_le_bytes(u64b);
         r.read_exact(&mut u64b)?;
         let expect_hash = u64::from_le_bytes(u64b);
+        // Bound the payload allocation by what the file can actually hold:
+        // a corrupt size field must not request a multi-GB buffer (or
+        // overflow `* 4` on 32-bit) before the hash check ever runs.
+        let file_len = r.get_ref().metadata()?.len();
+        anyhow::ensure!(
+            state_size_u64.checked_mul(4).is_some_and(|b| b <= file_len),
+            "corrupt header (state size {state_size_u64} exceeds file length {file_len})"
+        );
+        let state_size = state_size_u64 as usize;
         let mut payload = vec![0u8; state_size * 4];
         r.read_exact(&mut payload)?;
         anyhow::ensure!(
@@ -124,6 +133,156 @@ impl Checkpoint {
         let mut ts = TrainState::from_host(rt, artifact, &self.state)?;
         ts.updates_done = self.updates_done;
         Ok(ts)
+    }
+}
+
+/// Rotated checkpoint history around a base path: every save writes
+/// `<base>.<seq>`, mirrors the newest onto plain `<base>` (so tools that
+/// expect a single file keep working), optionally promotes the save to
+/// the `<base>.last_good` pointer, and prunes old generations down to
+/// `keep_last` — never deleting the `last_good` target.
+///
+/// `last_good` is only advanced for saves the caller marks `healthy`
+/// (i.e. a save whose pre-repair health scan found every member clean),
+/// so auto-resume can fall back to a state known-good *before* any
+/// divergence, not merely one whose bytes hash correctly.
+#[derive(Debug)]
+pub struct CheckpointLineage {
+    base: std::path::PathBuf,
+    keep_last: usize,
+    next_seq: u64,
+}
+
+impl CheckpointLineage {
+    /// Open (or start) the lineage at `base`. Existing `<base>.<seq>`
+    /// files are detected so a resumed run continues the numbering
+    /// instead of overwriting history.
+    pub fn new(base: impl Into<std::path::PathBuf>, keep_last: usize) -> CheckpointLineage {
+        let base = base.into();
+        let next_seq = Self::sequence(&base).first().map_or(0, |&(s, _)| s + 1);
+        CheckpointLineage { base, keep_last: keep_last.max(1), next_seq }
+    }
+
+    /// All `<base>.<seq>` generations on disk, newest first.
+    fn sequence(base: &Path) -> Vec<(u64, std::path::PathBuf)> {
+        let Some(stem) = base.file_name().and_then(|n| n.to_str()) else {
+            return Vec::new();
+        };
+        let dir = if base.parent().is_none_or(|p| p.as_os_str().is_empty()) {
+            Path::new(".")
+        } else {
+            base.parent().unwrap()
+        };
+        let prefix = format!("{stem}.");
+        let mut out = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if let Some(suffix) = name.strip_prefix(&prefix) {
+                    if let Ok(seq) = suffix.parse::<u64>() {
+                        out.push((seq, e.path()));
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out
+    }
+
+    /// The file the `<base>.last_good` pointer names, if any.
+    pub fn last_good_target(base: &Path) -> Option<std::path::PathBuf> {
+        let pointer = Self::pointer_path(base);
+        let name = std::fs::read_to_string(pointer).ok()?;
+        let name = name.trim();
+        if name.is_empty() {
+            return None;
+        }
+        Some(base.with_file_name(name))
+    }
+
+    fn pointer_path(base: &Path) -> std::path::PathBuf {
+        let stem = base.file_name().and_then(|n| n.to_str()).unwrap_or("ckpt");
+        base.with_file_name(format!("{stem}.last_good"))
+    }
+
+    /// Persist one generation. `healthy` marks the save as a `last_good`
+    /// candidate (the caller's health scan found all members clean
+    /// *before* any repair this round). Returns the generation's path.
+    pub fn save(&mut self, ckpt: &Checkpoint, healthy: bool)
+                -> anyhow::Result<std::path::PathBuf> {
+        let stem = self
+            .base
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint path has no file name"))?
+            .to_string();
+        let seq_name = format!("{stem}.{}", self.next_seq);
+        let seq_path = self.base.with_file_name(&seq_name);
+        ckpt.save(&seq_path)?;
+        self.next_seq += 1;
+        // Mirror onto the plain base path (hard link when the fs allows,
+        // else a full copy) so `Checkpoint::load(base)` keeps working.
+        let _ = std::fs::remove_file(&self.base);
+        if std::fs::hard_link(&seq_path, &self.base).is_err() {
+            std::fs::copy(&seq_path, &self.base)?;
+        }
+        if healthy {
+            // pointer write is tmp+rename for the same torn-write safety
+            // as the checkpoint itself
+            let pointer = Self::pointer_path(&self.base);
+            let tmp = pointer.with_extension("last_good.tmp");
+            std::fs::write(&tmp, &seq_name)?;
+            std::fs::rename(&tmp, &pointer)?;
+        }
+        self.prune();
+        Ok(seq_path)
+    }
+
+    /// Delete generations beyond `keep_last`, sparing the `last_good`
+    /// target (the whole point of the pointer is that it stays
+    /// restorable no matter how many unhealthy saves follow it).
+    fn prune(&self) {
+        let protected = Self::last_good_target(&self.base);
+        for (_, path) in Self::sequence(&self.base).into_iter().skip(self.keep_last) {
+            if protected.as_deref() == Some(path.as_path()) {
+                continue;
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    /// Restore the newest generation that both loads (magic + hash) and
+    /// passes `validate` — falling back down the lineage, then to the
+    /// plain `<base>` file, on any failure. Returns the winning path
+    /// alongside the checkpoint; `None` when nothing restorable exists.
+    pub fn resume(
+        base: &Path,
+        mut validate: impl FnMut(&Checkpoint) -> bool,
+    ) -> Option<(std::path::PathBuf, Checkpoint)> {
+        let mut candidates: Vec<std::path::PathBuf> =
+            Self::sequence(base).into_iter().map(|(_, p)| p).collect();
+        if base.exists() {
+            candidates.push(base.to_path_buf());
+        }
+        for path in candidates {
+            match Checkpoint::load(&path) {
+                Ok(c) if validate(&c) => return Some((path, c)),
+                Ok(_) => {
+                    eprintln!(
+                        "[checkpoint] {} loads but fails validation; trying older",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[checkpoint] {} unreadable ({e}); trying older",
+                        path.display()
+                    );
+                }
+            }
+        }
+        None
     }
 }
 
@@ -181,5 +340,123 @@ mod tests {
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(err.to_string().contains("not a fastpbrl checkpoint"));
+    }
+
+    /// A corrupt size field must fail the file-length bound up front, not
+    /// attempt a huge allocation and fail later (or OOM).
+    #[test]
+    fn rejects_absurd_state_size_header() {
+        let path = tmpfile("hugesize");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(b"xy");
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // state_size: absurd
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // updates_done
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // hash
+        bytes.extend_from_slice(&[0u8; 16]); // token payload
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt header"), "{err}");
+    }
+
+    // ---- lineage -------------------------------------------------------
+
+    fn lineage_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastpbrl_lineage_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ckpt_at(updates: u64) -> Checkpoint {
+        Checkpoint {
+            artifact_name: "td3_pendulum_p1".into(),
+            updates_done: updates,
+            state: (0..32).map(|i| (i as f32) + updates as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn lineage_rotates_prunes_and_mirrors_base() {
+        let dir = lineage_dir("rotate");
+        let base = dir.join("ckpt.bin");
+        let mut lin = CheckpointLineage::new(&base, 2);
+        for u in 0..5 {
+            lin.save(&ckpt_at(u), true).unwrap();
+        }
+        // keep_last = 2: only generations 3 and 4 survive
+        let seqs: Vec<u64> = CheckpointLineage::sequence(&base)
+            .into_iter()
+            .map(|(s, _)| s)
+            .collect();
+        assert_eq!(seqs, vec![4, 3]);
+        // plain base mirrors the newest generation
+        assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 4);
+        // a reopened lineage continues numbering instead of clobbering
+        let mut again = CheckpointLineage::new(&base, 2);
+        again.save(&ckpt_at(9), true).unwrap();
+        assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 9);
+        assert_eq!(CheckpointLineage::sequence(&base)[0].0, 5);
+    }
+
+    #[test]
+    fn resume_falls_back_down_lineage_on_corruption() {
+        let dir = lineage_dir("fallback");
+        let base = dir.join("ckpt.bin");
+        let mut lin = CheckpointLineage::new(&base, 3);
+        lin.save(&ckpt_at(1), true).unwrap();
+        let newest = lin.save(&ckpt_at(2), true).unwrap();
+        // bit-flip the newest generation (the base hard link shares the
+        // inode, so the mirror is corrupt too — the worst case)
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&newest, bytes).unwrap();
+        let (path, c) = CheckpointLineage::resume(&base, |_| true).expect("older gen restores");
+        assert_eq!(c.updates_done, 1);
+        assert!(path.to_string_lossy().ends_with("ckpt.bin.0"));
+        // last_good still names the newest (it hashed fine when saved);
+        // resume worked anyway because fallback is by lineage order
+        assert_eq!(
+            CheckpointLineage::last_good_target(&base).unwrap(),
+            base.with_file_name("ckpt.bin.1")
+        );
+    }
+
+    #[test]
+    fn last_good_never_advances_past_failed_health_scan() {
+        let dir = lineage_dir("lastgood");
+        let base = dir.join("ckpt.bin");
+        let mut lin = CheckpointLineage::new(&base, 1);
+        lin.save(&ckpt_at(1), true).unwrap();
+        lin.save(&ckpt_at(2), false).unwrap(); // unhealthy scan: no promotion
+        lin.save(&ckpt_at(3), false).unwrap();
+        let good = CheckpointLineage::last_good_target(&base).unwrap();
+        assert_eq!(good, base.with_file_name("ckpt.bin.0"));
+        // pruning (keep_last = 1) spared the last_good target
+        assert!(good.exists(), "last_good target must survive pruning");
+        // a validator that rejects the unhealthy saves lands on last_good
+        let (path, c) = CheckpointLineage::resume(&base, |c| c.updates_done == 1).unwrap();
+        assert_eq!(c.updates_done, 1);
+        assert_eq!(path, good);
+        // a healthy save promotes the pointer again
+        lin.save(&ckpt_at(4), true).unwrap();
+        assert_eq!(
+            CheckpointLineage::last_good_target(&base).unwrap(),
+            base.with_file_name("ckpt.bin.3")
+        );
+    }
+
+    #[test]
+    fn resume_on_empty_lineage_is_none() {
+        let dir = lineage_dir("empty");
+        let base = dir.join("ckpt.bin");
+        assert!(CheckpointLineage::resume(&base, |_| true).is_none());
+        // a bare (pre-lineage) base file still resumes — compatibility
+        // with checkpoints written before rotation existed
+        ckpt_at(7).save(&base).unwrap();
+        let (path, c) = CheckpointLineage::resume(&base, |_| true).unwrap();
+        assert_eq!((path, c.updates_done), (base, 7));
     }
 }

@@ -129,6 +129,12 @@ impl Args {
             .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got {:?}", self.get(name)))
     }
 
+    pub fn get_u32(&self, name: &str) -> anyhow::Result<u32> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
     pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
         self.get(name)
             .parse()

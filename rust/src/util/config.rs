@@ -85,6 +85,15 @@ impl Config {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{key} must be an integer, got {v:?}")),
+        }
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -125,6 +134,8 @@ name = "run a"
     fn parses_sections_and_types() {
         let c = Config::parse(SAMPLE).unwrap();
         assert_eq!(c.get_usize("seed", 0).unwrap(), 7);
+        assert_eq!(c.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(c.get_u64("train.missing", 33).unwrap(), 33);
         assert_eq!(c.get_usize("train.pop", 0).unwrap(), 8);
         assert!((c.get_f64("train.lr", 0.0).unwrap() - 3e-4).abs() < 1e-12);
         assert!(c.get_bool("train.vectorized", false).unwrap());

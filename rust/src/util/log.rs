@@ -7,10 +7,18 @@ use std::path::{Path, PathBuf};
 use crate::util::json::Json;
 
 /// Append-only CSV writer with a fixed header.
+///
+/// Metrics are best-effort: a write failure mid-run (disk full, deleted
+/// output dir) must not abort hours of training, so the first I/O error
+/// warns once and disables the logger — later `row`/`flush` calls become
+/// no-ops. Arity mismatches are caller bugs and still error hard.
 pub struct CsvLogger {
     w: BufWriter<File>,
     columns: Vec<String>,
     pub path: PathBuf,
+    disabled: bool,
+    #[cfg(test)]
+    force_fail: bool,
 }
 
 impl CsvLogger {
@@ -25,7 +33,31 @@ impl CsvLogger {
             w,
             columns: columns.iter().map(|s| s.to_string()).collect(),
             path,
+            disabled: false,
+            #[cfg(test)]
+            force_fail: false,
         })
+    }
+
+    /// Has a write failure already switched this logger off?
+    pub fn is_disabled(&self) -> bool {
+        self.disabled
+    }
+
+    fn disable(&mut self, err: &dyn std::fmt::Display) {
+        self.disabled = true;
+        warn(&format!(
+            "csv logging to {} disabled after write error: {err} (training continues)",
+            self.path.display()
+        ));
+    }
+
+    fn write_line(&mut self, line: &str) -> std::io::Result<()> {
+        #[cfg(test)]
+        if self.force_fail {
+            return Err(std::io::Error::other("forced csv failure"));
+        }
+        writeln!(self.w, "{line}")
     }
 
     pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
@@ -35,17 +67,27 @@ impl CsvLogger {
             values.len(),
             self.columns.len()
         );
+        if self.disabled {
+            return Ok(());
+        }
         let line = values
             .iter()
             .map(|v| format!("{v}"))
             .collect::<Vec<_>>()
             .join(",");
-        writeln!(self.w, "{line}")?;
+        if let Err(e) = self.write_line(&line) {
+            self.disable(&e);
+        }
         Ok(())
     }
 
     pub fn flush(&mut self) -> anyhow::Result<()> {
-        self.w.flush()?;
+        if self.disabled {
+            return Ok(());
+        }
+        if let Err(e) = self.w.flush() {
+            self.disable(&e);
+        }
         Ok(())
     }
 }
@@ -77,6 +119,11 @@ pub fn info(msg: &str) {
     eprintln!("[fastpbrl] {msg}");
 }
 
+/// Stderr warning line (degraded-but-continuing conditions).
+pub fn warn(msg: &str) {
+    eprintln!("[fastpbrl] WARN: {msg}");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +138,28 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2.5\n");
         assert!(l.row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn csv_write_failure_degrades_to_disabled_not_error() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_csv_degrade");
+        let path = dir.join("x.csv");
+        let mut l = CsvLogger::create(&path, &["a", "b"]).unwrap();
+        l.row(&[1.0, 2.0]).unwrap();
+        l.force_fail = true;
+        // I/O failure: warn-once-and-disable, never an abort
+        assert!(l.row(&[3.0, 4.0]).is_ok());
+        assert!(l.is_disabled());
+        assert!(l.row(&[5.0, 6.0]).is_ok()); // no-op now
+        assert!(l.flush().is_ok());
+        // arity bugs still error hard even while disabled
+        assert!(l.row(&[1.0]).is_err());
+        // only the pre-failure row reached disk
+        l.force_fail = false;
+        l.disabled = false;
+        l.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
     }
 
     #[test]

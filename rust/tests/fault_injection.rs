@@ -1,0 +1,257 @@
+//! Resilience integration tests behind the `fault-inject` feature
+//! (`cargo test --features fault-inject --test fault_injection`): a
+//! deterministic [`FaultPlan`] crashes actor threads, stalls their loops,
+//! and NaN-poisons population members; the supervision layer must absorb
+//! every fault and the run must still complete.
+//!
+//! The pool-level tests build a synthetic pendulum artifact so they run
+//! everywhere (real actor threads, envs, panics — no AOT artifacts or
+//! XLA runtime needed). The trainer-level acceptance tests drive full
+//! training runs and skip gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastpbrl::coordinator::population::ParamView;
+use fastpbrl::coordinator::trainer::{Continuous, NoController, Trainer, TrainerConfig};
+use fastpbrl::data::pipeline::{ActorConfig, ActorPool, PolicyKind, Throttle};
+use fastpbrl::data::supervisor::FaultPlan;
+use fastpbrl::manifest::{Artifact, Dtype, EnvDesc, Field, Manifest};
+use fastpbrl::util::rng::Rng;
+
+/// A minimal continuous-control artifact matching the native pendulum
+/// env (obs_dim 3, act_dim 1): one linear policy layer per member.
+fn toy_artifact(pop: usize) -> Artifact {
+    let mut fields = Vec::new();
+    let mut off = 0;
+    let mut push = |name: &str, shape: Vec<usize>| {
+        let size: usize = shape.iter().product();
+        fields.push(Field {
+            name: name.into(),
+            offset: off,
+            size,
+            shape,
+            dtype: Dtype::F32,
+            init: "zeros".into(),
+            group: "policy".into(),
+            per_agent: true,
+        });
+        off += size;
+    };
+    push("policy/w0", vec![pop, 3, 1]);
+    push("policy/b0", vec![pop, 1]);
+    Artifact::new(
+        "toy_pendulum".into(),
+        PathBuf::new(),
+        "td3".into(),
+        "pendulum".into(),
+        EnvDesc { obs_dim: 3, act_dim: 1, ..Default::default() },
+        pop,
+        1,
+        4,
+        vec![],
+        off,
+        "state".into(),
+        vec![],
+        fields,
+        vec![],
+    )
+}
+
+fn actor_cfg(plan: Arc<FaultPlan>) -> ActorConfig {
+    ActorConfig {
+        env: "pendulum".into(),
+        policy: PolicyKind::Td3,
+        warmup_steps: 0,
+        queue_cap: 64,
+        seed: 7,
+        ratio: 0.0, // unthrottled: no learner in these tests
+        fault_plan: Some(plan),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn injected_panic_is_reported_and_respawn_restores_flow() {
+    let art = toy_artifact(2);
+    let view = ParamView::new(art.init_state(&mut Rng::new(0), 0));
+    let plan = Arc::new(FaultPlan {
+        actor_panics: vec![(0, 3)],
+        ..Default::default()
+    });
+    let mut pool =
+        ActorPool::spawn(&art, view, actor_cfg(plan), 1, Throttle::new()).unwrap();
+
+    // the thread runs a few iterations, then the plan kills it
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let exit = loop {
+        assert!(Instant::now() < deadline, "no exit event before deadline");
+        if let Some(e) = pool.poll_exit() {
+            break e;
+        }
+        // keep the channel drained so the actor never blocks on send
+        if let Ok(b) = pool.rx.recv_timeout(Duration::from_millis(5)) {
+            pool.recycle(b);
+        }
+    };
+    assert_eq!(exit.thread, 0);
+    assert_eq!(exit.agents, vec![0, 1]);
+    assert!(exit.cause.is_failure());
+    let msg = format!("{:?}", exit.cause);
+    assert!(msg.contains("fault-inject"), "unexpected cause: {msg}");
+
+    // respawn: generation 1 skips the plan, so transitions flow again
+    assert!(pool.respawn(0));
+    let block = pool
+        .rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("respawned actor produces blocks");
+    pool.recycle(block);
+    pool.stop();
+}
+
+#[test]
+fn injected_stall_trips_the_heartbeat_watchdog() {
+    let art = toy_artifact(2);
+    let view = ParamView::new(art.init_state(&mut Rng::new(1), 0));
+    let plan = Arc::new(FaultPlan {
+        actor_stalls: vec![(0, 2, 600)],
+        ..Default::default()
+    });
+    let pool = ActorPool::spawn(&art, view, actor_cfg(plan), 1, Throttle::new()).unwrap();
+
+    // the 600 ms injected sleep must become visible as a stale heartbeat
+    // under a 100 ms watchdog timeout
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut tripped = false;
+    while Instant::now() < deadline {
+        if pool.heartbeats().is_stalled(0, 100) {
+            tripped = true;
+            break;
+        }
+        if let Ok(b) = pool.rx.try_recv() {
+            pool.recycle(b);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(tripped, "watchdog never flagged the injected stall");
+    pool.stop();
+}
+
+// ---- trainer-level acceptance (needs `make artifacts`) ----------------
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping fault-injection acceptance test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn base_cfg(updates: u64) -> TrainerConfig {
+    TrainerConfig {
+        env: "pendulum".into(),
+        algo: "td3".into(),
+        pop: 4,
+        total_updates: updates,
+        sync_every: 25,
+        warmup_steps: 100,
+        replay_capacity: 10_000,
+        seed: 42,
+        max_seconds: 120.0,
+        ..TrainerConfig::default()
+    }
+}
+
+/// The headline acceptance test: a run with an injected actor panic AND
+/// an injected NaN-poisoned member completes, reports the recovery in
+/// its summary, and lands within a (generous, seed-noise-sized)
+/// tolerance of the unfaulted baseline's windowed return.
+#[test]
+fn faulted_run_completes_and_recovers() {
+    let Some(m) = manifest() else { return };
+    let updates = 300;
+
+    let mut baseline = Trainer::<Continuous>::new(&m, base_cfg(updates)).unwrap();
+    let base = baseline.run(&mut NoController).unwrap();
+    assert_eq!(base.actor_restarts, 0);
+    assert_eq!(base.members_repaired, 0);
+
+    let plan = Arc::new(FaultPlan {
+        actor_panics: vec![(0, 40)], // thread 0 dies mid-run
+        nan_members: vec![(1, updates / 2)], // member 1 diverges mid-run
+        ..Default::default()
+    });
+    let mut cfg = base_cfg(updates);
+    cfg.fault_plan = Some(plan);
+    cfg.restart_backoff_ms = 10; // fast respawn: keep the test quick
+    let mut faulted = Trainer::<Continuous>::new(&m, cfg).unwrap();
+    let summary = faulted.run(&mut NoController).unwrap();
+
+    assert_eq!(summary.updates, updates, "faulted run must still complete");
+    assert!(
+        summary.actor_restarts >= 1,
+        "injected panic must be recovered by a respawn: {summary:?}"
+    );
+    assert!(
+        summary.members_repaired >= 1,
+        "injected NaN member must be quarantine-repaired: {summary:?}"
+    );
+    assert!(summary.mean_return.is_finite());
+    // same budget, same seed: the repaired run should not collapse
+    // (tolerance sized for short-run pendulum seed noise)
+    let tolerance = 0.5 * base.mean_return.abs() + 200.0;
+    assert!(
+        summary.mean_return >= base.mean_return - tolerance,
+        "faulted {} vs baseline {} (tolerance {})",
+        summary.mean_return,
+        base.mean_return,
+        tolerance
+    );
+}
+
+/// Checkpoint lineage end-to-end: corrupt the newest generation after a
+/// run and `Trainer::new` must auto-resume from an older healthy one
+/// instead of erroring or starting fresh.
+#[test]
+fn trainer_resumes_from_lineage_after_corruption() {
+    let Some(m) = manifest() else { return };
+    let dir = std::env::temp_dir().join("fastpbrl_fault_lineage");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("ckpt.bin");
+
+    let mut cfg = base_cfg(200);
+    cfg.checkpoint_path = ckpt.to_string_lossy().into_owned();
+    cfg.sync_every = 20; // several checkpoint generations per run
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg.clone()).unwrap();
+    trainer.run(&mut NoController).unwrap();
+    drop(trainer);
+
+    // corrupt the newest generation (and therefore the base hard link)
+    let mut newest: Option<(u64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(seq) = name.strip_prefix("ckpt.bin.").and_then(|s| s.parse::<u64>().ok())
+        {
+            if newest.as_ref().is_none_or(|(n, _)| seq > *n) {
+                newest = Some((seq, entry.path()));
+            }
+        }
+    }
+    let (_, newest_path) = newest.expect("run left checkpoint generations behind");
+    let mut bytes = std::fs::read(&newest_path).unwrap();
+    let n = bytes.len();
+    bytes[n - 3] ^= 0xFF;
+    std::fs::write(&newest_path, bytes).unwrap();
+
+    // a new trainer must fall back down the lineage and resume
+    let resumed = Trainer::<Continuous>::new(&m, cfg).unwrap();
+    assert!(
+        resumed.population.train_state.updates_done > 0,
+        "expected resume from an older checkpoint generation"
+    );
+}
