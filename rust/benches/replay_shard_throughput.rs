@@ -1,0 +1,141 @@
+//! Shared-replay ingest A/B: every pusher thread behind one mutex (the
+//! single shared buffer's contention profile) vs one stripe per pusher
+//! thread ([`ShardedReplay`]), at pop ∈ {4, 16, 64}.
+//!
+//! Both configurations run the identical workload through the identical
+//! [`StripeSink`] ingest path — T threads each pushing pre-filled
+//! transport blocks, then a joint length-weighted sampling pass over
+//! whatever landed — so the measured difference is exactly the lock
+//! contention a single stripe serializes and N stripes remove.
+//!
+//! No artifacts required. Results go to
+//! `results/replay_shard_throughput.csv` and
+//! `BENCH_replay_shard_throughput.json`.
+
+use std::sync::Arc;
+use std::thread;
+
+use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
+use fastpbrl::data::pipeline::{RowSink, TransitionBlock};
+use fastpbrl::manifest::Dtype;
+use fastpbrl::replay::{Replay, ReplayBuffer, ShardedReplay, Staging};
+use fastpbrl::util::json::{arr, num, obj, s, Json};
+use fastpbrl::util::rng::Rng;
+
+const OD: usize = 16;
+const AD: usize = 4;
+const THREADS: usize = 4;
+const BLOCKS_PER_THREAD: usize = 256;
+const SAMPLE_BATCHES: usize = 64;
+const BATCH: usize = 64;
+const CAP: usize = 1 << 16;
+const POPS: [usize; 3] = [4, 16, 64];
+
+/// One transport block of `pop` rows with synthetic payload (the ingest
+/// path never looks at the values, only moves them).
+fn filled_block(thread: usize, pop: usize, rng: &mut Rng) -> TransitionBlock {
+    let agents: Vec<usize> = (0..pop).collect();
+    let mut b = TransitionBlock::new(thread, &agents, OD, AD);
+    rng.fill_uniform(&mut b.obs, -1.0, 1.0);
+    rng.fill_uniform(&mut b.act, -1.0, 1.0);
+    rng.fill_uniform(&mut b.rew, -1.0, 1.0);
+    rng.fill_uniform(&mut b.next_obs, -1.0, 1.0);
+    b.n = pop;
+    b
+}
+
+/// Run one configuration: `stripes` ingest stripes fed by [`THREADS`]
+/// pusher threads, then [`SAMPLE_BATCHES`] joint samples. Returns the
+/// harness result plus ingest rows/sec.
+fn run_config(bench: &Bench, name: &str, stripes: usize, pop: usize) -> (BenchResult, f64) {
+    let stripe_cap = CAP.div_ceil(stripes).max(1);
+    let sharded = ShardedReplay::new(
+        (0..stripes).map(|_| ReplayBuffer::new(stripe_cap, OD, AD)).collect::<Vec<_>>(),
+    );
+    let sinks: Vec<_> = (0..THREADS).map(|t| sharded.sink_for_thread(t)).collect();
+    let mut rng = Rng::new(11 + pop as u64 * 31 + stripes as u64);
+    let blocks: Vec<Arc<TransitionBlock>> =
+        (0..THREADS).map(|t| Arc::new(filled_block(t, pop, &mut rng))).collect();
+    let mut staging = Staging::new(
+        &[
+            (Dtype::F32, BATCH * OD),
+            (Dtype::F32, BATCH * AD),
+            (Dtype::F32, BATCH),
+            (Dtype::F32, BATCH * OD),
+            (Dtype::F32, BATCH),
+        ],
+        1,
+    );
+    let mut sample_rng = Rng::new(7);
+    let result = bench.run(name, || {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let sink = sinks[t].clone();
+                let block = Arc::clone(&blocks[t]);
+                thread::spawn(move || {
+                    for _ in 0..BLOCKS_PER_THREAD {
+                        sink.push_rows(&block, 0, block.n);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for _ in 0..SAMPLE_BATCHES {
+            sharded.sample_slot(&mut sample_rng, BATCH, &mut staging, 0);
+        }
+    });
+    let rows_per_sec =
+        (THREADS * BLOCKS_PER_THREAD * pop) as f64 / (result.mean_ms / 1e3);
+    (result, rows_per_sec)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 12, max_seconds: 20.0 }
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut pop_rows: Vec<Json> = Vec::new();
+    let mut table: Vec<(usize, f64, f64)> = Vec::new();
+
+    for &pop in &POPS {
+        let (r_single, single) =
+            run_config(&bench, &format!("ingest_single_p{pop}"), 1, pop);
+        let (r_striped, striped) =
+            run_config(&bench, &format!("ingest_striped{THREADS}_p{pop}"), THREADS, pop);
+        results.push(r_single);
+        results.push(r_striped);
+        pop_rows.push(obj(vec![
+            ("pop", num(pop as f64)),
+            ("threads", num(THREADS as f64)),
+            ("single_rows_per_sec", num(single)),
+            ("striped_rows_per_sec", num(striped)),
+            ("speedup", num(striped / single)),
+        ]));
+        table.push((pop, single, striped));
+    }
+
+    report("replay_shard_throughput", &results)?;
+
+    println!("\nReplay ingest rows/sec ({THREADS} pusher threads, striped vs single):");
+    println!("{:>5} {:>14} {:>14} {:>9}", "pop", "single", "striped", "speedup");
+    for (pop, single, striped) in &table {
+        println!("{pop:>5} {single:>14.0} {striped:>14.0} {:>8.2}x", striped / single);
+    }
+
+    let json = obj(vec![
+        ("bench", s("replay_shard_throughput")),
+        ("obs_dim", num(OD as f64)),
+        ("act_dim", num(AD as f64)),
+        ("threads", num(THREADS as f64)),
+        ("blocks_per_thread", num(BLOCKS_PER_THREAD as f64)),
+        ("sample_batches", num(SAMPLE_BATCHES as f64)),
+        ("results", arr(pop_rows)),
+    ]);
+    std::fs::write("BENCH_replay_shard_throughput.json", format!("{json}\n"))?;
+    println!("-> BENCH_replay_shard_throughput.json");
+    Ok(())
+}

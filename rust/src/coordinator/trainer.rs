@@ -5,6 +5,12 @@
 //! trick), and a pluggable [`Controller`] evolves the population at sync
 //! points (PBT truncation, CEM distribution updates, DvD schedules).
 //!
+//! Replay is layout-agnostic behind `Box<dyn Replay>`: per-agent
+//! buffers, one shared buffer drained over the actor channel, or — with
+//! `replay_shards > 1` — a [`ShardedReplay`] whose stripes the actors
+//! fill directly through per-thread sinks while the learner samples
+//! jointly across them (no drain round-trip on the ingest path).
+//!
 //! One loop serves every workload: [`Trainer`] is generic over a
 //! [`Domain`] that bundles what used to be hardcoded per data path — the
 //! transport block type, the replay buffer, actor-pool spawn, and the
@@ -17,17 +23,18 @@
 //! entry point).
 
 use std::marker::PhantomData;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::health;
 use crate::coordinator::population::{ParamView, Population};
 use crate::data::pipeline::{
-    ActorConfig, ActorPool, BlockPool, PixelActorConfig, PixelActorPool, PolicyKind, Throttle,
-    TransitionBlock, TransportBlock,
+    ActorConfig, ActorPool, BlockPool, PixelActorConfig, PixelActorPool, PolicyKind, RowSink,
+    Throttle, TransitionBlock, TransportBlock,
 };
 use crate::data::supervisor::{RestartDecision, RestartPolicy, RestartTracker};
 use crate::manifest::{Artifact, Dtype, Manifest};
-use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, Staging};
+use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, ShardedReplay, Staging};
 use crate::runtime::checkpoint::{Checkpoint, CheckpointLineage};
 use crate::runtime::Runtime;
 use crate::util::log::{self, CsvLogger};
@@ -63,6 +70,13 @@ pub struct TrainerConfig {
     pub ratio_slack: f64,
     /// One shared replay buffer (CEM-RL/DvD) instead of one per agent.
     pub shared_replay: bool,
+    /// Ingest stripes behind the shared buffer: actors push transport
+    /// blocks straight into their own stripe (no learner drain
+    /// round-trip) and the learner samples jointly across stripes.
+    /// 1 = single buffer through the drain path (the historical layout);
+    /// 0 = auto, one stripe per actor thread. Only meaningful with
+    /// `shared_replay` — per-agent buffers already have a single writer.
+    pub replay_shards: usize,
     pub n_actor_threads: usize,
     /// Max transitions drained from the actor queue per learner loop
     /// iteration (bounds drain latency in front of the update step).
@@ -120,6 +134,7 @@ impl Default for TrainerConfig {
             ratio: 1.0,
             ratio_slack: 64.0,
             shared_replay: false,
+            replay_shards: 1,
             n_actor_threads: 1,
             drain_bound: 16 * 1024,
             actor_sleep_us: 200,
@@ -186,6 +201,11 @@ impl TrainerConfig {
 
     pub fn with_shared_replay(mut self, shared: bool) -> Self {
         self.shared_replay = shared;
+        self
+    }
+
+    pub fn with_replay_shards(mut self, shards: usize) -> Self {
+        self.replay_shards = shards;
         self
     }
 
@@ -268,8 +288,10 @@ impl TrainerConfig {
 pub trait Domain: Send + Sized + 'static {
     /// Transport block the domain's actor pool emits.
     type Block: TransportBlock;
-    /// Replay buffer implementation fed by those blocks.
-    type Replay: Replay<Block = Self::Block>;
+    /// Replay buffer implementation fed by those blocks (`'static` so the
+    /// trainer can hold it boxed — plain, or wrapped in a
+    /// [`ShardedReplay`] when ingest striping is on).
+    type Replay: Replay<Block = Self::Block> + 'static;
 
     /// Domain name for logs and error messages.
     const NAME: &'static str;
@@ -292,11 +314,15 @@ pub trait Domain: Send + Sized + 'static {
     }
 
     /// Spawn the domain's actor pool against the shared parameter view.
+    /// A non-empty `sinks` vector switches the pool to direct-ingest
+    /// mode: thread `t` pushes rows into `sinks[t % sinks.len()]`
+    /// instead of the learner drain channel.
     fn spawn_actors(
         artifact: &Artifact,
         view: ParamView,
         cfg: &TrainerConfig,
         throttle: Throttle,
+        sinks: Vec<Arc<dyn RowSink<Self::Block>>>,
     ) -> anyhow::Result<BlockPool<Self::Block>>;
 
     /// `(CSV column, state field)` pairs whose per-population means are
@@ -334,8 +360,9 @@ impl Domain for Continuous {
         view: ParamView,
         cfg: &TrainerConfig,
         throttle: Throttle,
+        sinks: Vec<Arc<dyn RowSink<TransitionBlock>>>,
     ) -> anyhow::Result<ActorPool> {
-        ActorPool::spawn(
+        ActorPool::spawn_with_sinks(
             artifact,
             view,
             ActorConfig {
@@ -355,6 +382,7 @@ impl Domain for Continuous {
             },
             cfg.n_actor_threads,
             throttle,
+            sinks,
         )
     }
 
@@ -411,8 +439,9 @@ impl Domain for Pixel {
         view: ParamView,
         cfg: &TrainerConfig,
         throttle: Throttle,
+        sinks: Vec<Arc<dyn RowSink<crate::data::pipeline::PixelTransitionBlock>>>,
     ) -> anyhow::Result<PixelActorPool> {
-        PixelActorPool::spawn(
+        PixelActorPool::spawn_with_sinks(
             artifact,
             view,
             PixelActorConfig {
@@ -429,6 +458,7 @@ impl Domain for Pixel {
             },
             cfg.n_actor_threads,
             throttle,
+            sinks,
         )
     }
 
@@ -481,6 +511,14 @@ pub struct Summary {
     pub stalled_actors: u64,
     /// Quarantined members repaired in place from a healthy donor.
     pub members_repaired: u64,
+    /// Ingest stripes behind the shared replay buffer (1 = unsharded
+    /// or per-agent buffers).
+    pub replay_shards: usize,
+    /// Smallest live length across replay stripes (per-agent buffers
+    /// count as one stripe each) when the run ended.
+    pub stripe_min_fill: usize,
+    /// Largest live length across replay stripes when the run ended.
+    pub stripe_max_fill: usize,
     pub timers: PhaseTimer,
 }
 
@@ -493,7 +531,12 @@ pub struct Trainer<D: Domain> {
     pub rt: Runtime,
     pub population: Population,
     exe: std::sync::Arc<crate::runtime::Executable>,
-    replays: Vec<D::Replay>,
+    /// Per-agent buffers, one shared buffer, or one [`ShardedReplay`] —
+    /// boxed so the learner loop is identical for all three layouts.
+    replays: Vec<Box<dyn Replay<Block = D::Block>>>,
+    /// Direct-ingest endpoints handed to the actor pool; empty unless
+    /// replay is sharded (then the drain channel carries no rows).
+    actor_sinks: Vec<Arc<dyn RowSink<D::Block>>>,
     gate: RatioGate,
     rng: Rng,
     /// Reusable host staging buffers, one slot per (step, agent).
@@ -536,11 +579,42 @@ impl<D: Domain> Trainer<D> {
                 population.load_host(&rt, host)?;
             }
         }
-        let n_buffers = if cfg.shared_replay { 1 } else { artifact.pop };
-        let replays = (0..n_buffers)
-            .map(|_| D::make_replay(&artifact, cfg.replay_capacity))
-            .collect();
-        let staging = Staging::for_artifact(&artifact);
+        // Replay layout: per-agent buffers, one shared buffer, or a
+        // sharded shared buffer (replay_shards stripes, 0 = one per
+        // actor thread). Sharding hands the actors direct-ingest sinks —
+        // stripe `s` serves threads `t` with `t % shards == s`, the same
+        // routing `ShardedReplay::push_rows` uses — so blocks never make
+        // the learner drain round-trip.
+        let shards = if cfg.shared_replay {
+            if cfg.replay_shards == 0 {
+                cfg.n_actor_threads.max(1)
+            } else {
+                cfg.replay_shards
+            }
+        } else {
+            1
+        };
+        let mut actor_sinks: Vec<Arc<dyn RowSink<D::Block>>> = Vec::new();
+        let replays: Vec<Box<dyn Replay<Block = D::Block>>> = if cfg.shared_replay && shards > 1 {
+            // replay_capacity stays the total across stripes
+            let stripe_cap = cfg.replay_capacity.div_ceil(shards).max(1);
+            let sharded = ShardedReplay::new(
+                (0..shards).map(|_| D::make_replay(&artifact, stripe_cap)).collect(),
+            );
+            actor_sinks = (0..shards)
+                .map(|s| Arc::new(sharded.sink_for_thread(s)) as Arc<dyn RowSink<D::Block>>)
+                .collect();
+            vec![Box::new(sharded) as Box<dyn Replay<Block = D::Block>>]
+        } else {
+            let n_buffers = if cfg.shared_replay { 1 } else { artifact.pop };
+            (0..n_buffers)
+                .map(|_| {
+                    Box::new(D::make_replay(&artifact, cfg.replay_capacity))
+                        as Box<dyn Replay<Block = D::Block>>
+                })
+                .collect()
+        };
+        let staging = Staging::for_artifact(&artifact)?;
         // The gate counts *global* env steps but *per-agent* update steps
         // (one vectorized execution = 1 update for each of the P agents),
         // so the per-agent target ratio divides by the population size.
@@ -562,6 +636,7 @@ impl<D: Domain> Trainer<D> {
             population,
             exe,
             replays,
+            actor_sinks,
             gate,
             rng,
             staging,
@@ -673,6 +748,12 @@ impl<D: Domain> Trainer<D> {
     }
 
     /// Run the full loop with the given controller.
+    /// Live length of every replay stripe: per-agent buffers count as
+    /// one stripe each, a [`ShardedReplay`] reports each stripe.
+    fn stripe_lens(&self) -> Vec<usize> {
+        self.replays.iter().flat_map(|r| r.stripe_lens()).collect()
+    }
+
     pub fn run(&mut self, controller: &mut dyn Controller) -> anyhow::Result<Summary> {
         let art = self.population.artifact.clone();
         let k = art.num_steps as u64;
@@ -682,7 +763,8 @@ impl<D: Domain> Trainer<D> {
         } else {
             let mut cols: Vec<&str> = vec![
                 "wall_s", "updates", "env_steps", "best_return", "mean_return", "episodes",
-                "actor_restarts", "stalled_actors", "members_repaired",
+                "actor_restarts", "stalled_actors", "members_repaired", "stripe_min_fill",
+                "stripe_max_fill",
             ];
             cols.extend(D::metrics().iter().map(|(col, _)| *col));
             Some(CsvLogger::create(&self.cfg.csv_path, &cols)?)
@@ -694,7 +776,14 @@ impl<D: Domain> Trainer<D> {
             self.population.view.clone(),
             &self.cfg,
             throttle.clone(),
+            self.actor_sinks.clone(),
         )?;
+        // With direct-ingest sinks the drain channel carries no rows:
+        // ratio bookkeeping reads the shared env-step counter instead of
+        // counting drained rows, and episode returns arrive over the
+        // pool's episode lane.
+        let sink_mode = !self.actor_sinks.is_empty();
+        let mut env_steps_seen: u64 = 0;
 
         // Supervision state: restart bookkeeping per actor thread, the
         // watchdog's current stall flags, and the Summary counters.
@@ -776,6 +865,15 @@ impl<D: Domain> Trainer<D> {
 
                 // ---- drain actor messages --------------------------------
                 let t0 = Instant::now();
+                if sink_mode {
+                    let now = throttle.env_steps.load(std::sync::atomic::Ordering::Relaxed);
+                    self.gate.on_env_steps(now.saturating_sub(env_steps_seen));
+                    env_steps_seen = now;
+                    while let Some(ep) = pool.poll_episode() {
+                        self.population.returns[ep.agent].push(ep.ret);
+                        episodes += 1;
+                    }
+                }
                 let mut drained = 0u64;
                 while let Ok(block) = pool.rx.try_recv() {
                     drained += block.rows() as u64;
@@ -907,6 +1005,7 @@ impl<D: Domain> Trainer<D> {
                                 })
                                 .unwrap_or(f64::NAN)
                         };
+                        let stripe_lens = self.stripe_lens();
                         let mut row = vec![
                             start.elapsed().as_secs_f64(),
                             updates as f64,
@@ -917,6 +1016,8 @@ impl<D: Domain> Trainer<D> {
                             actor_restarts as f64,
                             stalled_flags.iter().filter(|&&s| s).count() as f64,
                             members_repaired as f64,
+                            stripe_lens.iter().copied().min().unwrap_or(0) as f64,
+                            stripe_lens.iter().copied().max().unwrap_or(0) as f64,
                         ];
                         row.extend(D::metrics().iter().map(|(_, field)| metric_mean(field)));
                         csv.row(&row)?;
@@ -931,6 +1032,7 @@ impl<D: Domain> Trainer<D> {
 
         let fitness = self.population.fitness();
         let finite: Vec<f64> = fitness.iter().copied().filter(|v| v.is_finite()).collect();
+        let stripe_lens = self.stripe_lens();
         Ok(Summary {
             wall_seconds: start.elapsed().as_secs_f64(),
             updates,
@@ -940,6 +1042,9 @@ impl<D: Domain> Trainer<D> {
             actor_restarts,
             stalled_actors: stall_events,
             members_repaired,
+            replay_shards: self.actor_sinks.len().max(1),
+            stripe_min_fill: stripe_lens.iter().copied().min().unwrap_or(0),
+            stripe_max_fill: stripe_lens.iter().copied().max().unwrap_or(0),
             timers,
         })
     }
@@ -1001,6 +1106,7 @@ mod tests {
             .with_sync_every(10)
             .with_replay_capacity(777)
             .with_shared_replay(true)
+            .with_replay_shards(3)
             .with_eps_greedy(0.05)
             .with_expl_noise(0.2)
             .with_csv("out.csv")
@@ -1022,6 +1128,7 @@ mod tests {
         assert_eq!(cfg.sync_every, 10);
         assert_eq!(cfg.replay_capacity, 777);
         assert!(cfg.shared_replay);
+        assert_eq!(cfg.replay_shards, 3);
         assert!((cfg.eps_greedy - 0.05).abs() < 1e-7);
         assert!((cfg.expl_noise - 0.2).abs() < 1e-7);
         assert_eq!(cfg.csv_path, "out.csv");

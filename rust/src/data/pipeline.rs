@@ -29,6 +29,19 @@
 //!   q-values; per-agent epsilon comes from the state field `eps_greedy`
 //!   (the `HyperSpec::dqn` space) when present.
 //!
+//! **Direct-ingest (sink) mode.** When the learner uses a sharded shared
+//! replay ([`ShardedReplay`](crate::replay::ShardedReplay)), the pool is
+//! spawned with one [`RowSink`] per thread and the actor loops switch
+//! transport: instead of sending each filled block over the channel and
+//! waiting for the learner to drain + recycle it, a thread pushes the
+//! block's rows straight into its own replay stripe under that stripe's
+//! lock and reuses the block in place — zero channel traffic, zero
+//! learner round-trip. Finished episodes ride a separate unbounded lane
+//! ([`BlockPool::poll_episode`]) since they no longer travel inside
+//! blocks. In sink mode the only backpressure is the ratio throttle
+//! (the bounded channel no longer pushes back), so sink-mode pools
+//! should always run with `ratio > 0`.
+//!
 //! The pool is **supervised**: every thread body runs under
 //! `catch_unwind` and reports a structured
 //! [`ActorExit`](crate::data::supervisor::ActorExit) on [`BlockPool`]'s
@@ -412,6 +425,32 @@ impl Throttle {
     }
 }
 
+/// A consumer of transport-block rows that actors can feed directly,
+/// bypassing the block channel — in practice a replay stripe
+/// ([`StripeSink`](crate::replay::StripeSink)). Implementations must be
+/// internally synchronized (`push_rows` takes `&self` from many actor
+/// threads).
+pub trait RowSink<B>: Send + Sync {
+    /// Insert rows `start..end` of `block`, preserving row order.
+    fn push_rows(&self, block: &B, start: usize, end: usize);
+}
+
+/// One actor thread's direct-ingest endpoints: its replay stripe plus
+/// the episode lane that replaces in-block episode transport. Cloned on
+/// respawn so every incarnation of a thread feeds the same stripe.
+pub struct ActorSink<B> {
+    /// The thread's replay stripe (shared with the learner's sampler).
+    pub rows: Arc<dyn RowSink<B>>,
+    /// Unbounded lane carrying finished-episode reports to the learner.
+    pub episodes: Sender<EpisodeReport>,
+}
+
+impl<B> Clone for ActorSink<B> {
+    fn clone(&self) -> Self {
+        ActorSink { rows: Arc::clone(&self.rows), episodes: self.episodes.clone() }
+    }
+}
+
 /// Everything one actor-thread incarnation needs from the pool: its
 /// identity (`thread`, `generation`), the agents it owns, the transport
 /// endpoints, the stop flag, and its heartbeat slot. Handed to the pool's
@@ -428,6 +467,9 @@ pub struct ActorScope<B: TransportBlock> {
     pub recycle: Receiver<B>,
     pub stop: Arc<AtomicBool>,
     pub heartbeats: Heartbeats,
+    /// Direct-ingest mode: when set, the loop pushes rows into this sink
+    /// and never touches `tx`/`recycle`.
+    pub sink: Option<ActorSink<B>>,
 }
 
 /// A respawnable actor-loop body. The pool keeps it for the lifetime of
@@ -483,6 +525,12 @@ pub struct BlockPool<B: TransportBlock> {
     events: Receiver<ActorExit>,
     event_tx: Sender<ActorExit>,
     queue_cap: usize,
+    /// Direct-ingest mode: per-thread row sinks (empty = channel mode).
+    /// Retained so a respawned incarnation re-binds to the same stripe.
+    sinks: Vec<Arc<dyn RowSink<B>>>,
+    /// Episode lane endpoints (sink mode only).
+    episode_tx: Option<Sender<EpisodeReport>>,
+    episode_rx: Option<Receiver<EpisodeReport>>,
 }
 
 /// The continuous-control actor pool ([`TransitionBlock`] transport).
@@ -522,6 +570,13 @@ impl<B: TransportBlock> BlockPool<B> {
         self.events.try_recv().ok()
     }
 
+    /// Next finished-episode report from the sink-mode episode lane, if
+    /// any (non-blocking). Always `None` in channel mode, where episodes
+    /// ride inside blocks instead.
+    pub fn poll_episode(&self) -> Option<EpisodeReport> {
+        self.episode_rx.as_ref().and_then(|rx| rx.try_recv().ok())
+    }
+
     /// Restart a dead thread's loop in place: fresh recycle lane, bumped
     /// `generation`, same agents. Returns false once the pool is
     /// stopping (or for an unknown thread index). Respawning a thread
@@ -545,9 +600,20 @@ impl<B: TransportBlock> BlockPool<B> {
             recycle: rrx,
             stop: self.stop.clone(),
             heartbeats: self.heartbeats.clone(),
+            // sink mode: the new incarnation re-binds to the SAME stripe
+            // its predecessor fed — stripe assignment is stable across
+            // respawns, like the agent partition.
+            sink: self.sink_for(thread),
         };
         self.handles.push(launch(self.body.clone(), scope, self.event_tx.clone()));
         true
+    }
+
+    /// The direct-ingest endpoints for `thread` (None in channel mode).
+    fn sink_for(&self, thread: usize) -> Option<ActorSink<B>> {
+        let tx = self.episode_tx.as_ref()?;
+        let rows = Arc::clone(&self.sinks[thread % self.sinks.len()]);
+        Some(ActorSink { rows, episodes: tx.clone() })
     }
 
     /// Set the stop flag, unblock senders, and join every thread.
@@ -576,16 +642,26 @@ impl<B: TransportBlock> Drop for BlockPool<B> {
 /// Shared pool scaffolding: partition `pop` agents round-robin over
 /// `n_threads`, wire the block channel + per-thread recycling lanes + the
 /// supervision side channel (exit events, heartbeats), and launch each
-/// thread's loop under `catch_unwind`.
+/// thread's loop under `catch_unwind`. A non-empty `sinks` switches the
+/// pool into direct-ingest mode: thread `t` is bound to sink
+/// `t % sinks.len()` and an episode lane replaces in-block episode
+/// transport.
 fn spawn_block_pool<B: TransportBlock>(
     pop: usize,
     n_threads: usize,
     queue_cap: usize,
     body: ActorBody<B>,
+    sinks: Vec<Arc<dyn RowSink<B>>>,
 ) -> BlockPool<B> {
     let n_threads = n_threads.clamp(1, pop);
     let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
     let (event_tx, events) = std::sync::mpsc::channel();
+    let (episode_tx, episode_rx) = if sinks.is_empty() {
+        (None, None)
+    } else {
+        let (etx, erx) = std::sync::mpsc::channel();
+        (Some(etx), Some(erx))
+    };
     let stop = Arc::new(AtomicBool::new(false));
     let heartbeats = Heartbeats::new(n_threads);
     let mut handles = Vec::new();
@@ -596,6 +672,10 @@ fn spawn_block_pool<B: TransportBlock>(
         let (rtx, rrx) = std::sync::mpsc::sync_channel(queue_cap.max(4));
         recycle.push(rtx);
         heartbeats.beat(t); // liveness clock starts at spawn, not first block
+        let sink = episode_tx.as_ref().map(|etx| ActorSink {
+            rows: Arc::clone(&sinks[t % sinks.len()]),
+            episodes: etx.clone(),
+        });
         let scope = ActorScope {
             thread: t,
             generation: 0,
@@ -604,6 +684,7 @@ fn spawn_block_pool<B: TransportBlock>(
             recycle: rrx,
             stop: stop.clone(),
             heartbeats: heartbeats.clone(),
+            sink,
         };
         agents_by_thread.push(agents);
         handles.push(launch(body.clone(), scope, event_tx.clone()));
@@ -621,18 +702,36 @@ fn spawn_block_pool<B: TransportBlock>(
         events,
         event_tx,
         queue_cap,
+        sinks,
+        episode_tx,
+        episode_rx,
     }
 }
 
 impl BlockPool<TransitionBlock> {
     /// Spawn `n_threads` continuous-control actor threads covering all
-    /// `artifact.pop` agents.
+    /// `artifact.pop` agents (channel transport).
     pub fn spawn(
         artifact: &Artifact,
         view: ParamView,
         cfg: ActorConfig,
         n_threads: usize,
         throttle: Throttle,
+    ) -> anyhow::Result<ActorPool> {
+        Self::spawn_with_sinks(artifact, view, cfg, n_threads, throttle, Vec::new())
+    }
+
+    /// Like [`ActorPool::spawn`], but a non-empty `sinks` puts the pool
+    /// in direct-ingest mode: thread `t` pushes its blocks straight into
+    /// `sinks[t % sinks.len()]` (its replay stripe) instead of the block
+    /// channel.
+    pub fn spawn_with_sinks(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: ActorConfig,
+        n_threads: usize,
+        throttle: Throttle,
+        sinks: Vec<Arc<dyn RowSink<TransitionBlock>>>,
     ) -> anyhow::Result<ActorPool> {
         // Validate the env/artifact pairing (metadata only — no weight
         // copies) on the caller's thread: a mismatch must surface as
@@ -664,19 +763,34 @@ impl BlockPool<TransitionBlock> {
             let cfg2 = ActorConfig { seed, ..cfg.clone() };
             actor_loop(&art, view.clone(), &cfg2, scope, throttle.clone());
         });
-        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body))
+        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body, sinks))
     }
 }
 
 impl BlockPool<PixelTransitionBlock> {
     /// Spawn `n_threads` pixel/DQN actor threads covering all
-    /// `artifact.pop` agents.
+    /// `artifact.pop` agents (channel transport).
     pub fn spawn(
         artifact: &Artifact,
         view: ParamView,
         cfg: PixelActorConfig,
         n_threads: usize,
         throttle: Throttle,
+    ) -> anyhow::Result<PixelActorPool> {
+        Self::spawn_with_sinks(artifact, view, cfg, n_threads, throttle, Vec::new())
+    }
+
+    /// Like [`PixelActorPool::spawn`], but a non-empty `sinks` puts the
+    /// pool in direct-ingest mode: thread `t` pushes its blocks straight
+    /// into `sinks[t % sinks.len()]` (its replay stripe) instead of the
+    /// block channel.
+    pub fn spawn_with_sinks(
+        artifact: &Artifact,
+        view: ParamView,
+        cfg: PixelActorConfig,
+        n_threads: usize,
+        throttle: Throttle,
+        sinks: Vec<Arc<dyn RowSink<PixelTransitionBlock>>>,
     ) -> anyhow::Result<PixelActorPool> {
         // Validate the env name and artifact layout on the caller's
         // thread (e.g. the 84x84 Atari conv stack stores q/conv0/* and
@@ -694,7 +808,7 @@ impl BlockPool<PixelTransitionBlock> {
             let cfg2 = PixelActorConfig { seed, ..cfg.clone() };
             pixel_actor_loop(&art, view.clone(), &cfg2, scope, throttle.clone());
         });
-        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body))
+        Ok(spawn_block_pool(artifact.pop, n_threads, queue_cap, body, sinks))
     }
 }
 
@@ -705,7 +819,7 @@ fn actor_loop(
     scope: ActorScope<TransitionBlock>,
     throttle: Throttle,
 ) {
-    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats } = scope;
+    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats, sink } = scope;
     let _ = generation; // used by the fault-inject hook only
     let agents = &agents[..];
     let mut rng = Rng::new(cfg.seed);
@@ -791,15 +905,30 @@ fn actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
-        if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
-            break;
+        match &sink {
+            // Direct-ingest mode: push the rows straight into this
+            // thread's replay stripe and reuse the block in place — no
+            // channel hop, no learner round-trip, allocation-free.
+            Some(sk) => {
+                sk.rows.push_rows(&block, 0, block.n);
+                for e in block.episodes.drain(..) {
+                    let _ = sk.episodes.send(e);
+                }
+                block.reset();
+            }
+            None => {
+                if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
+                    break;
+                }
+                // Reuse a drained block when the learner returned one;
+                // allocate only when the recycle lane is empty (cold
+                // start / learner busy).
+                block = match recycle.try_recv() {
+                    Ok(b) => b,
+                    Err(_) => TransitionBlock::new(thread, agents, obs_dim, act_dim),
+                };
+            }
         }
-        // Reuse a drained block when the learner returned one; allocate
-        // only when the recycle lane is empty (cold start / learner busy).
-        block = match recycle.try_recv() {
-            Ok(b) => b,
-            Err(_) => TransitionBlock::new(thread, agents, obs_dim, act_dim),
-        };
     }
 }
 
@@ -813,7 +942,7 @@ fn pixel_actor_loop(
     scope: ActorScope<PixelTransitionBlock>,
     throttle: Throttle,
 ) {
-    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats } = scope;
+    let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats, sink } = scope;
     let _ = generation; // used by the fault-inject hook only
     let agents = &agents[..];
     let mut rng = Rng::new(cfg.seed);
@@ -898,13 +1027,26 @@ fn pixel_actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
-        if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
-            break;
+        match &sink {
+            // Direct-ingest mode: see actor_loop — same contract, u8
+            // frame planes land in the stripe without requantization.
+            Some(sk) => {
+                sk.rows.push_rows(&block, 0, block.n);
+                for e in block.episodes.drain(..) {
+                    let _ = sk.episodes.send(e);
+                }
+                block.reset();
+            }
+            None => {
+                if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
+                    break;
+                }
+                block = match recycle.try_recv() {
+                    Ok(b) => b,
+                    Err(_) => PixelTransitionBlock::new(thread, agents, frame_len),
+                };
+            }
         }
-        block = match recycle.try_recv() {
-            Ok(b) => b,
-            Err(_) => PixelTransitionBlock::new(thread, agents, frame_len),
-        };
     }
 }
 
@@ -1179,7 +1321,7 @@ mod tests {
             let b = TransitionBlock::new(scope.thread, &scope.agents, 1, 1);
             let _ = scope.tx.send(b);
         });
-        let pool = spawn_block_pool(4, 2, 4, body);
+        let pool = spawn_block_pool(4, 2, 4, body, Vec::new());
         assert_eq!(pool.threads(), 2);
         assert_eq!(pool.thread_agents(0), &[0, 2]);
         assert_eq!(pool.thread_agents(1), &[1, 3]);
@@ -1224,7 +1366,7 @@ mod tests {
                 std::thread::yield_now();
             }
         });
-        let mut pool = spawn_block_pool(2, 1, 4, body);
+        let mut pool = spawn_block_pool(2, 1, 4, body, Vec::new());
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         let exit = loop {
             assert!(std::time::Instant::now() < deadline, "no panic exit observed");
@@ -1250,6 +1392,76 @@ mod tests {
         pool.stop();
     }
 
+    /// Sink mode: rows land in each thread's bound stripe without any
+    /// channel traffic, episodes arrive over the pool's episode lane,
+    /// and a respawned incarnation re-binds to the same stripe.
+    #[test]
+    fn block_pool_sink_mode_ingests_and_rebinds_on_respawn() {
+        use crate::replay::{Replay, ReplayBuffer, ShardedReplay};
+        let sharded = ShardedReplay::new(vec![
+            ReplayBuffer::new(64, 1, 1),
+            ReplayBuffer::new(64, 1, 1),
+        ]);
+        let sinks: Vec<Arc<dyn RowSink<TransitionBlock>>> = (0..2)
+            .map(|t| Arc::new(sharded.sink_for_thread(t)) as Arc<dyn RowSink<TransitionBlock>>)
+            .collect();
+        // gen 0 pushes 3 blocks then exits; gen 1 pushes 2 then exits.
+        // Each block carries one row per owned agent + 1 episode report.
+        let body: ActorBody<TransitionBlock> = Arc::new(|scope: ActorScope<TransitionBlock>| {
+            let sink = scope.sink.as_ref().expect("pool spawned in sink mode");
+            let mut b = TransitionBlock::new(scope.thread, &scope.agents, 1, 1);
+            let blocks = if scope.generation == 0 { 3 } else { 2 };
+            for i in 0..blocks {
+                b.n = scope.agents.len();
+                b.rew.iter_mut().for_each(|r| *r = i as f32);
+                b.episodes.push(EpisodeReport {
+                    agent: scope.agents[0],
+                    ret: i as f64,
+                    steps: 1,
+                });
+                sink.rows.push_rows(&b, 0, b.n);
+                for e in b.episodes.drain(..) {
+                    let _ = sink.episodes.send(e);
+                }
+                b.reset();
+            }
+        });
+        let mut pool = spawn_block_pool(4, 2, 4, body, sinks);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let wait_exits = |pool: &BlockPool<TransitionBlock>, n: usize| {
+            let mut exits = 0;
+            while exits < n {
+                assert!(std::time::Instant::now() < deadline, "missing exit events");
+                match pool.poll_exit() {
+                    Some(e) => {
+                        assert!(!e.cause.is_failure());
+                        exits += 1;
+                    }
+                    None => std::thread::yield_now(),
+                }
+            }
+        };
+        wait_exits(&pool, 2);
+        // 2 threads x 3 blocks x 2 agents, split evenly over the stripes;
+        // nothing ever crossed the block channel
+        assert_eq!(sharded.stripe_lens(), vec![6, 6]);
+        assert!(pool.rx.try_recv().is_err(), "sink mode must not use the channel");
+
+        // respawn thread 0: generation 1 feeds the SAME stripe
+        assert!(pool.respawn(0));
+        wait_exits(&pool, 1);
+        assert_eq!(sharded.stripe_lens(), vec![10, 6]);
+        assert_eq!(sharded.len(), 16);
+
+        // all 8 episode reports (3+3 gen 0, 2 respawn) on the lane
+        let mut episodes = 0;
+        while pool.poll_episode().is_some() {
+            episodes += 1;
+        }
+        assert_eq!(episodes, 8);
+        pool.stop();
+    }
+
     /// Dropping the pool (the early-`?` path in `Trainer::run`) sets the
     /// stop flag and joins every thread; respawn is refused once stopping.
     #[test]
@@ -1263,7 +1475,7 @@ mod tests {
             }
             r.fetch_sub(1, Ordering::SeqCst);
         });
-        let mut pool = spawn_block_pool(2, 2, 4, body);
+        let mut pool = spawn_block_pool(2, 2, 4, body, Vec::new());
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         while running.load(Ordering::SeqCst) < 2 {
             assert!(std::time::Instant::now() < deadline, "threads never started");

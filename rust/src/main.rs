@@ -115,6 +115,11 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .opt("max-actor-restarts", "3", "respawn budget per crashed actor thread (0 = off)")
         .opt("stall-timeout-ms", "5000", "actor stall watchdog timeout (0 = off)")
         .opt("max-seconds", "0", "wall-clock budget (0 = unlimited)")
+        .opt(
+            "replay-shards",
+            "1",
+            "shared-replay ingest stripes (0 = one per actor thread; needs shared replay)",
+        )
 }
 
 fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
@@ -128,7 +133,8 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
         .with_keep_checkpoints(args.get_usize("keep-checkpoints")?)
         .with_max_actor_restarts(args.get_u32("max-actor-restarts")?)
         .with_stall_timeout_ms(args.get_u64("stall-timeout-ms")?)
-        .with_max_seconds(args.get_f64("max-seconds")?);
+        .with_max_seconds(args.get_f64("max-seconds")?)
+        .with_replay_shards(args.get_usize("replay-shards")?);
     // optional config file refinements
     let path = args.get("config");
     if !path.is_empty() {
@@ -136,6 +142,7 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
         cfg.sync_every = file.get_usize("train.sync_every", cfg.sync_every as usize)? as u64;
         cfg.warmup_steps = file.get_usize("train.warmup_steps", cfg.warmup_steps)?;
         cfg.replay_capacity = file.get_usize("train.replay_capacity", cfg.replay_capacity)?;
+        cfg.replay_shards = file.get_usize("train.replay_shards", cfg.replay_shards)?;
         cfg.ratio = file.get_f64("train.ratio", cfg.ratio)?;
         cfg.n_actor_threads =
             file.get_usize("train.actor_threads", cfg.n_actor_threads)?;

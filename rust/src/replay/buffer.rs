@@ -200,6 +200,26 @@ impl Replay for ReplayBuffer {
             &mut s4[0][slot * batch..(slot + 1) * batch],
         );
     }
+
+    fn copy_row(&self, row: usize, batch: usize, st: &mut Staging, slot: usize, pos: usize) {
+        debug_assert!(row < self.len, "row {row} out of {} live rows", self.len);
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        let vec_base = slot * batch * od + pos * od;
+        let row1 = slot * batch + pos;
+        st.f32s[0][vec_base..vec_base + od]
+            .copy_from_slice(&self.obs[row * od..(row + 1) * od]);
+        let act_base = slot * batch * ad + pos * ad;
+        st.f32s[1][act_base..act_base + ad]
+            .copy_from_slice(&self.act[row * ad..(row + 1) * ad]);
+        st.f32s[2][row1] = self.rew[row];
+        st.f32s[3][vec_base..vec_base + od]
+            .copy_from_slice(&self.next_obs[row * od..(row + 1) * od]);
+        st.f32s[4][row1] = self.done[row];
+    }
+
+    fn total_inserted(&self) -> u64 {
+        self.total_inserted
+    }
 }
 
 #[cfg(test)]

@@ -7,15 +7,31 @@
 //! ([`Trainer`](crate::coordinator::trainer::Trainer)) inserts transport
 //! blocks and assembles `[k?, P, B, ...]` update batches without knowing
 //! which domain it is driving. [`Staging`] is the host-side batch
-//! assembly area the trait fills slot by slot.
+//! assembly area the trait fills slot by slot. [`ShardedReplay`] stripes
+//! any `Replay` N ways behind per-stripe locks so actor threads can
+//! ingest concurrently while the learner samples jointly across stripes.
+//!
+//! # The cross-domain transition contract
+//!
+//! Every artifact's batch inputs follow one canonical transition order —
+//! `obs, act, rew, next_obs, done` (the layout emitted by the python
+//! side's `transition_batch_args`) — and both buffers stage fields in
+//! exactly that input order. `done` is encoded as `0.0` (episode
+//! continues) or `1.0` (terminal transition) in f32, in transport blocks,
+//! in storage, and in staged batches alike; the update steps consume it
+//! directly as the bootstrap mask `1 - done`. Any new domain or buffer
+//! must preserve both conventions or the shared learner loop will stage
+//! fields under the wrong inputs.
 
 pub mod buffer;
 pub mod pixel;
 pub mod ratio;
+pub mod sharded;
 
 pub use buffer::ReplayBuffer;
 pub use pixel::PixelReplayBuffer;
 pub use ratio::RatioGate;
+pub use sharded::{ShardedReplay, StripeSink};
 
 use crate::manifest::{Artifact, Dtype};
 use crate::util::rng::Rng;
@@ -52,16 +68,28 @@ impl Staging {
 
     /// Build for an artifact's batch inputs (`inputs[1..]` — the leading
     /// input is the train state itself and is never staged).
-    pub fn for_artifact(artifact: &Artifact) -> Staging {
+    ///
+    /// Every batch input's element count must divide evenly into
+    /// `num_steps * pop` slots; a remainder means the artifact's batch
+    /// layout disagrees with its own pop/num_steps metadata, and slicing
+    /// it anyway would silently corrupt every staged batch.
+    pub fn for_artifact(artifact: &Artifact) -> anyhow::Result<Staging> {
         let slots = (artifact.num_steps * artifact.pop).max(1);
-        let layout: Vec<(Dtype, usize)> = artifact
-            .inputs
-            .get(1..)
-            .unwrap_or(&[])
-            .iter()
-            .map(|i| (i.dtype.clone(), i.numel() / slots))
-            .collect();
-        Staging::new(&layout, slots)
+        let mut layout: Vec<(Dtype, usize)> = Vec::new();
+        for input in artifact.inputs.get(1..).unwrap_or(&[]) {
+            anyhow::ensure!(
+                input.numel() % slots == 0,
+                "artifact '{}': batch input '{}' has {} elements (shape {:?}), \
+                 not divisible by num_steps * pop = {} slots — malformed batch layout",
+                artifact.name,
+                input.name,
+                input.numel(),
+                input.shape,
+                slots
+            );
+            layout.push((input.dtype.clone(), input.numel() / slots));
+        }
+        Ok(Staging::new(&layout, slots))
     }
 
     /// Number of staged inputs.
@@ -123,12 +151,69 @@ pub trait Replay: Send {
     /// Sample `batch` transitions uniformly with replacement into slot
     /// `slot` of the staging buffers.
     fn sample_slot(&self, rng: &mut Rng, batch: usize, staging: &mut Staging, slot: usize);
+
+    /// Copy one stored transition (`row`, in insertion-ring coordinates,
+    /// `< len()`) into position `pos` of slot `slot` of the staging
+    /// buffers, exactly as `sample_slot` would place draw number `pos` of
+    /// a `batch`-sized sample. This is the primitive [`ShardedReplay`]
+    /// composes to sample jointly across stripes while staying
+    /// byte-identical to the wrapped buffer's own sample stream.
+    fn copy_row(&self, row: usize, batch: usize, staging: &mut Staging, slot: usize, pos: usize);
+
+    /// Total transitions ever inserted (monotonic; not reset by `clear`).
+    /// The trainer's warmup accounting reads this.
+    fn total_inserted(&self) -> u64;
+
+    /// Live length of each ingest stripe. Single buffers are one stripe;
+    /// [`ShardedReplay`] reports per-stripe occupancy so the trainer can
+    /// surface fill imbalance without downcasting through `dyn Replay`.
+    fn stripe_lens(&self) -> Vec<usize> {
+        vec![self.len()]
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::pipeline::{PixelTransitionBlock, TransitionBlock};
+
+    #[test]
+    fn for_artifact_rejects_indivisible_inputs() {
+        use crate::manifest::{BatchInput, EnvDesc};
+        use std::path::PathBuf;
+        let inputs = |obs_numel: usize| {
+            vec![
+                BatchInput { name: "state".into(), shape: vec![10], dtype: Dtype::F32 },
+                BatchInput { name: "obs".into(), shape: vec![obs_numel], dtype: Dtype::F32 },
+            ]
+        };
+        let art = |obs_numel: usize| {
+            crate::manifest::Artifact::new(
+                "synthetic".into(),
+                PathBuf::new(),
+                "td3".into(),
+                "pendulum".into(),
+                EnvDesc::default(),
+                2, // pop
+                3, // num_steps -> 6 slots
+                4,
+                vec![],
+                10,
+                "state".into(),
+                vec![],
+                vec![],
+                inputs(obs_numel),
+            )
+        };
+        // divisible: 6 slots x stride 2
+        let st = Staging::for_artifact(&art(12)).expect("divisible layout must build");
+        assert_eq!(st.num_inputs(), 1);
+        assert_eq!(st.stride(0), 2);
+        // indivisible: 13 elements over 6 slots would truncate
+        let err = Staging::for_artifact(&art(13)).expect_err("must reject truncating layout");
+        let msg = format!("{err}");
+        assert!(msg.contains("obs") && msg.contains("13") && msg.contains("6"), "got: {msg}");
+    }
 
     #[test]
     fn staging_layout_and_slots() {

@@ -196,6 +196,32 @@ impl Replay for PixelReplayBuffer {
             &mut s4[0][slot * batch..(slot + 1) * batch],
         );
     }
+
+    fn copy_row(&self, row: usize, batch: usize, st: &mut Staging, slot: usize, pos: usize) {
+        debug_assert!(row < self.len, "row {row} out of {} live rows", self.len);
+        let fl = self.frame_len;
+        let frame_base = slot * batch * fl + pos * fl;
+        let row1 = slot * batch + pos;
+        for (d, &s) in st.f32s[0][frame_base..frame_base + fl]
+            .iter_mut()
+            .zip(&self.obs[row * fl..(row + 1) * fl])
+        {
+            *d = s as f32;
+        }
+        for (d, &s) in st.f32s[3][frame_base..frame_base + fl]
+            .iter_mut()
+            .zip(&self.next_obs[row * fl..(row + 1) * fl])
+        {
+            *d = s as f32;
+        }
+        st.i32s[1][row1] = self.act[row];
+        st.f32s[2][row1] = self.rew[row];
+        st.f32s[4][row1] = self.done[row];
+    }
+
+    fn total_inserted(&self) -> u64 {
+        self.total_inserted
+    }
 }
 
 #[cfg(test)]

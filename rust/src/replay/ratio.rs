@@ -56,14 +56,30 @@ impl RatioGate {
         (self.update_steps + n) as f64 <= self.target * env as f64 + self.slack
     }
 
-    /// May actors take more environment steps without leaving the learner
-    /// hopelessly behind? (Bounded lead keeps data near on-policy-ish.)
+    /// May actors take `n` more environment steps without leaving the
+    /// learner hopelessly behind? (Bounded lead keeps data near
+    /// on-policy-ish.)
+    ///
+    /// Exactly symmetric with [`RatioGate::may_update`], modulo warmup:
+    /// one tolerance band of `slack` update steps around the target line
+    /// `update_steps = target * counted_env_steps`, evaluated after the
+    /// `n` steps would land. The band is floored at `1 + target` update
+    /// steps — the minimum both sides together must be able to owe for
+    /// the pair to make progress at `slack = 0` (one update spends one
+    /// unit of learner credit, one env step costs `target` units; with a
+    /// smaller band fractional targets such as 1.5 deadlock, e.g. at
+    /// env=1/updates=1 neither side may move inside a band of 1.5).
+    ///
+    /// An earlier version OR-ed three overlapping conditions and added
+    /// `slack.max(1.0)` on top of `slack`, so the permitted actor lead
+    /// was double-banded (~`2 * slack / target` uncounted steps at
+    /// fractional targets) and asymmetric with the learner side.
     pub fn may_step_env(&self, n: u64) -> bool {
-        let env = self.counted_env_steps() + n;
-        // actors may lead by `slack` updates' worth of steps
-        self.update_steps as f64 + self.slack >= self.target * env as f64 - self.slack.max(1.0)
-            || self.env_steps < self.warmup_env_steps
-            || (env as f64) * self.target <= self.update_steps as f64 + self.slack
+        if self.env_steps + n <= self.warmup_env_steps {
+            return true;
+        }
+        let env = (self.env_steps + n).saturating_sub(self.warmup_env_steps);
+        self.target * env as f64 <= self.update_steps as f64 + self.slack.max(1.0 + self.target)
     }
 
     pub fn ratio(&self) -> f64 {
@@ -117,5 +133,83 @@ mod tests {
         // 50 more updates fit inside the slack band
         assert!(g.may_update(50));
         assert!(!g.may_update(51));
+    }
+
+    #[test]
+    fn warmup_steps_are_always_allowed() {
+        let g = RatioGate::new(1.0, 0.0, 100);
+        assert!(g.may_step_env(100));
+        // past warmup the band takes over: floor is 1 + target = 2
+        assert!(g.may_step_env(102));
+        assert!(!g.may_step_env(103));
+    }
+
+    #[test]
+    fn env_band_is_symmetric_with_update_band() {
+        // One band of `slack` update steps on either side of the target
+        // line: actors may lead by slack/target env steps, the learner by
+        // slack updates.
+        let mut g = RatioGate::new(1.0, 64.0, 0);
+        assert!(g.may_step_env(64));
+        assert!(!g.may_step_env(65));
+        g.on_env_steps(64);
+        assert!(g.may_update(128)); // 64 owed + 64 slack
+        assert!(!g.may_update(129));
+    }
+
+    #[test]
+    fn fractional_target_lead_is_single_banded() {
+        // target 0.25, slack 8: the permitted uncounted lead is
+        // slack/target = 32 env steps — the old triple-condition form
+        // allowed (slack + slack)/target = 64.
+        let g = RatioGate::new(0.25, 8.0, 0);
+        assert!(g.may_step_env(32));
+        assert!(!g.may_step_env(33));
+    }
+
+    #[test]
+    fn zero_slack_floor_keeps_both_sides_live() {
+        // At slack = 0 the band floor (1 + target) still lets the first
+        // env step through so the pair can bootstrap.
+        let g = RatioGate::new(4.0, 0.0, 0);
+        assert!(g.may_step_env(1));
+        assert!(!g.may_step_env(2));
+    }
+
+    #[test]
+    fn joint_gate_never_deadlocks() {
+        // Greedy interleave: at every state at least one side may act.
+        // Includes fractional targets > 1, which deadlock if the band
+        // floor is anything below 1 + target.
+        for &target in &[0.25, 0.5, 1.0, 1.5, 2.9, 4.0] {
+            for &slack in &[0.0, 2.0, 8.0] {
+                let mut g = RatioGate::new(target, slack, 10);
+                for i in 0..5000 {
+                    if g.may_update(1) {
+                        g.on_update_steps(1);
+                    } else if g.may_step_env(1) {
+                        g.on_env_steps(1);
+                    } else {
+                        panic!(
+                            "deadlock at target={target} slack={slack} iter={i}: \
+                             env={} updates={}",
+                            g.env_steps(),
+                            g.update_steps()
+                        );
+                    }
+                }
+                // |updates - target*env| stays inside the band on either
+                // side, so the realized ratio converges like band/env.
+                let counted = (g.env_steps() - g.warmup_env_steps) as f64;
+                let band = slack.max(1.0 + target);
+                let tol = (band + 1.0) / counted + 1e-9;
+                let err = (g.ratio() - target).abs();
+                assert!(
+                    err <= tol,
+                    "ratio {} drifted from target {target} (slack {slack}, tol {tol})",
+                    g.ratio()
+                );
+            }
+        }
     }
 }

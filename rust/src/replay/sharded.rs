@@ -1,0 +1,408 @@
+//! Striped shared replay: N ingest stripes behind per-stripe locks,
+//! sampled jointly (paper Appendix A at large populations).
+//!
+//! With one shared [`ReplayBuffer`](crate::replay::ReplayBuffer), every
+//! actor block funnels through the learner's drain loop and one insert
+//! path — at large populations ingestion serializes behind the learner.
+//! [`ShardedReplay`] stripes any [`Replay`] implementation N ways
+//! (default: one stripe per actor thread): each actor pushes its
+//! transport-block runs straight into its own stripe through a
+//! [`StripeSink`] under a lightweight per-stripe mutex, so insertion
+//! contention is per-thread, not global, and blocks never round-trip
+//! through the learner.
+//!
+//! Sampling stays distribution-identical to the single buffer: the
+//! learner draws each transition index uniformly over the *total* live
+//! rows and maps it to (stripe, local row) — a length-weighted joint
+//! sample. With one stripe the RNG call sequence and the staged bytes
+//! are exactly those of the wrapped buffer, which is what the parity
+//! tests below pin down.
+//!
+//! Lock ordering: actors only ever lock their own single stripe; the
+//! learner locks stripes in ascending index order (`sample_slot`,
+//! `clear`, the aggregate accessors), so lock acquisition is cycle-free.
+//! Poisoned stripe locks (an actor thread panicking mid-push) are
+//! recovered, not propagated: ring `len`/`head` are updated only after
+//! the row copies, so the stored prefix is always consistent and the
+//! supervisor can respawn the actor onto the same stripe.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::data::pipeline::{RowSink, TransportBlock};
+use crate::replay::{Replay, Staging};
+use crate::util::rng::Rng;
+
+/// Poison-tolerant lock: a panicked actor cannot leave a stripe
+/// half-written (length advances after the copies), so the data behind a
+/// poisoned mutex is still valid.
+fn lock<R>(stripe: &Mutex<R>) -> MutexGuard<'_, R> {
+    stripe.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// A shared replay buffer striped N ways. Implements [`Replay`] over the
+/// same block type as the wrapped buffer, so the trainer, warmup
+/// accounting and both domains use it unchanged (`len`/`capacity`/
+/// `total_inserted` aggregate across stripes, `clear` clears all stripes
+/// coherently, `sample_slot` samples jointly weighted by live length).
+pub struct ShardedReplay<R: Replay> {
+    stripes: Vec<Arc<Mutex<R>>>,
+}
+
+impl<R: Replay> ShardedReplay<R> {
+    /// Wrap `stripes` (at least one) as one striped buffer.
+    pub fn new(stripes: Vec<R>) -> ShardedReplay<R> {
+        assert!(!stripes.is_empty(), "ShardedReplay needs at least one stripe");
+        ShardedReplay { stripes: stripes.into_iter().map(|s| Arc::new(Mutex::new(s))).collect() }
+    }
+
+    pub fn num_stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// The ingest sink for actor thread `thread` (stripe
+    /// `thread % num_stripes`). Clones share the stripe, so a respawned
+    /// incarnation of the thread re-binds to the same stripe.
+    pub fn sink_for_thread(&self, thread: usize) -> StripeSink<R> {
+        StripeSink { stripe: Arc::clone(&self.stripes[thread % self.stripes.len()]) }
+    }
+}
+
+impl<R> Replay for ShardedReplay<R>
+where
+    R: Replay,
+    R::Block: TransportBlock,
+{
+    type Block = R::Block;
+
+    fn len(&self) -> usize {
+        self.stripes.iter().map(|s| lock(s).len()).sum()
+    }
+
+    fn capacity(&self) -> usize {
+        self.stripes.iter().map(|s| lock(s).capacity()).sum()
+    }
+
+    fn clear(&mut self) {
+        // ascending index order, same as sampling — coherent on PBT
+        // exploit: after clear() returns, every stripe is empty.
+        for s in &self.stripes {
+            lock(s).clear();
+        }
+    }
+
+    fn push_rows(&mut self, block: &R::Block, start: usize, end: usize) {
+        // learner-side drain path (non-sink mode): route the block to its
+        // producing thread's stripe, same placement the sinks would use.
+        let stripe = block.thread() % self.stripes.len();
+        lock(&self.stripes[stripe]).push_rows(block, start, end);
+    }
+
+    fn sample_slot(&self, rng: &mut Rng, batch: usize, staging: &mut Staging, slot: usize) {
+        // Hold every stripe for the whole slot so the draw is over one
+        // consistent snapshot of live lengths.
+        let guards: Vec<MutexGuard<'_, R>> = self.stripes.iter().map(|s| lock(s)).collect();
+        let lens: Vec<usize> = guards.iter().map(|g| g.len()).collect();
+        let total: usize = lens.iter().sum();
+        assert!(total > 0, "sampling from empty replay buffer");
+        for pos in 0..batch {
+            // One uniform draw over all live rows, then locate the
+            // stripe: length-weighted joint sampling. With one stripe
+            // this is bit-for-bit the wrapped buffer's own stream.
+            let mut row = rng.below(total);
+            let mut stripe = 0;
+            while row >= lens[stripe] {
+                row -= lens[stripe];
+                stripe += 1;
+            }
+            guards[stripe].copy_row(row, batch, staging, slot, pos);
+        }
+    }
+
+    fn copy_row(&self, row: usize, batch: usize, staging: &mut Staging, slot: usize, pos: usize) {
+        // global coordinate: stripes concatenated in index order
+        let mut row = row;
+        for s in &self.stripes {
+            let g = lock(s);
+            if row < g.len() {
+                g.copy_row(row, batch, staging, slot, pos);
+                return;
+            }
+            row -= g.len();
+        }
+        panic!("copy_row past live rows");
+    }
+
+    fn total_inserted(&self) -> u64 {
+        self.stripes.iter().map(|s| lock(s).total_inserted()).sum()
+    }
+
+    fn stripe_lens(&self) -> Vec<usize> {
+        self.stripes.iter().map(|s| lock(s).len()).collect()
+    }
+}
+
+/// An actor thread's handle on its own stripe: [`RowSink::push_rows`]
+/// takes the per-stripe lock, inserts the rows, and returns — no channel
+/// hop, no learner round-trip. Cloned for respawn so every incarnation
+/// of a thread feeds the same stripe.
+pub struct StripeSink<R: Replay> {
+    stripe: Arc<Mutex<R>>,
+}
+
+impl<R: Replay> Clone for StripeSink<R> {
+    fn clone(&self) -> Self {
+        StripeSink { stripe: Arc::clone(&self.stripe) }
+    }
+}
+
+impl<R: Replay> RowSink<R::Block> for StripeSink<R> {
+    fn push_rows(&self, block: &R::Block, start: usize, end: usize) {
+        lock(&self.stripe).push_rows(block, start, end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::pipeline::{PixelTransitionBlock, TransitionBlock};
+    use crate::manifest::Dtype;
+    use crate::replay::{PixelReplayBuffer, ReplayBuffer};
+    use crate::util::stats::chi_squared_uniform;
+
+    fn continuous_block(thread: usize, rows: usize, od: usize, ad: usize, id0: f32)
+        -> TransitionBlock {
+        let agents: Vec<usize> = (0..rows).collect();
+        let mut block = TransitionBlock::new(thread, &agents, od, ad);
+        for r in 0..rows {
+            let id = id0 + r as f32;
+            for j in 0..od {
+                block.obs[r * od + j] = 10.0 * id + j as f32;
+                block.next_obs[r * od + j] = 1000.0 + 10.0 * id + j as f32;
+            }
+            for j in 0..ad {
+                block.act[r * ad + j] = -id;
+            }
+            block.rew[r] = id;
+            block.done[r] = (r % 2) as f32;
+        }
+        block.n = rows;
+        block
+    }
+
+    fn pixel_block(thread: usize, rows: usize, fl: usize, id0: f32) -> PixelTransitionBlock {
+        let agents: Vec<usize> = (0..rows).collect();
+        let mut block = PixelTransitionBlock::new(thread, &agents, fl);
+        for r in 0..rows {
+            let id = id0 as usize + r;
+            for j in 0..fl {
+                block.obs[r * fl + j] = ((id >> j) & 1) as u8;
+                block.next_obs[r * fl + j] = ((!id >> j) & 1) as u8;
+            }
+            block.act[r] = (id % 7) as i32;
+            block.rew[r] = id0 + r as f32;
+            block.done[r] = (id % 2) as f32;
+        }
+        block.n = rows;
+        block
+    }
+
+    fn continuous_staging(batch: usize, od: usize, ad: usize, slots: usize) -> Staging {
+        Staging::new(
+            &[
+                (Dtype::F32, batch * od),
+                (Dtype::F32, batch * ad),
+                (Dtype::F32, batch),
+                (Dtype::F32, batch * od),
+                (Dtype::F32, batch),
+            ],
+            slots,
+        )
+    }
+
+    fn pixel_staging(batch: usize, fl: usize, slots: usize) -> Staging {
+        Staging::new(
+            &[
+                (Dtype::F32, batch * fl),
+                (Dtype::I32, batch),
+                (Dtype::F32, batch),
+                (Dtype::F32, batch * fl),
+                (Dtype::F32, batch),
+            ],
+            slots,
+        )
+    }
+
+    /// 1 stripe must be byte-identical to the wrapped buffer through
+    /// `dyn Replay`: same RNG stream consumed, same staged bytes.
+    #[test]
+    fn one_stripe_matches_wrapped_buffer_continuous() {
+        let (od, ad, cap, batch) = (3usize, 2usize, 32usize, 5usize);
+        let mut sharded: Box<dyn Replay<Block = TransitionBlock>> =
+            Box::new(ShardedReplay::new(vec![ReplayBuffer::new(cap, od, ad)]));
+        let mut plain: Box<dyn Replay<Block = TransitionBlock>> =
+            Box::new(ReplayBuffer::new(cap, od, ad));
+        let mut id = 0.0;
+        for (thread, rows) in [(0usize, 7usize), (3, 5), (1, 9)] {
+            let block = continuous_block(thread, rows, od, ad, id);
+            id += rows as f32;
+            sharded.push_rows(&block, 0, rows);
+            plain.push_rows(&block, 0, rows);
+        }
+        assert_eq!(sharded.len(), plain.len());
+        assert_eq!(sharded.capacity(), plain.capacity());
+        assert_eq!(sharded.total_inserted(), plain.total_inserted());
+
+        let slots = 2;
+        let mut st_s = continuous_staging(batch, od, ad, slots);
+        let mut st_p = continuous_staging(batch, od, ad, slots);
+        let mut rng_s = Rng::new(42);
+        let mut rng_p = Rng::new(42);
+        for slot in 0..slots {
+            sharded.sample_slot(&mut rng_s, batch, &mut st_s, slot);
+            plain.sample_slot(&mut rng_p, batch, &mut st_p, slot);
+        }
+        assert_eq!(st_s.f32s, st_p.f32s);
+        // identical stream position afterwards too
+        assert_eq!(rng_s.below(1 << 30), rng_p.below(1 << 30));
+
+        sharded.clear();
+        assert!(sharded.is_empty());
+    }
+
+    /// Pixel domain: same 1-stripe parity contract, including the i32
+    /// action lane and u8 -> f32 frame expansion.
+    #[test]
+    fn one_stripe_matches_wrapped_buffer_pixel() {
+        let (fl, cap, batch) = (6usize, 32usize, 4usize);
+        let mut sharded: Box<dyn Replay<Block = PixelTransitionBlock>> =
+            Box::new(ShardedReplay::new(vec![PixelReplayBuffer::new(cap, fl)]));
+        let mut plain: Box<dyn Replay<Block = PixelTransitionBlock>> =
+            Box::new(PixelReplayBuffer::new(cap, fl));
+        let mut id = 0.0;
+        for (thread, rows) in [(2usize, 6usize), (0, 8), (5, 4)] {
+            let block = pixel_block(thread, rows, fl, id);
+            id += rows as f32;
+            sharded.push_rows(&block, 0, rows);
+            plain.push_rows(&block, 0, rows);
+        }
+        assert_eq!(sharded.len(), plain.len());
+        assert_eq!(sharded.total_inserted(), plain.total_inserted());
+
+        let mut st_s = pixel_staging(batch, fl, 1);
+        let mut st_p = pixel_staging(batch, fl, 1);
+        let mut rng_s = Rng::new(7);
+        let mut rng_p = Rng::new(7);
+        sharded.sample_slot(&mut rng_s, batch, &mut st_s, 0);
+        plain.sample_slot(&mut rng_p, batch, &mut st_p, 0);
+        assert_eq!(st_s.f32s, st_p.f32s);
+        assert_eq!(st_s.i32s, st_p.i32s);
+    }
+
+    /// N stripes: aggregated `len`/`capacity`/`total_inserted`, per-block
+    /// thread routing, per-stripe occupancy, and coherent `clear`.
+    #[test]
+    fn stripes_aggregate_route_and_clear() {
+        let (od, ad) = (2usize, 1usize);
+        let stripes: Vec<ReplayBuffer> = (0..3).map(|_| ReplayBuffer::new(8, od, ad)).collect();
+        let mut sharded = ShardedReplay::new(stripes);
+        assert_eq!(sharded.num_stripes(), 3);
+        // threads 0..5 route t % 3; rows per thread chosen unequal
+        for (thread, rows) in [(0usize, 2usize), (1, 3), (2, 1), (3, 4), (4, 2)] {
+            let block = continuous_block(thread, rows, od, ad, 0.0);
+            sharded.push_rows(&block, 0, rows);
+        }
+        // stripe 0 <- threads 0,3 (2+4); stripe 1 <- threads 1,4 (3+2);
+        // stripe 2 <- thread 2 (1)
+        assert_eq!(sharded.stripe_lens(), vec![6, 5, 1]);
+        assert_eq!(sharded.len(), 12);
+        assert_eq!(sharded.capacity(), 24);
+        assert_eq!(sharded.total_inserted(), 12);
+
+        sharded.clear();
+        assert_eq!(sharded.stripe_lens(), vec![0, 0, 0]);
+        assert!(sharded.is_empty());
+        assert_eq!(sharded.total_inserted(), 12, "monotonic across clear");
+    }
+
+    /// Sinks bind a thread to stripe `thread % N` and survive cloning
+    /// (the respawn path re-uses a clone of the original sink).
+    #[test]
+    fn sink_routes_to_bound_stripe() {
+        let (od, ad) = (1usize, 1usize);
+        let sharded = ShardedReplay::new(vec![
+            ReplayBuffer::new(8, od, ad),
+            ReplayBuffer::new(8, od, ad),
+        ]);
+        let s0 = sharded.sink_for_thread(0);
+        let s3 = sharded.sink_for_thread(3); // 3 % 2 == 1
+        let respawned = s3.clone();
+        s0.push_rows(&continuous_block(0, 2, od, ad, 0.0), 0, 2);
+        s3.push_rows(&continuous_block(3, 1, od, ad, 2.0), 0, 1);
+        respawned.push_rows(&continuous_block(3, 3, od, ad, 3.0), 0, 3);
+        assert_eq!(sharded.stripe_lens(), vec![2, 4]);
+    }
+
+    fn assert_uniform(counts: &[u64]) {
+        let df = (counts.len() - 1) as f64;
+        let chi2 = chi_squared_uniform(counts);
+        // mean df, variance 2*df: five sigma keeps the fixed-seed test
+        // deterministic-safe while catching any stripe weighting bias
+        let limit = df + 5.0 * (2.0 * df).sqrt();
+        assert!(chi2 < limit, "chi2 {chi2} over limit {limit} (counts {counts:?})");
+    }
+
+    /// Joint sampling across unequal stripes is uniform over the live
+    /// rows — the length weighting exactly cancels stripe imbalance.
+    #[test]
+    fn joint_sampling_is_uniform_continuous() {
+        let (od, ad, batch) = (1usize, 1usize, 32usize);
+        let stripes: Vec<ReplayBuffer> = (0..4).map(|_| ReplayBuffer::new(16, od, ad)).collect();
+        let mut sharded = ShardedReplay::new(stripes);
+        // unequal live lengths 5/9/3/13 = 30 rows, rew = global row id
+        let mut id = 0.0;
+        for (thread, rows) in [(0usize, 5usize), (1, 9), (2, 3), (3, 13)] {
+            let block = continuous_block(thread, rows, od, ad, id);
+            id += rows as f32;
+            sharded.push_rows(&block, 0, rows);
+        }
+        let total = 30usize;
+        assert_eq!(sharded.len(), total);
+        let mut counts = vec![0u64; total];
+        let mut st = continuous_staging(batch, od, ad, 1);
+        let mut rng = Rng::new(1234);
+        for _ in 0..2000 {
+            sharded.sample_slot(&mut rng, batch, &mut st, 0);
+            for &r in st.slot_f32(2, 0).iter() {
+                counts[r as usize] += 1;
+            }
+        }
+        assert_uniform(&counts);
+    }
+
+    /// Same uniformity contract on the pixel buffer.
+    #[test]
+    fn joint_sampling_is_uniform_pixel() {
+        let (fl, batch) = (3usize, 32usize);
+        let stripes: Vec<PixelReplayBuffer> =
+            (0..3).map(|_| PixelReplayBuffer::new(16, fl)).collect();
+        let mut sharded = ShardedReplay::new(stripes);
+        let mut id = 0.0;
+        for (thread, rows) in [(0usize, 4usize), (1, 11), (2, 7)] {
+            let block = pixel_block(thread, rows, fl, id);
+            id += rows as f32;
+            sharded.push_rows(&block, 0, rows);
+        }
+        let total = 22usize;
+        assert_eq!(sharded.len(), total);
+        let mut counts = vec![0u64; total];
+        let mut st = pixel_staging(batch, fl, 1);
+        let mut rng = Rng::new(99);
+        for _ in 0..2000 {
+            sharded.sample_slot(&mut rng, batch, &mut st, 0);
+            for &r in st.slot_f32(2, 0).iter() {
+                counts[r as usize] += 1;
+            }
+        }
+        assert_uniform(&counts);
+    }
+}

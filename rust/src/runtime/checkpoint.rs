@@ -223,10 +223,18 @@ impl CheckpointLineage {
         self.next_seq += 1;
         // Mirror onto the plain base path (hard link when the fs allows,
         // else a full copy) so `Checkpoint::load(base)` keeps working.
-        let _ = std::fs::remove_file(&self.base);
-        if std::fs::hard_link(&seq_path, &self.base).is_err() {
-            std::fs::copy(&seq_path, &self.base)?;
+        // Link/copy under a temp name, then rename over the base: the old
+        // remove-then-link sequence left a window with *no* base file at
+        // all, where a crash (or a reader racing the save) found the
+        // mirror missing instead of merely one generation stale. The
+        // rename replaces the base atomically, same as `Checkpoint::save`
+        // and the `last_good` pointer write.
+        let tmp = self.base.with_file_name(format!("{stem}.mirror.tmp"));
+        let _ = std::fs::remove_file(&tmp); // stale leftover from a crash
+        if std::fs::hard_link(&seq_path, &tmp).is_err() {
+            std::fs::copy(&seq_path, &tmp)?;
         }
+        std::fs::rename(&tmp, &self.base)?;
         if healthy {
             // pointer write is tmp+rename for the same torn-write safety
             // as the checkpoint itself
@@ -398,6 +406,27 @@ mod tests {
         again.save(&ckpt_at(9), true).unwrap();
         assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 9);
         assert_eq!(CheckpointLineage::sequence(&base)[0].0, 5);
+    }
+
+    /// The base mirror is replaced by rename — never removed first — so
+    /// it always names a complete generation, and a stale `.mirror.tmp`
+    /// left by a crashed save cannot wedge the next one.
+    #[test]
+    fn mirror_survives_stale_tmp_and_always_loads() {
+        let dir = lineage_dir("mirror");
+        let base = dir.join("ckpt.bin");
+        let tmp = dir.join("ckpt.bin.mirror.tmp");
+        std::fs::write(&tmp, b"torn garbage from a crashed save").unwrap();
+        let mut lin = CheckpointLineage::new(&base, 2);
+        lin.save(&ckpt_at(1), true).unwrap();
+        assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 1);
+        assert!(!tmp.exists(), "temp mirror must not outlive the save");
+        lin.save(&ckpt_at(2), true).unwrap();
+        assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 2);
+        // the mirror still shares the generation's inode where hard
+        // links work: corrupting the generation corrupts the mirror too
+        // (resume_falls_back_down_lineage_on_corruption relies on this)
+        assert!(!tmp.exists());
     }
 
     #[test]

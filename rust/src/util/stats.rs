@@ -91,6 +91,25 @@ pub fn argmax(q: &[f32]) -> usize {
     best
 }
 
+/// Chi-squared goodness-of-fit statistic of observed cell `counts`
+/// against a uniform expectation (df = counts.len() - 1). Used by the
+/// sharded-replay uniformity suite: under uniform sampling the statistic
+/// concentrates around df with variance 2*df.
+pub fn chi_squared_uniform(counts: &[u64]) -> f64 {
+    let n: u64 = counts.iter().sum();
+    if counts.is_empty() || n == 0 {
+        return 0.0;
+    }
+    let expected = n as f64 / counts.len() as f64;
+    counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum()
+}
+
 /// Indices that would sort `xs` descending (best-first ranking).
 pub fn argsort_desc(xs: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
@@ -134,6 +153,18 @@ mod tests {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[-5.0]), 0);
         assert_eq!(argmax(&[0.0, -1.0, 7.0]), 2);
+    }
+
+    #[test]
+    fn chi_squared_uniform_scores() {
+        // perfectly uniform counts -> 0
+        assert_eq!(chi_squared_uniform(&[10, 10, 10, 10]), 0.0);
+        // grossly skewed counts blow far past df + 5*sqrt(2 df)
+        let skewed = chi_squared_uniform(&[40, 0, 0, 0]);
+        assert!(skewed > 3.0 + 5.0 * (6.0f64).sqrt(), "chi2 {skewed}");
+        // degenerate inputs are defined as 0
+        assert_eq!(chi_squared_uniform(&[]), 0.0);
+        assert_eq!(chi_squared_uniform(&[0, 0]), 0.0);
     }
 
     #[test]

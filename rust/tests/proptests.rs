@@ -456,6 +456,74 @@ fn prop_push_batch_behaves_like_repeated_push() {
     }
 }
 
+/// The trainer's ratio pairing — actors throttled through [`Throttle`]'s
+/// shared counters (bounded by `lead` env steps), the learner gated by
+/// [`RatioGate`] (bounded by `slack` update steps) — must make joint
+/// progress at every target and land on updates/env ≈ target, each side
+/// inside its own band. Randomized interleavings at the paper's target
+/// range, including draws pinned to the exact liveness boundary.
+#[test]
+fn prop_joint_throttle_ratio_gate_converges() {
+    use fastpbrl::data::pipeline::Throttle;
+    use std::sync::atomic::Ordering;
+
+    let mut rng = Rng::new(15);
+    for &target in &[0.25f64, 0.5, 1.0, 4.0] {
+        for case in 0..25 {
+            let slack = [0.0, 2.0, 16.0][rng.below(3)];
+            let mut lead = 1 + rng.below(64) as u64;
+            // Liveness floor: one update spends one unit of learner
+            // credit and one env step costs `target`, so the two bands
+            // together must cover `1 + target` (the same floor
+            // `may_step_env` carries). Pin too-tight draws to the exact
+            // boundary instead of discarding them, so the edge stays
+            // covered.
+            if target * lead as f64 + slack < 1.0 + target {
+                lead = ((1.0 + target - slack) / target).ceil() as u64;
+            }
+            let warmup = rng.below(40) as u64;
+            let throttle = Throttle::new();
+            let mut gate = RatioGate::new(target, slack, warmup);
+            let total_updates = 300u64;
+            let mut iters = 0u64;
+            while gate.update_steps() < total_updates {
+                iters += 1;
+                assert!(iters < 200_000, "no convergence: target {target} case {case}");
+                let actor_ok = throttle.may_step_with(target, warmup, lead);
+                let learner_ok = gate.may_update(1);
+                assert!(
+                    actor_ok || learner_ok,
+                    "deadlock: target {target} slack {slack} lead {lead} case {case} \
+                     ({} env steps, {} updates)",
+                    gate.env_steps(),
+                    gate.update_steps()
+                );
+                if learner_ok && (!actor_ok || rng.below(2) == 0) {
+                    gate.on_update_steps(1);
+                    throttle.updates.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    throttle.env_steps.fetch_add(1, Ordering::Relaxed);
+                    gate.on_env_steps(1);
+                }
+            }
+            let env_pw = gate.env_steps().saturating_sub(warmup) as f64;
+            let upd = gate.update_steps() as f64;
+            // the learner never leads the target line by more than slack...
+            assert!(
+                upd <= target * env_pw + slack + 1e-6,
+                "learner over band: target {target} case {case}: {upd} updates \
+                 vs {env_pw} counted env steps (slack {slack})"
+            );
+            // ...and actors never lead it by more than their lead allowance
+            assert!(
+                target * env_pw <= upd + target * (lead as f64 + 1.0) + 1e-6,
+                "actors over band: target {target} case {case}: {env_pw} counted \
+                 env steps vs {upd} updates (lead {lead})"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_config_roundtrip_values() {
     let mut rng = Rng::new(12);
