@@ -21,6 +21,7 @@ use std::collections::VecDeque;
 use fastpbrl::bench_support::harness::{report, Bench, BenchResult};
 use fastpbrl::data::pipeline::TransitionBlock;
 use fastpbrl::envs::{make_env, VecEnv};
+use fastpbrl::nn::kernels::matmat_tiled;
 use fastpbrl::nn::mlp::{matvec_dense, matvec_sparse};
 use fastpbrl::nn::{Activation, Mlp, PopMlp};
 use fastpbrl::replay::ReplayBuffer;
@@ -198,7 +199,7 @@ fn main() -> anyhow::Result<()> {
     let mut sink = 0.0f64;
     let mut kernel_rows: Vec<(String, f64)> = Vec::new();
     for (input_name, x) in [("dense_input", &x_dense), ("relu_input", &x_relu)] {
-        for kernel in ["sparse_skip", "dense"] {
+        for kernel in ["sparse_skip", "dense", "tiled"] {
             let name = format!("matvec_{kernel}_{input_name}");
             let r = bench.run(&name, || {
                 for _ in 0..1000 {
@@ -206,7 +207,10 @@ fn main() -> anyhow::Result<()> {
                         "sparse_skip" => {
                             matvec_sparse(&w, &b, x, &mut dst, ki, ko, Activation::Relu)
                         }
-                        _ => matvec_dense(&w, &b, x, &mut dst, ki, ko, Activation::Relu),
+                        "dense" => matvec_dense(&w, &b, x, &mut dst, ki, ko, Activation::Relu),
+                        // the register-tiled matmat at rows=1: what the
+                        // block path runs when a member owns one row
+                        _ => matmat_tiled(&w, &b, x, &mut dst, ki, ko, 1, Activation::Relu),
                     }
                     sink += dst[0] as f64;
                 }

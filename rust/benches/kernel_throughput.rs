@@ -1,0 +1,170 @@
+//! Kernel-layer throughput: reference (per-row matvec) vs register-tiled
+//! matmat on the paper-sized 256x256 layer at block rows = pop
+//! ∈ {1, 4, 16, 64}, and direct (sparsity-skipping) vs im2col conv on a
+//! MinAtar-sized frame (10x10x4, 3x3 kernel, 16 features) for both the
+//! sparse binary planes the envs emit and dense worst-case frames.
+//!
+//! The figure of merit is GFLOP/s per kernel variant (one fused
+//! multiply-add = 2 flops), which makes the autovectorization win
+//! directly visible: the tiled kernel should approach the machine's FMA
+//! peak while the reference row loop stays scalar-bound.
+//!
+//! No artifacts required. Results go to `results/kernel_throughput.csv`
+//! and `BENCH_kernel_throughput.json`.
+
+use fastpbrl::bench_support::harness::{gflops, report, Bench, BenchResult};
+use fastpbrl::nn::kernels::{
+    conv2d_im2col_relu, conv2d_valid_relu, matmat_reference, matmat_tiled,
+};
+use fastpbrl::nn::Activation;
+use fastpbrl::util::json::{arr, num, obj, s, Json};
+use fastpbrl::util::rng::Rng;
+
+const DIM: usize = 256; // paper-sized hidden layer
+const POPS: [usize; 4] = [1, 4, 16, 64];
+const MAT_REPS: usize = 200;
+const CONV_REPS: usize = 500;
+
+// MinAtar-sized conv problem (10x10 board, 4 planes, 3x3 HWIO filter).
+const FRAME: (usize, usize, usize) = (10, 10, 4);
+const K: usize = 3;
+const FEATS: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let bench = if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench { warmup_iters: 2, iters: 15, max_seconds: 20.0 }
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut sink = 0.0f64;
+
+    // ---- matmat: reference row loop vs register-tiled -------------------
+    let mut rng = Rng::new(11);
+    let mut w = vec![0.0f32; DIM * DIM];
+    let mut b = vec![0.0f32; DIM];
+    rng.fill_uniform(&mut w, -0.1, 0.1);
+    rng.fill_uniform(&mut b, -0.1, 0.1);
+    let mut mat_rows: Vec<Json> = Vec::new();
+    for &pop in &POPS {
+        // dense activations (the post-layernorm/tanh regime: no zeros)
+        let mut x = vec![0.0f32; pop * DIM];
+        rng.fill_uniform(&mut x, 0.001, 1.0);
+        let mut dst = vec![0.0f32; pop * DIM];
+        let flops = (2 * pop * DIM * DIM * MAT_REPS) as f64;
+        let mut variant_gflops: Vec<(&str, f64)> = Vec::new();
+        for kernel in ["reference", "tiled"] {
+            let name = format!("matmat_{kernel}_p{pop}");
+            let r = bench.run(&name, || {
+                for _ in 0..MAT_REPS {
+                    match kernel {
+                        "reference" => matmat_reference(
+                            &w, &b, &x, &mut dst, DIM, DIM, pop, Activation::Relu,
+                        ),
+                        _ => matmat_tiled(&w, &b, &x, &mut dst, DIM, DIM, pop, Activation::Relu),
+                    }
+                    sink += dst[0] as f64;
+                }
+            });
+            variant_gflops.push((kernel, gflops(flops, r.mean_ms)));
+            results.push(r);
+        }
+        let (rg, tg) = (variant_gflops[0].1, variant_gflops[1].1);
+        mat_rows.push(obj(vec![
+            ("pop", num(pop as f64)),
+            ("reference_gflops", num(rg)),
+            ("tiled_gflops", num(tg)),
+            ("speedup", num(if rg > 0.0 { tg / rg } else { 0.0 })),
+        ]));
+    }
+
+    // ---- conv: direct (sparsity skip) vs im2col + tiled matmat ----------
+    let (h, wd, c) = FRAME;
+    let (ho, wo) = (h - K + 1, wd - K + 1);
+    let fl = h * wd * c;
+    let mut cw = vec![0.0f32; K * K * c * FEATS];
+    let mut cb = vec![0.0f32; FEATS];
+    rng.fill_uniform(&mut cw, -0.3, 0.3);
+    rng.fill_uniform(&mut cb, -0.1, 0.1);
+    // sparse: MinAtar-like binary planes, ~85% zeros
+    let mut frame_sparse = vec![0.0f32; fl];
+    for v in frame_sparse.iter_mut() {
+        *v = (rng.below(7) == 0) as u8 as f32;
+    }
+    // dense: every lane live (the im2col kernel's home turf)
+    let mut frame_dense = vec![0.0f32; fl];
+    rng.fill_uniform(&mut frame_dense, 0.001, 1.0);
+    let mut out = vec![0.0f32; ho * wo * FEATS];
+    let mut scratch: Vec<f32> = Vec::new();
+    let conv_flops = (2 * ho * wo * K * K * c * FEATS * CONV_REPS) as f64;
+    let mut conv_rows: Vec<Json> = Vec::new();
+    for (input_name, frame) in [("sparse_frame", &frame_sparse), ("dense_frame", &frame_dense)] {
+        let mut variant_gflops: Vec<(&str, f64)> = Vec::new();
+        for kernel in ["direct", "im2col"] {
+            let name = format!("conv_{kernel}_{input_name}");
+            let r = bench.run(&name, || {
+                for _ in 0..CONV_REPS {
+                    match kernel {
+                        "direct" => {
+                            conv2d_valid_relu(&cw, &cb, frame, &mut out, K, K, c, FEATS, h, wd)
+                        }
+                        _ => conv2d_im2col_relu(
+                            &cw,
+                            &cb,
+                            frame,
+                            &mut out,
+                            &mut scratch,
+                            K,
+                            K,
+                            c,
+                            FEATS,
+                            h,
+                            wd,
+                        ),
+                    }
+                    sink += out[0] as f64;
+                }
+            });
+            variant_gflops.push((kernel, gflops(conv_flops, r.mean_ms)));
+            results.push(r);
+        }
+        let (dg, ig) = (variant_gflops[0].1, variant_gflops[1].1);
+        conv_rows.push(obj(vec![
+            ("input", s(input_name)),
+            ("direct_gflops", num(dg)),
+            ("im2col_gflops", num(ig)),
+            ("speedup", num(if dg > 0.0 { ig / dg } else { 0.0 })),
+        ]));
+    }
+
+    report("kernel_throughput", &results)?;
+
+    println!("\nmatmat GFLOP/s ({DIM}x{DIM}, rows = pop):");
+    println!("{:>5} {:>12} {:>12} {:>9}", "pop", "reference", "tiled", "speedup");
+    for row in &mat_rows {
+        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        println!(
+            "{:>5} {:>12.2} {:>12.2} {:>8.2}x",
+            g("pop"),
+            g("reference_gflops"),
+            g("tiled_gflops"),
+            g("speedup")
+        );
+    }
+    println!("(checksum {sink:.3})");
+
+    let json = obj(vec![
+        ("bench", s("kernel_throughput")),
+        ("dim", num(DIM as f64)),
+        (
+            "frame",
+            arr(vec![num(h as f64), num(wd as f64), num(c as f64)]),
+        ),
+        ("features", num(FEATS as f64)),
+        ("matmat", arr(mat_rows)),
+        ("conv", arr(conv_rows)),
+    ]);
+    std::fs::write("BENCH_kernel_throughput.json", format!("{json}\n"))?;
+    println!("-> BENCH_kernel_throughput.json");
+    Ok(())
+}

@@ -15,6 +15,10 @@
 //! vs one blocked conv forward, one batched env step, and u8-quantized
 //! `push_batch` runs.
 //!
+//! Also A/Bs the conv kernels (sparsity-skipping direct loop vs im2col +
+//! tiled matmat) on real env frames (sparse binary planes) and dense
+//! worst-case frames — the two regimes `conv_block_choice` splits on.
+//!
 //! No artifacts required. Results go to
 //! `results/pixel_actor_throughput.csv` and
 //! `BENCH_pixel_actor_throughput.json`.
@@ -242,6 +246,59 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // ---- conv kernel A/B: direct (sparsity skip) vs im2col --------------
+    let mut rng = Rng::new(9);
+    let member = random_members(&mut rng, 1, c, &head_dims).remove(0);
+    // real env frames: sparse binary MinAtar planes
+    let mut env = make_pixel_env(ENV)?;
+    let mut frame_env = vec![0.0f32; frame_len];
+    env.reset(&mut rng, &mut frame_env);
+    for _ in 0..20 {
+        let action = rng.below(n_actions);
+        let (_rew, done) = env.step(action, &mut rng, &mut frame_env);
+        if done {
+            env.reset(&mut rng, &mut frame_env);
+        }
+    }
+    // dense frames: every lane live (the im2col regime)
+    let mut frame_dense = vec![0.0f32; frame_len];
+    rng.fill_uniform(&mut frame_dense, 0.001, 1.0);
+    let mut conv_out = vec![0.0f32; flat];
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut sink = 0.0f64;
+    let mut kernel_rows: Vec<(String, f64)> = Vec::new();
+    for (input_name, frame) in [("env_frame", &frame_env), ("dense_frame", &frame_dense)] {
+        for kernel in ["direct", "im2col"] {
+            let name = format!("conv_{kernel}_{input_name}");
+            let r = bench.run(&name, || {
+                for _ in 0..500 {
+                    match kernel {
+                        "direct" => fastpbrl::nn::kernels::conv2d_valid_relu(
+                            &member.cw, &member.cb, frame, &mut conv_out, K, K, c, FEATURES, h, w,
+                        ),
+                        _ => fastpbrl::nn::kernels::conv2d_im2col_relu(
+                            &member.cw,
+                            &member.cb,
+                            frame,
+                            &mut conv_out,
+                            &mut scratch,
+                            K,
+                            K,
+                            c,
+                            FEATURES,
+                            h,
+                            w,
+                        ),
+                    }
+                    sink += conv_out[0] as f64;
+                }
+            });
+            kernel_rows.push((name.clone(), r.mean_ms));
+            results.push(r);
+        }
+    }
+    println!("(conv checksum {sink:.3})");
+
     report("pixel_actor_throughput", &results)?;
 
     println!("\nPixel actor steps/sec (batched vs scalar):");
@@ -264,6 +321,13 @@ fn main() -> anyhow::Result<()> {
         ("fc", num(FC as f64)),
         ("steps_per_iter", num(STEPS_PER_ITER as f64)),
         ("results", arr(pop_rows)),
+        (
+            "conv_kernel_ms",
+            obj(kernel_rows
+                .iter()
+                .map(|(n, ms)| (n.as_str(), num(*ms)))
+                .collect()),
+        ),
     ]);
     std::fs::write("BENCH_pixel_actor_throughput.json", format!("{json}\n"))?;
     println!("-> BENCH_pixel_actor_throughput.json");

@@ -78,6 +78,17 @@ impl Bench {
     }
 }
 
+/// Arithmetic throughput in GFLOP/s given the flop count of ONE measured
+/// iteration and its mean wall time — the kernel-bench figure of merit
+/// (`flops / (ms * 1e6)` since 1 ms = 1e6 ns and 1 GFLOP = 1e9 flops).
+pub fn gflops(flops_per_iter: f64, mean_ms: f64) -> f64 {
+    if mean_ms <= 0.0 {
+        0.0
+    } else {
+        flops_per_iter / (mean_ms * 1e6)
+    }
+}
+
 /// Write results to stdout (pretty) and `results/<file>.csv`.
 pub fn report(file: &str, results: &[BenchResult]) -> anyhow::Result<()> {
     std::fs::create_dir_all("results")?;
@@ -107,6 +118,13 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.mean_ms >= 1.5, "mean {}", r.mean_ms);
         assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p90_ms);
+    }
+
+    #[test]
+    fn gflops_converts_flops_and_ms() {
+        // 2e9 flops in 1000 ms = 2 GFLOP/s
+        assert!((gflops(2e9, 1000.0) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(1e9, 0.0), 0.0, "degenerate timing must not divide by zero");
     }
 
     #[test]

@@ -65,6 +65,7 @@ use crate::envs::vec_env::{EpisodeEnd, VecEnv};
 use crate::manifest::Artifact;
 use crate::nn::from_state::{conv_field_dims, pop_convnet_from_state, pop_mlp_from_state};
 use crate::nn::mlp::Activation;
+use crate::util::log::info;
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
 
@@ -832,6 +833,7 @@ fn actor_loop(
     let mut host = Vec::new();
     let mut version = view.fetch_if_newer(0, &mut host);
     let mut policy = pop_mlp_from_state(artifact, &host, "policy", ha, fa).unwrap();
+    policy.reserve_scratch(n);
 
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
@@ -943,7 +945,6 @@ fn pixel_actor_loop(
     throttle: Throttle,
 ) {
     let ActorScope { thread, generation, agents, tx, recycle, stop, heartbeats, sink } = scope;
-    let _ = generation; // used by the fault-inject hook only
     let agents = &agents[..];
     let mut rng = Rng::new(cfg.seed);
     let n = agents.len();
@@ -953,6 +954,17 @@ fn pixel_actor_loop(
     let mut host = Vec::new();
     let mut version = view.fetch_if_newer(0, &mut host);
     let mut qnet = pop_convnet_from_state(artifact, &host, "q", frame).unwrap();
+    qnet.reserve_scratch(n);
+    if generation == 0 && thread == 0 {
+        // Scratch hygiene: the conv/im2col buffers grow with the block
+        // size; surface the steady-state footprint once at spawn so
+        // large-pop memory spikes are visible.
+        info(&format!(
+            "pixel actor scratch: {} bytes/thread ({} rows)",
+            qnet.scratch_bytes(),
+            n
+        ));
+    }
 
     let n_actions = qnet.out_dim();
     let mut q = vec![0.0f32; n * n_actions];

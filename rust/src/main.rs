@@ -163,6 +163,12 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
             file.get_u64("train.stall_timeout_ms", cfg.stall_timeout_ms)?;
         cfg.health_norm_limit =
             file.get_f64("train.health_norm_limit", cfg.health_norm_limit)?;
+        // kernel-selection overrides for A/B runs (auto | reference |
+        // tiled, auto | direct | im2col); absent keys keep Auto dispatch
+        fastpbrl::nn::kernels::configure(
+            file.get("kernels.matmat"),
+            file.get("kernels.conv"),
+        )?;
     }
     Ok(cfg)
 }

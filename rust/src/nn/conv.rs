@@ -3,10 +3,11 @@
 //! then an MLP head.
 //!
 //! [`ConvNet`] is the P=1 facade over the population-batched
-//! [`PopConvNet`](crate::nn::pop_conv::PopConvNet) — the same conv kernel
-//! and packed head run both paths, so scalar and block inference cannot
-//! drift apart.
+//! [`PopConvNet`](crate::nn::pop_conv::PopConvNet) — the same kernel-layer
+//! conv ([`crate::nn::kernels`]) and packed head run both paths, so
+//! scalar and block inference cannot drift apart.
 
+use crate::nn::kernels::ConvKernel;
 use crate::nn::mlp::Mlp;
 use crate::nn::pop_conv::PopConvNet;
 
@@ -40,6 +41,11 @@ impl ConvNet {
 
     pub fn set_conv(&mut self, w: &[f32], b: &[f32]) {
         self.inner.set_member_conv(0, w, b);
+    }
+
+    /// Pin the conv kernel (`None` follows the process-wide selection).
+    pub fn set_kernel(&mut self, kernel: Option<ConvKernel>) {
+        self.inner.set_kernel(kernel);
     }
 
     /// Forward one frame `[H, W, C]` (flattened HWC) -> q-values.

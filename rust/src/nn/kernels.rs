@@ -1,0 +1,785 @@
+//! The kernel layer: tiled, SIMD-friendly compute kernels for the native
+//! actor hot path.
+//!
+//! Every forward pass in `nn` bottoms out here. The layer owns
+//!
+//! * the **matvec** kernels ([`matvec_dense`], [`matvec_sparse`]) and the
+//!   zero-counting dispatcher [`matvec`],
+//! * the **mat-mat** kernels — the scalar [`matmat_reference`] row loop
+//!   and the register-tiled [`matmat_tiled`] — plus the block dispatcher
+//!   [`matmat`] / [`matmat_with`],
+//! * the **conv** kernels — the direct sparsity-skipping
+//!   [`conv2d_valid_relu`] and the [`im2col_gather`] +
+//!   [`conv2d_im2col_relu`] path that reduces a VALID conv to ONE tiled
+//!   mat-mat — plus the per-block chooser [`conv_block_choice`],
+//! * the process-wide kernel selection ([`set_mat_kernel`] /
+//!   [`set_conv_kernel`], config keys `kernels.matmat` / `kernels.conv`
+//!   via [`configure`]) used for A/Bs; nets also carry a per-instance
+//!   override that beats the global.
+//!
+//! # Tile shape
+//!
+//! [`matmat_tiled`] processes fixed [`TILE_ROWS`]`x`[`TILE_LANES`]
+//! (4 rows x 8 output lanes) register tiles: 32 local accumulators in a
+//! `[[f32; 8]; 4]` array, with the 8-lane inner loop over a stack copy of
+//! the weight row so rustc unrolls the FMA chain into one 256-bit
+//! AVX2/NEON vector op per row per k. Remainder rows (<4) go through the
+//! same const-generic micro-kernel at RN ∈ {1,2,3}; remainder lanes (<8)
+//! through a masked edge kernel, so no dimension restriction exists —
+//! parity with the reference kernel is pinned for every dim in
+//! `rust/tests/proptests.rs`.
+//!
+//! # Layout contract
+//!
+//! Weights are `[in, out]` row-major (the jax convention the manifest
+//! serializes), so for a fixed input index `k` the `out` lanes
+//! `w[k*out + o..]` are contiguous — exactly what the 8-lane tile loads.
+//! Conv filters are `[kh, kw, in_ch, f]` row-major (HWIO), which *is*
+//! `[kh*kw*in_ch, f]` row-major: the im2col patch matrix
+//! `[ho*wo, kh*kw*in_ch]` multiplies the filter with no reshuffle.
+//!
+//! # Dispatch heuristics
+//!
+//! * [`matvec`] counts zero input lanes and routes to the skip kernel
+//!   only at ≥ [`MATVEC_SPARSE_THRESHOLD`] (25%) zeros — the old any-zero
+//!   prescan sent a 1-zero-in-256 input to the slow path.
+//! * [`matmat`] in `Auto` routes blocks with ≥ [`MATMAT_SPARSE_THRESHOLD`]
+//!   (75%) zeros to the per-row skip kernel (scalar skipping beats 8-wide
+//!   dense FMA only when most lanes are dead); everything else is tiled.
+//! * [`conv_block_choice`] in `Auto` picks the direct kernel for small
+//!   outputs (`f <` [`TILE_LANES`] or `ho*wo <` [`TILE_ROWS`], where the
+//!   tile never fills) or sparse blocks (≥ [`CONV_SPARSE_THRESHOLD`]
+//!   zeros — MinAtar's mostly-empty binary planes), and im2col + tiled
+//!   mat-mat for dense frames.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::nn::mlp::Activation;
+
+/// Rows per register tile (the `R` in the RxT micro-kernel).
+pub const TILE_ROWS: usize = 4;
+/// Output lanes per register tile (one 256-bit f32 vector).
+pub const TILE_LANES: usize = 8;
+
+/// [`matvec`] routes to the zero-skip kernel at this zero fraction. The
+/// skip kernel trades one branch per lane for the skipped row: scalar vs
+/// scalar, the trade measures out to roughly a quarter of lanes dead.
+pub const MATVEC_SPARSE_THRESHOLD: f32 = 0.25;
+/// [`matmat`]'s `Auto` dispatch abandons the tiled kernel for the per-row
+/// skip kernel at this zero fraction: scalar skipping must beat 8-wide
+/// dense FMA, which needs most lanes dead, not just a quarter.
+pub const MATMAT_SPARSE_THRESHOLD: f32 = 0.75;
+/// [`conv_block_choice`]'s `Auto` keeps the direct (sparsity-skipping)
+/// conv kernel at this frame-block zero fraction; MinAtar planes usually
+/// sit well above it.
+pub const CONV_SPARSE_THRESHOLD: f32 = 0.75;
+
+// ---------------------------------------------------------------------------
+// kernel selection
+// ---------------------------------------------------------------------------
+
+/// Mat-mat kernel selection (process-wide default; nets may override
+/// per instance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatKernel {
+    /// Sparsity-counting dispatch: tiled for dense blocks, per-row skip
+    /// kernel for mostly-zero blocks.
+    Auto,
+    /// The pre-tiling row loop over the adaptive [`matvec`].
+    Reference,
+    /// The register-tiled kernel, unconditionally.
+    Tiled,
+}
+
+impl MatKernel {
+    fn from_u8(v: u8) -> MatKernel {
+        match v {
+            1 => MatKernel::Reference,
+            2 => MatKernel::Tiled,
+            _ => MatKernel::Auto,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            MatKernel::Auto => 0,
+            MatKernel::Reference => 1,
+            MatKernel::Tiled => 2,
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<MatKernel> {
+        match name {
+            "auto" => Ok(MatKernel::Auto),
+            "reference" | "ref" => Ok(MatKernel::Reference),
+            "tiled" => Ok(MatKernel::Tiled),
+            _ => anyhow::bail!("unknown matmat kernel {name:?} (auto | reference | tiled)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MatKernel::Auto => "auto",
+            MatKernel::Reference => "reference",
+            MatKernel::Tiled => "tiled",
+        }
+    }
+}
+
+/// Conv kernel selection (process-wide default; nets may override
+/// per instance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKernel {
+    /// Sparsity x size heuristic per frame block ([`conv_block_choice`]).
+    Auto,
+    /// The direct 6-loop kernel with zero-pixel skipping.
+    Direct,
+    /// Patch gather + one tiled mat-mat per frame.
+    Im2col,
+}
+
+impl ConvKernel {
+    fn from_u8(v: u8) -> ConvKernel {
+        match v {
+            1 => ConvKernel::Direct,
+            2 => ConvKernel::Im2col,
+            _ => ConvKernel::Auto,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            ConvKernel::Auto => 0,
+            ConvKernel::Direct => 1,
+            ConvKernel::Im2col => 2,
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<ConvKernel> {
+        match name {
+            "auto" => Ok(ConvKernel::Auto),
+            "direct" => Ok(ConvKernel::Direct),
+            "im2col" => Ok(ConvKernel::Im2col),
+            _ => anyhow::bail!("unknown conv kernel {name:?} (auto | direct | im2col)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvKernel::Auto => "auto",
+            ConvKernel::Direct => "direct",
+            ConvKernel::Im2col => "im2col",
+        }
+    }
+}
+
+static MAT_KERNEL: AtomicU8 = AtomicU8::new(0);
+static CONV_KERNEL: AtomicU8 = AtomicU8::new(0);
+
+/// Process-wide mat-mat kernel selection (read on every forward; Relaxed
+/// atomics, negligible cost).
+pub fn mat_kernel() -> MatKernel {
+    MatKernel::from_u8(MAT_KERNEL.load(Ordering::Relaxed))
+}
+
+pub fn set_mat_kernel(k: MatKernel) {
+    MAT_KERNEL.store(k.to_u8(), Ordering::Relaxed);
+}
+
+/// Process-wide conv kernel selection.
+pub fn conv_kernel() -> ConvKernel {
+    ConvKernel::from_u8(CONV_KERNEL.load(Ordering::Relaxed))
+}
+
+pub fn set_conv_kernel(k: ConvKernel) {
+    CONV_KERNEL.store(k.to_u8(), Ordering::Relaxed);
+}
+
+/// Apply config-file kernel overrides (the `kernels.matmat` /
+/// `kernels.conv` keys) for A/B runs. `None` leaves a selection as is.
+pub fn configure(matmat: Option<&str>, conv: Option<&str>) -> anyhow::Result<()> {
+    if let Some(name) = matmat {
+        set_mat_kernel(MatKernel::from_name(name)?);
+    }
+    if let Some(name) = conv {
+        set_conv_kernel(ConvKernel::from_name(name)?);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sparsity accounting
+// ---------------------------------------------------------------------------
+
+/// Number of exactly-zero lanes in `x`.
+pub fn count_zeros(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v == 0.0).count()
+}
+
+/// Fraction of exactly-zero lanes in `x` (0.0 for an empty slice).
+pub fn zero_fraction(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        0.0
+    } else {
+        count_zeros(x) as f32 / x.len() as f32
+    }
+}
+
+/// The [`matvec`] routing decision: skip kernel iff at least
+/// [`MATVEC_SPARSE_THRESHOLD`] of the first `in_dim` lanes are zero.
+/// (The old `any(|v| v == 0.0)` prescan routed a 1-zero-in-256 input to
+/// the slow skip kernel; counting fixes that.)
+pub fn route_matvec_sparse(x: &[f32], in_dim: usize) -> bool {
+    let n = in_dim.min(x.len());
+    if n == 0 {
+        return false;
+    }
+    count_zeros(&x[..n]) as f32 >= MATVEC_SPARSE_THRESHOLD * n as f32
+}
+
+// ---------------------------------------------------------------------------
+// matvec kernels
+// ---------------------------------------------------------------------------
+
+/// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out],
+/// skipping all-zero input lanes. Iterating rows of `w` keeps the access
+/// pattern sequential (cache-friendly for the [in, out] layout jax uses);
+/// the zero skip wins when `x` is a post-relu hidden activation with a
+/// substantial fraction of dead lanes.
+#[inline]
+pub fn matvec_sparse(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                     out_dim: usize, act: Activation) {
+    dst.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate().take(in_dim) {
+        if xi == 0.0 {
+            continue; // relu sparsity: skip dead rows
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (d, &wv) in dst.iter_mut().zip(row) {
+            *d += xi * wv;
+        }
+    }
+    for d in dst.iter_mut() {
+        *d = act.apply(*d);
+    }
+}
+
+/// Same contract as [`matvec_sparse`] but branch-free: for fully-dense
+/// inputs (normalized observations never hit exactly 0.0) the per-element
+/// zero check is a mispredicted branch in the innermost loop for nothing.
+#[inline]
+pub fn matvec_dense(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                    out_dim: usize, act: Activation) {
+    dst.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate().take(in_dim) {
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (d, &wv) in dst.iter_mut().zip(row) {
+            *d += xi * wv;
+        }
+    }
+    for d in dst.iter_mut() {
+        *d = act.apply(*d);
+    }
+}
+
+/// Adaptive matvec: one O(in) zero count routes mostly-dense inputs to
+/// the branch-free kernel and inputs past [`MATVEC_SPARSE_THRESHOLD`] to
+/// the sparsity-skip kernel (the count is amortized by the O(in*out)
+/// inner loop). See [`route_matvec_sparse`].
+#[inline]
+pub fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+              out_dim: usize, act: Activation) {
+    if route_matvec_sparse(x, in_dim) {
+        matvec_sparse(w, b, x, dst, in_dim, out_dim, act);
+    } else {
+        matvec_dense(w, b, x, dst, in_dim, out_dim, act);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mat-mat kernels
+// ---------------------------------------------------------------------------
+
+/// The pre-tiling reference mat-mat: forward `rows` inputs `x: [rows, in]`
+/// through ONE weight matrix into `dst: [rows, out]` as a row loop over
+/// the adaptive [`matvec`]. Kept as the parity oracle and the scalar
+/// fallback for very sparse blocks.
+#[inline]
+pub fn matmat_reference(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                        out_dim: usize, rows: usize, act: Activation) {
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(dst.len(), rows * out_dim);
+    for r in 0..rows {
+        matvec(
+            w,
+            b,
+            &x[r * in_dim..(r + 1) * in_dim],
+            &mut dst[r * out_dim..(r + 1) * out_dim],
+            in_dim,
+            out_dim,
+            act,
+        );
+    }
+}
+
+/// One `RN x TILE_LANES` register tile band: all full 8-lane tiles of
+/// rows `r0..r0+RN`, then the lane remainder. `RN` is const so the row
+/// loop unrolls; the lane loop over a stack copy of the weight row
+/// autovectorizes to one FMA per row per k.
+#[inline(always)]
+fn tile_row_band<const RN: usize>(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32],
+                                  in_dim: usize, out_dim: usize, r0: usize) {
+    let mut o = 0;
+    while o + TILE_LANES <= out_dim {
+        let mut acc = [[0.0f32; TILE_LANES]; RN];
+        for k in 0..in_dim {
+            let wrow: [f32; TILE_LANES] =
+                w[k * out_dim + o..k * out_dim + o + TILE_LANES].try_into().unwrap();
+            for (ri, lanes) in acc.iter_mut().enumerate() {
+                let xv = x[(r0 + ri) * in_dim + k];
+                for (a, &wv) in lanes.iter_mut().zip(&wrow) {
+                    *a += xv * wv;
+                }
+            }
+        }
+        for (ri, lanes) in acc.iter().enumerate() {
+            let dr = &mut dst[(r0 + ri) * out_dim + o..(r0 + ri) * out_dim + o + TILE_LANES];
+            for ((d, &a), &bv) in dr.iter_mut().zip(lanes).zip(&b[o..o + TILE_LANES]) {
+                *d = a + bv;
+            }
+        }
+        o += TILE_LANES;
+    }
+    if o < out_dim {
+        tile_edge::<RN>(w, b, x, dst, in_dim, out_dim, r0, o);
+    }
+}
+
+/// Lane-remainder tile: the trailing `out_dim - o0 < TILE_LANES` output
+/// columns of rows `r0..r0+RN`. Same accumulator array, only the live
+/// prefix of each lane row is touched.
+#[inline(always)]
+fn tile_edge<const RN: usize>(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32],
+                              in_dim: usize, out_dim: usize, r0: usize, o0: usize) {
+    let on = out_dim - o0;
+    let mut acc = [[0.0f32; TILE_LANES]; RN];
+    for k in 0..in_dim {
+        let wrow = &w[k * out_dim + o0..k * out_dim + o0 + on];
+        for (ri, lanes) in acc.iter_mut().enumerate() {
+            let xv = x[(r0 + ri) * in_dim + k];
+            for (a, &wv) in lanes[..on].iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+    for (ri, lanes) in acc.iter().enumerate() {
+        let dr = &mut dst[(r0 + ri) * out_dim + o0..(r0 + ri) * out_dim + o0 + on];
+        for ((d, &a), &bv) in dr.iter_mut().zip(&lanes[..on]).zip(&b[o0..o0 + on]) {
+            *d = a + bv;
+        }
+    }
+}
+
+/// Register-tiled mat-mat: `dst[r, o] = act(x[r, :] @ w[:, o] + b[o])`
+/// over [`TILE_ROWS`]`x`[`TILE_LANES`] output tiles with unrolled local
+/// accumulators (see the module docs for the tile shape and layout
+/// contract). Handles every `rows`/`out_dim`, including non-tile
+/// multiples, via const-generic row remainders and a masked lane edge.
+pub fn matmat_tiled(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+                    out_dim: usize, rows: usize, act: Activation) {
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(b.len(), out_dim);
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(dst.len(), rows * out_dim);
+    let mut r = 0;
+    while r + TILE_ROWS <= rows {
+        tile_row_band::<TILE_ROWS>(w, b, x, dst, in_dim, out_dim, r);
+        r += TILE_ROWS;
+    }
+    match rows - r {
+        1 => tile_row_band::<1>(w, b, x, dst, in_dim, out_dim, r),
+        2 => tile_row_band::<2>(w, b, x, dst, in_dim, out_dim, r),
+        3 => tile_row_band::<3>(w, b, x, dst, in_dim, out_dim, r),
+        _ => {}
+    }
+    if act != Activation::None {
+        for d in dst.iter_mut() {
+            *d = act.apply(*d);
+        }
+    }
+}
+
+/// Mat-mat with an explicit kernel choice (per-instance overrides and
+/// benches go through here). `Auto` counts the block's zero lanes once:
+/// past [`MATMAT_SPARSE_THRESHOLD`] the scalar skip kernel wins over
+/// dense 8-wide FMA, anything denser is tiled.
+#[inline]
+pub fn matmat_with(kernel: MatKernel, w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32],
+                   in_dim: usize, out_dim: usize, rows: usize, act: Activation) {
+    match kernel {
+        MatKernel::Reference => matmat_reference(w, b, x, dst, in_dim, out_dim, rows, act),
+        MatKernel::Tiled => matmat_tiled(w, b, x, dst, in_dim, out_dim, rows, act),
+        MatKernel::Auto => {
+            if zero_fraction(&x[..rows * in_dim]) >= MATMAT_SPARSE_THRESHOLD {
+                for r in 0..rows {
+                    matvec_sparse(
+                        w,
+                        b,
+                        &x[r * in_dim..(r + 1) * in_dim],
+                        &mut dst[r * out_dim..(r + 1) * out_dim],
+                        in_dim,
+                        out_dim,
+                        act,
+                    );
+                }
+            } else {
+                matmat_tiled(w, b, x, dst, in_dim, out_dim, rows, act);
+            }
+        }
+    }
+}
+
+/// Row-blocked mat-mat behind the process-wide kernel selection — the
+/// default dispatch of
+/// [`PopMlp::forward_block`](crate::nn::pop_mlp::PopMlp::forward_block)
+/// per member run.
+#[inline]
+pub fn matmat(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
+              out_dim: usize, rows: usize, act: Activation) {
+    matmat_with(mat_kernel(), w, b, x, dst, in_dim, out_dim, rows, act);
+}
+
+// ---------------------------------------------------------------------------
+// conv kernels
+// ---------------------------------------------------------------------------
+
+/// VALID conv + relu of ONE HWC frame against ONE HWIO filter:
+/// `frame: [h, wd, in_ch]` flat, `w: [kh, kw, in_ch, f]` flat,
+/// `out: [ho, wo, f]` flat. Zero input pixels are skipped (MinAtar-style
+/// frames are sparse binary planes, so most lanes are dead) — this is
+/// the direct kernel the sparsity heuristic keeps for mostly-empty
+/// frames.
+pub fn conv2d_valid_relu(
+    w: &[f32],
+    b: &[f32],
+    frame: &[f32],
+    out: &mut [f32],
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    f: usize,
+    h: usize,
+    wd: usize,
+) {
+    let (ho, wo) = (h - kh + 1, wd - kw + 1);
+    debug_assert_eq!(frame.len(), h * wd * in_ch);
+    debug_assert_eq!(out.len(), ho * wo * f);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let dst = &mut out[(oy * wo + ox) * f..(oy * wo + ox + 1) * f];
+            dst.copy_from_slice(b);
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let iy = oy + ky;
+                    let ix = ox + kx;
+                    let px = &frame[(iy * wd + ix) * in_ch..];
+                    for c in 0..in_ch {
+                        let xv = px[c];
+                        if xv == 0.0 {
+                            continue; // sparse binary frames: skip zeros
+                        }
+                        let wrow = &w[((ky * kw + kx) * in_ch + c) * f..];
+                        for (d, &wv) in dst.iter_mut().zip(&wrow[..f]) {
+                            *d += xv * wv;
+                        }
+                    }
+                }
+            }
+            for d in dst.iter_mut() {
+                *d = d.max(0.0);
+            }
+        }
+    }
+}
+
+/// Gather ONE HWC frame's `[ho*wo, kh*kw*in_ch]` im2col patch matrix
+/// into `scratch`. Each patch row is assembled from `kh` contiguous
+/// `kw*in_ch` frame runs (HWC keeps a kernel row's pixels adjacent), so
+/// the gather is `kh` memcpys per output pixel, not a scalar scatter.
+pub fn im2col_gather(frame: &[f32], scratch: &mut [f32], kh: usize, kw: usize, in_ch: usize,
+                     h: usize, wd: usize) {
+    let (ho, wo) = (h - kh + 1, wd - kw + 1);
+    let krow = kw * in_ch;
+    let patch = kh * krow;
+    debug_assert_eq!(frame.len(), h * wd * in_ch);
+    debug_assert_eq!(scratch.len(), ho * wo * patch);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let dst = &mut scratch[(oy * wo + ox) * patch..(oy * wo + ox + 1) * patch];
+            for ky in 0..kh {
+                let src = &frame[((oy + ky) * wd + ox) * in_ch..][..krow];
+                dst[ky * krow..(ky + 1) * krow].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// VALID conv + relu via im2col: gather the frame's patch matrix into the
+/// reusable `scratch`, then run ONE register-tiled mat-mat against the
+/// filter — `[kh, kw, in_ch, f]` row-major IS the `[kh*kw*in_ch, f]`
+/// weight matrix, so no filter reshuffle happens. Same contract as
+/// [`conv2d_valid_relu`].
+pub fn conv2d_im2col_relu(
+    w: &[f32],
+    b: &[f32],
+    frame: &[f32],
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    f: usize,
+    h: usize,
+    wd: usize,
+) {
+    let (ho, wo) = (h - kh + 1, wd - kw + 1);
+    let patch = kh * kw * in_ch;
+    debug_assert_eq!(frame.len(), h * wd * in_ch);
+    debug_assert_eq!(out.len(), ho * wo * f);
+    scratch.resize(ho * wo * patch, 0.0);
+    im2col_gather(frame, scratch, kh, kw, in_ch, h, wd);
+    matmat_tiled(w, b, scratch, out, patch, f, ho * wo, Activation::Relu);
+}
+
+/// Resolve a conv kernel request for one `[n, H*W*C]` frame block.
+/// `Direct`/`Im2col` pass through; `Auto` applies the sparsity x size
+/// heuristic: direct when the tile cannot fill (`f <` [`TILE_LANES`] or
+/// `out_rows <` [`TILE_ROWS`]) or when the block is mostly zeros
+/// (≥ [`CONV_SPARSE_THRESHOLD`]), im2col otherwise.
+pub fn conv_block_choice(requested: ConvKernel, frames: &[f32], out_rows: usize,
+                         f: usize) -> ConvKernel {
+    match requested {
+        ConvKernel::Auto => {
+            if f < TILE_LANES
+                || out_rows < TILE_ROWS
+                || zero_fraction(frames) >= CONV_SPARSE_THRESHOLD
+            {
+                ConvKernel::Direct
+            } else {
+                ConvKernel::Im2col
+            }
+        }
+        k => k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * w.abs().max(1.0),
+                "{ctx}: lane {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    /// The satellite routing fix, pinned at the boundary: a single zero
+    /// in a 256-lane input must stay on the dense kernel; the skip
+    /// kernel engages only at >= 25% zeros.
+    #[test]
+    fn matvec_routing_boundary() {
+        let mut dense = vec![1.0f32; 256];
+        dense[17] = 0.0; // the old any-zero prescan sent this to the slow path
+        assert!(!route_matvec_sparse(&dense, 256));
+
+        let mut x = vec![1.0f32; 64];
+        for v in x.iter_mut().take(15) {
+            *v = 0.0;
+        }
+        assert!(!route_matvec_sparse(&x, 64), "15/64 = 23.4% must stay dense");
+        x[15] = 0.0;
+        assert!(route_matvec_sparse(&x, 64), "16/64 = 25% must route sparse");
+
+        assert!(!route_matvec_sparse(&[1.0, 2.0, 3.0], 3));
+        assert!(route_matvec_sparse(&[0.0; 8], 8));
+        assert!(!route_matvec_sparse(&[], 0));
+    }
+
+    #[test]
+    fn zero_accounting() {
+        assert_eq!(count_zeros(&[0.0, 1.0, 0.0, -0.0]), 3); // -0.0 == 0.0
+        assert_eq!(zero_fraction(&[]), 0.0);
+        assert!((zero_fraction(&[0.0, 1.0]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiled_matches_reference_hand_case() {
+        // 2 inputs, 3 outputs, 2 rows: small enough to hand-check and
+        // exercises both remainder paths (rows < 4, lanes < 8).
+        let w = vec![1.0, 0.0, -1.0, 0.0, 2.0, 1.0]; // [2, 3]
+        let b = vec![0.0, -1.0, 0.5];
+        let x = vec![1.0, 2.0, -1.0, 0.0];
+        let mut want = vec![0.0f32; 6];
+        let mut got = vec![0.0f32; 6];
+        matmat_reference(&w, &b, &x, &mut want, 2, 3, 2, Activation::Relu);
+        matmat_tiled(&w, &b, &x, &mut got, 2, 3, 2, Activation::Relu);
+        assert_close(&got, &want, 1e-6, "hand case");
+        // row 0: [1*1+2*0, 1*0+2*2-1, -1+2+0.5] = [1, 3, 1.5]
+        assert_eq!(&got[..3], &[1.0, 3.0, 1.5]);
+    }
+
+    #[test]
+    fn tiled_matches_reference_tile_multiples_and_edges() {
+        let mut rng = Rng::new(41);
+        // dims straddling the 4x8 tile: exact multiples, remainders, tiny
+        for &(i, o, rows) in &[
+            (8usize, 8usize, 4usize),
+            (16, 8, 8),
+            (5, 8, 4),
+            (8, 11, 5),
+            (1, 1, 1),
+            (3, 7, 2),
+            (67, 33, 13),
+            (256, 256, 4),
+        ] {
+            let mut w = vec![0.0f32; i * o];
+            let mut b = vec![0.0f32; o];
+            let mut x = vec![0.0f32; rows * i];
+            rng.fill_normal(&mut w, 0.5);
+            rng.fill_normal(&mut b, 0.5);
+            rng.fill_normal(&mut x, 1.0);
+            for act in [Activation::None, Activation::Relu, Activation::Tanh] {
+                let mut want = vec![0.0f32; rows * o];
+                let mut got = vec![0.0f32; rows * o];
+                matmat_reference(&w, &b, &x, &mut want, i, o, rows, act);
+                matmat_tiled(&w, &b, &x, &mut got, i, o, rows, act);
+                assert_close(&got, &want, 1e-5, &format!("i{i} o{o} rows{rows} {act:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_with_auto_routes_sparse_blocks_to_skip_kernel() {
+        let mut rng = Rng::new(42);
+        let (i, o, rows) = (32usize, 16usize, 6usize);
+        let mut w = vec![0.0f32; i * o];
+        let mut b = vec![0.0f32; o];
+        rng.fill_normal(&mut w, 0.5);
+        rng.fill_normal(&mut b, 0.5);
+        // 90% zeros: Auto must still be parity with the dense kernels
+        let mut x = vec![0.0f32; rows * i];
+        for v in x.iter_mut() {
+            if rng.below(10) == 0 {
+                *v = rng.normal() as f32;
+            }
+        }
+        let mut want = vec![0.0f32; rows * o];
+        let mut got = vec![0.0f32; rows * o];
+        matmat_reference(&w, &b, &x, &mut want, i, o, rows, Activation::Relu);
+        matmat_with(MatKernel::Auto, &w, &b, &x, &mut got, i, o, rows, Activation::Relu);
+        assert_close(&got, &want, 1e-5, "sparse auto");
+    }
+
+    #[test]
+    fn im2col_gather_lays_out_patches() {
+        // 3x3 single-channel frame, 2x2 kernel: 4 patches of 4.
+        #[rustfmt::skip]
+        let frame = vec![
+            1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0,
+            7.0, 8.0, 9.0,
+        ];
+        let mut col = vec![0.0f32; 4 * 4];
+        im2col_gather(&frame, &mut col, 2, 2, 1, 3, 3);
+        assert_eq!(&col[0..4], &[1.0, 2.0, 4.0, 5.0]); // patch (0,0)
+        assert_eq!(&col[4..8], &[2.0, 3.0, 5.0, 6.0]); // patch (0,1)
+        assert_eq!(&col[8..12], &[4.0, 5.0, 7.0, 8.0]); // patch (1,0)
+        assert_eq!(&col[12..16], &[5.0, 6.0, 8.0, 9.0]); // patch (1,1)
+    }
+
+    #[test]
+    fn im2col_conv_matches_direct() {
+        let mut rng = Rng::new(43);
+        for &(h, wd, c, k, f) in &[
+            (10usize, 10usize, 4usize, 3usize, 16usize),
+            (6, 5, 2, 3, 4),
+            (5, 5, 1, 2, 9),
+            (4, 4, 3, 1, 8),
+        ] {
+            let mut w = vec![0.0f32; k * k * c * f];
+            let mut b = vec![0.0f32; f];
+            rng.fill_normal(&mut w, 0.4);
+            rng.fill_normal(&mut b, 0.2);
+            // half binary-sparse, half dense lanes
+            let mut frame = vec![0.0f32; h * wd * c];
+            for (i, v) in frame.iter_mut().enumerate() {
+                *v = if i % 2 == 0 {
+                    (rng.below(4) == 0) as u8 as f32
+                } else {
+                    rng.normal() as f32
+                };
+            }
+            let (ho, wo) = (h - k + 1, wd - k + 1);
+            let mut want = vec![0.0f32; ho * wo * f];
+            let mut got = vec![0.0f32; ho * wo * f];
+            let mut scratch = Vec::new();
+            conv2d_valid_relu(&w, &b, &frame, &mut want, k, k, c, f, h, wd);
+            conv2d_im2col_relu(&w, &b, &frame, &mut got, &mut scratch, k, k, c, f, h, wd);
+            assert_close(&got, &want, 1e-5, &format!("{h}x{wd}x{c} k{k} f{f}"));
+            assert_eq!(scratch.len(), ho * wo * k * k * c);
+        }
+    }
+
+    #[test]
+    fn conv_block_choice_heuristic() {
+        let dense = vec![1.0f32; 400];
+        let sparse = {
+            let mut v = vec![0.0f32; 400];
+            for x in v.iter_mut().take(40) {
+                *x = 1.0;
+            }
+            v
+        };
+        // explicit requests pass through untouched
+        assert_eq!(conv_block_choice(ConvKernel::Direct, &dense, 64, 16), ConvKernel::Direct);
+        assert_eq!(conv_block_choice(ConvKernel::Im2col, &sparse, 64, 16), ConvKernel::Im2col);
+        // auto: dense + big enough -> im2col
+        assert_eq!(conv_block_choice(ConvKernel::Auto, &dense, 64, 16), ConvKernel::Im2col);
+        // auto: mostly-zero MinAtar-style block -> direct
+        assert_eq!(conv_block_choice(ConvKernel::Auto, &sparse, 64, 16), ConvKernel::Direct);
+        // auto: too few lanes or rows for the tile -> direct
+        assert_eq!(conv_block_choice(ConvKernel::Auto, &dense, 64, 4), ConvKernel::Direct);
+        assert_eq!(conv_block_choice(ConvKernel::Auto, &dense, 2, 16), ConvKernel::Direct);
+    }
+
+    #[test]
+    fn kernel_names_roundtrip_and_reject_unknown() {
+        for k in [MatKernel::Auto, MatKernel::Reference, MatKernel::Tiled] {
+            assert_eq!(MatKernel::from_name(k.name()).unwrap(), k);
+        }
+        for k in [ConvKernel::Auto, ConvKernel::Direct, ConvKernel::Im2col] {
+            assert_eq!(ConvKernel::from_name(k.name()).unwrap(), k);
+        }
+        assert!(MatKernel::from_name("fast").is_err());
+        assert!(ConvKernel::from_name("winograd").is_err());
+        assert!(configure(Some("nope"), None).is_err());
+        assert!(configure(None, Some("nope")).is_err());
+    }
+
+    /// The process-wide selection is only a default; every choice is
+    /// numerically parity, so concurrent tests flipping it stay safe.
+    #[test]
+    fn configure_sets_process_defaults() {
+        configure(Some("tiled"), Some("im2col")).unwrap();
+        assert_eq!(mat_kernel(), MatKernel::Tiled);
+        assert_eq!(conv_kernel(), ConvKernel::Im2col);
+        configure(Some("auto"), Some("auto")).unwrap();
+        assert_eq!(mat_kernel(), MatKernel::Auto);
+        assert_eq!(conv_kernel(), ConvKernel::Auto);
+    }
+}

@@ -6,12 +6,14 @@
 //!
 //! The scalar [`Mlp`] is the one-member special case of the
 //! population-batched [`PopMlp`](crate::nn::pop_mlp::PopMlp) and delegates
-//! its forward pass to it. The shared kernels live here:
-//! [`matvec_sparse`] (skips dead post-relu lanes), [`matvec_dense`]
-//! (branch-free for dense inputs), the adaptive [`matvec`] that picks
-//! between them, and the row-blocked [`matmat`].
+//! its forward pass to it. The compute kernels — [`matvec_sparse`],
+//! [`matvec_dense`], the zero-counting adaptive [`matvec`], and the
+//! tiled/reference [`matmat`] dispatch — live in the kernel layer
+//! ([`crate::nn::kernels`]) and are re-exported here for compatibility.
 
 use crate::nn::pop_mlp::PopMlp;
+
+pub use crate::nn::kernels::{matmat, matvec, matvec_dense, matvec_sparse};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
@@ -89,83 +91,6 @@ impl Mlp {
     /// head of a scalar conv net built on the population path).
     pub fn into_pop_mlp(self) -> PopMlp {
         self.inner
-    }
-}
-
-/// `dst[o] = act(sum_i x[i] * w[i, o] + b[o])`, w row-major [in, out],
-/// skipping all-zero input lanes. Iterating rows of `w` keeps the access
-/// pattern sequential (cache-friendly for the [in, out] layout jax uses);
-/// the zero skip wins when `x` is a post-relu hidden activation (roughly
-/// half the lanes are dead).
-#[inline]
-pub fn matvec_sparse(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
-                     out_dim: usize, act: Activation) {
-    dst.copy_from_slice(b);
-    for (i, &xi) in x.iter().enumerate().take(in_dim) {
-        if xi == 0.0 {
-            continue; // relu sparsity: skip dead rows
-        }
-        let row = &w[i * out_dim..(i + 1) * out_dim];
-        for (d, &wv) in dst.iter_mut().zip(row) {
-            *d += xi * wv;
-        }
-    }
-    for d in dst.iter_mut() {
-        *d = act.apply(*d);
-    }
-}
-
-/// Same contract as [`matvec_sparse`] but branch-free: for fully-dense
-/// inputs (normalized observations never hit exactly 0.0) the per-element
-/// zero check is a mispredicted branch in the innermost loop for nothing.
-#[inline]
-pub fn matvec_dense(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
-                    out_dim: usize, act: Activation) {
-    dst.copy_from_slice(b);
-    for (i, &xi) in x.iter().enumerate().take(in_dim) {
-        let row = &w[i * out_dim..(i + 1) * out_dim];
-        for (d, &wv) in dst.iter_mut().zip(row) {
-            *d += xi * wv;
-        }
-    }
-    for d in dst.iter_mut() {
-        *d = act.apply(*d);
-    }
-}
-
-/// Adaptive matvec: one O(in) prescan routes fully-dense inputs to the
-/// branch-free kernel and anything with zero lanes to the sparsity-skip
-/// kernel (the prescan is amortized by the O(in*out) inner loop).
-#[inline]
-pub fn matvec(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
-              out_dim: usize, act: Activation) {
-    if x.iter().take(in_dim).any(|&v| v == 0.0) {
-        matvec_sparse(w, b, x, dst, in_dim, out_dim, act);
-    } else {
-        matvec_dense(w, b, x, dst, in_dim, out_dim, act);
-    }
-}
-
-/// Row-blocked mat-mat: forward `rows` inputs `x: [rows, in]` through ONE
-/// weight matrix into `dst: [rows, out]`. The weight block stays hot in
-/// cache across the row loop — this is the inner kernel of
-/// [`PopMlp::forward_block`](crate::nn::pop_mlp::PopMlp::forward_block)
-/// applied per member run.
-#[inline]
-pub fn matmat(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: usize,
-              out_dim: usize, rows: usize, act: Activation) {
-    debug_assert_eq!(x.len(), rows * in_dim);
-    debug_assert_eq!(dst.len(), rows * out_dim);
-    for r in 0..rows {
-        matvec(
-            w,
-            b,
-            &x[r * in_dim..(r + 1) * in_dim],
-            &mut dst[r * out_dim..(r + 1) * out_dim],
-            in_dim,
-            out_dim,
-            act,
-        );
     }
 }
 
@@ -253,13 +178,18 @@ mod tests {
             matvec(&w, &b, &x, &mut d3, i, o, Activation::Tanh);
             for k in 0..o {
                 assert!((d1[k] - d2[k]).abs() < 1e-6, "{} vs {}", d1[k], d2[k]);
-                assert_eq!(d1[k], d3[k]);
+                // matvec routes to one of the two by zero count; either
+                // way it must agree
+                assert!((d1[k] - d3[k]).abs() < 1e-6, "{} vs {}", d1[k], d3[k]);
             }
         }
     }
 
     #[test]
-    fn matmat_equals_per_row_matvec() {
+    fn matmat_matches_per_row_matvec() {
+        // matmat dispatches to the tiled kernel by default, whose
+        // accumulation order differs from matvec's — parity is 1e-5,
+        // not bitwise.
         let mut rng = Rng::new(8);
         let (i, o, rows) = (5, 4, 3);
         let mut w = vec![0.0f32; i * o];
@@ -273,7 +203,10 @@ mod tests {
         for r in 0..rows {
             let mut want = vec![0.0f32; o];
             matvec(&w, &b, &x[r * i..(r + 1) * i], &mut want, i, o, Activation::Relu);
-            assert_eq!(&got[r * o..(r + 1) * o], &want[..]);
+            for (k, &wv) in want.iter().enumerate() {
+                let gv = got[r * o + k];
+                assert!((gv - wv).abs() < 1e-5, "row {r} out {k}: {gv} vs {wv}");
+            }
         }
     }
 }

@@ -14,14 +14,45 @@
 //! contiguous copy per field), and each forwards a whole `[n, ...]`
 //! observation/frame block in one call. The scalar [`Mlp`] and
 //! [`ConvNet`] are their one-member special cases.
+//!
+//! # Kernel layer
+//!
+//! Every forward bottoms out in [`kernels`], the SIMD-friendly compute
+//! layer both actor paths share:
+//!
+//! - **Tile shape.** [`kernels::matmat_tiled`] processes fixed
+//!   4-row × 8-lane output tiles ([`kernels::TILE_ROWS`] ×
+//!   [`kernels::TILE_LANES`]) with unrolled stack accumulators so rustc
+//!   autovectorizes the FMA chain to AVX2/NEON; const-generic row bands
+//!   and a masked edge kernel cover dims not divisible by the tile.
+//! - **Dispatch heuristics.** [`kernels::matvec`] counts zero input
+//!   lanes and takes the skip kernel only above
+//!   [`kernels::MATVEC_SPARSE_THRESHOLD`] (25%); block-level dispatch
+//!   ([`kernels::matmat`], [`kernels::conv_block_choice`]) requires ≥75%
+//!   zeros before abandoning the 8-wide dense FMA for scalar skipping.
+//!   Conv blocks additionally need `f ≥ 8` and `ho*wo ≥ 4` to pick the
+//!   im2col path ([`kernels::conv2d_im2col_relu`]).
+//! - **Layout contract.** MLP weights are `[in, out]` row-major (jax
+//!   convention) so output lanes are contiguous per input; conv filters
+//!   are HWIO `[kh, kw, in_ch, f]`, which *is* the `[kh*kw*in_ch, f]`
+//!   im2col weight matrix — no reshuffle needed. im2col gathers each
+//!   frame into `[ho*wo, kh*kw*in_ch]` patch rows (kh contiguous copies
+//!   of `kw*in_ch` floats each, thanks to HWC adjacency).
+//!
+//! Kernel selection is overridable per net ([`PopMlp::set_kernel`],
+//! [`PopConvNet::set_kernel`]) or process-wide via the `kernels.matmat`
+//! / `kernels.conv` config keys ([`kernels::configure`]) for A/B runs;
+//! every variant is numerically parity (≤1e-5) by the proptest suite.
 
 pub mod conv;
 pub mod from_state;
+pub mod kernels;
 pub mod mlp;
 pub mod pop_conv;
 pub mod pop_mlp;
 
 pub use conv::ConvNet;
+pub use kernels::{ConvKernel, MatKernel};
 pub use mlp::{Activation, Mlp};
 pub use pop_conv::PopConvNet;
 pub use pop_mlp::PopMlp;

@@ -23,56 +23,20 @@
 //! activation block goes through [`PopMlp::forward_block`] in one pass.
 //! The scalar [`ConvNet`](crate::nn::conv::ConvNet) is the P=1 special
 //! case and delegates here.
+//!
+//! The conv itself runs through the kernel layer
+//! ([`crate::nn::kernels`]): one direct-vs-im2col decision per block
+//! ([`kernels::conv_block_choice`]), then either the sparsity-skipping
+//! direct kernel ([`conv2d_valid_relu`]) or the im2col gather + tiled
+//! matmat ([`kernels::conv2d_im2col_relu`]) per frame. Both scratches
+//! (`conv_out`, `im2col`) are reused across calls; see
+//! [`PopConvNet::scratch_bytes`] / [`PopConvNet::reserve_scratch`].
 
 use crate::manifest::Artifact;
+use crate::nn::kernels::{self, ConvKernel};
 use crate::nn::pop_mlp::PopMlp;
 
-/// VALID conv + relu of ONE HWC frame against ONE HWIO filter:
-/// `frame: [h, wd, in_ch]` flat, `w: [kh, kw, in_ch, f]` flat,
-/// `out: [ho, wo, f]` flat. Zero input pixels are skipped (MinAtar-style
-/// frames are sparse binary planes, so most lanes are dead).
-pub fn conv2d_valid_relu(
-    w: &[f32],
-    b: &[f32],
-    frame: &[f32],
-    out: &mut [f32],
-    kh: usize,
-    kw: usize,
-    in_ch: usize,
-    f: usize,
-    h: usize,
-    wd: usize,
-) {
-    let (ho, wo) = (h - kh + 1, wd - kw + 1);
-    debug_assert_eq!(frame.len(), h * wd * in_ch);
-    debug_assert_eq!(out.len(), ho * wo * f);
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let dst = &mut out[(oy * wo + ox) * f..(oy * wo + ox + 1) * f];
-            dst.copy_from_slice(b);
-            for ky in 0..kh {
-                for kx in 0..kw {
-                    let iy = oy + ky;
-                    let ix = ox + kx;
-                    let px = &frame[(iy * wd + ix) * in_ch..];
-                    for c in 0..in_ch {
-                        let xv = px[c];
-                        if xv == 0.0 {
-                            continue; // sparse binary frames: skip zeros
-                        }
-                        let wrow = &w[((ky * kw + kx) * in_ch + c) * f..];
-                        for (d, &wv) in dst.iter_mut().zip(&wrow[..f]) {
-                            *d += xv * wv;
-                        }
-                    }
-                }
-            }
-            for d in dst.iter_mut() {
-                *d = d.max(0.0);
-            }
-        }
-    }
-}
+pub use crate::nn::kernels::conv2d_valid_relu;
 
 /// All population members' DQN conv nets in one packed
 /// structure-of-arrays net (conv filter bank + [`PopMlp`] q-head).
@@ -93,6 +57,11 @@ pub struct PopConvNet {
     pub head: PopMlp,
     /// Conv activation scratch `[n, ho*wo*features]`, grown on demand.
     conv_out: Vec<f32>,
+    /// im2col patch scratch `[ho*wo, kh*kw*in_ch]`, grown on demand.
+    im2col: Vec<f32>,
+    /// Per-instance conv kernel override; `None` follows the process-wide
+    /// selection ([`kernels::conv_kernel`]).
+    kernel: Option<ConvKernel>,
 }
 
 impl PopConvNet {
@@ -114,11 +83,53 @@ impl PopConvNet {
         assert_eq!(head.pop(), pop, "head population mismatch");
         let (ho, wo) = (h - kh + 1, wd - kw + 1);
         assert_eq!(head.in_dim(), ho * wo * features, "head input dim");
-        PopConvNet { pop, w, b, kh, kw, in_ch, features, h, wd, head, conv_out: Vec::new() }
+        PopConvNet {
+            pop,
+            w,
+            b,
+            kh,
+            kw,
+            in_ch,
+            features,
+            h,
+            wd,
+            head,
+            conv_out: Vec::new(),
+            im2col: Vec::new(),
+            kernel: None,
+        }
     }
 
     pub fn pop(&self) -> usize {
         self.pop
+    }
+
+    /// Pin this net to one conv kernel (`None` restores the process-wide
+    /// selection). All kernels are numerically parity; this exists for
+    /// A/B benchmarking and tests.
+    pub fn set_kernel(&mut self, kernel: Option<ConvKernel>) {
+        self.kernel = kernel;
+    }
+
+    /// Total bytes held by the forward scratch buffers (conv activations,
+    /// im2col patches, and the head's layer scratch). Grown on demand —
+    /// call [`Self::reserve_scratch`] at spawn to make this report the
+    /// steady-state footprint up front.
+    pub fn scratch_bytes(&self) -> usize {
+        (self.conv_out.capacity() + self.im2col.capacity()) * std::mem::size_of::<f32>()
+            + self.head.scratch_bytes()
+    }
+
+    /// Pre-size every forward scratch for `rows`-row blocks so the hot
+    /// path never allocates and [`Self::scratch_bytes`] is meaningful at
+    /// spawn time.
+    pub fn reserve_scratch(&mut self, rows: usize) {
+        let (ho, wo) = self.out_hw();
+        let flat = ho * wo * self.features;
+        let patch = self.kh * self.kw * self.in_ch;
+        self.conv_out.reserve(rows * flat);
+        self.im2col.reserve(ho * wo * patch);
+        self.head.reserve_scratch(rows);
     }
 
     /// Input frame length `H * W * C`.
@@ -192,12 +203,19 @@ impl PopConvNet {
         assert_eq!(frames.len(), n * fl, "frame block size mismatch");
         assert_eq!(out.len(), n * self.out_dim(), "out block size mismatch");
         debug_assert!(members.iter().all(|&m| m < self.pop), "member out of range");
-        // Take the scratch out of `self` for the duration of the pass so
-        // the filter bank stays borrowable (allocation-free steady state).
+        // Take the scratches out of `self` for the duration of the pass
+        // so the filter bank stays borrowable (allocation-free steady
+        // state).
         let mut conv_out = std::mem::take(&mut self.conv_out);
+        let mut im2col = std::mem::take(&mut self.im2col);
         conv_out.resize(n * flat, 0.0);
         let ws = self.kh * self.kw * self.in_ch * self.features;
         let f = self.features;
+        // One direct-vs-im2col decision per block: the whole block shares
+        // one sparsity profile (same env, same step), so per-frame
+        // re-counting would only add overhead.
+        let requested = self.kernel.unwrap_or_else(kernels::conv_kernel);
+        let choice = kernels::conv_block_choice(requested, frames, ho * wo, f);
         let mut row = 0;
         while row < n {
             let m = members[row];
@@ -208,23 +226,41 @@ impl PopConvNet {
             let mw = &self.w[m * ws..(m + 1) * ws];
             let mb = &self.b[m * f..(m + 1) * f];
             for k in row..end {
-                conv2d_valid_relu(
-                    mw,
-                    mb,
-                    &frames[k * fl..(k + 1) * fl],
-                    &mut conv_out[k * flat..(k + 1) * flat],
-                    self.kh,
-                    self.kw,
-                    self.in_ch,
-                    f,
-                    self.h,
-                    self.wd,
-                );
+                let frame = &frames[k * fl..(k + 1) * fl];
+                let dst = &mut conv_out[k * flat..(k + 1) * flat];
+                match choice {
+                    ConvKernel::Im2col => kernels::conv2d_im2col_relu(
+                        mw,
+                        mb,
+                        frame,
+                        dst,
+                        &mut im2col,
+                        self.kh,
+                        self.kw,
+                        self.in_ch,
+                        f,
+                        self.h,
+                        self.wd,
+                    ),
+                    _ => conv2d_valid_relu(
+                        mw,
+                        mb,
+                        frame,
+                        dst,
+                        self.kh,
+                        self.kw,
+                        self.in_ch,
+                        f,
+                        self.h,
+                        self.wd,
+                    ),
+                }
             }
             row = end;
         }
         self.head.forward_block(members, &conv_out, out);
         self.conv_out = conv_out;
+        self.im2col = im2col;
     }
 }
 
@@ -410,6 +446,55 @@ mod tests {
             assert_eq!(hw[0], (sizes[0] + sizes[1] + m * flat * n_act) as f32);
             assert_eq!(hb[0], (sizes[0] + sizes[1] + sizes[2] + m * n_act) as f32);
         }
+    }
+
+    /// Pinning the net to each conv kernel must give 1e-5-identical
+    /// q-values through the full forward (conv + head).
+    #[test]
+    fn forward_block_kernel_override_parity() {
+        let (h, w, c) = FRAME;
+        let fl = h * w * c;
+        let mut rng = Rng::new(47);
+        let members = random_members(&mut rng, 4);
+        let ids = [0usize, 1, 1, 2, 3, 3];
+        let n = ids.len();
+        let mut frames = vec![0.0f32; n * fl];
+        rng.fill_normal(&mut frames, 1.0);
+        let mut direct = vec![0.0f32; n * N_ACTIONS];
+        let mut im2col = vec![0.0f32; n * N_ACTIONS];
+        let mut net = pack(&members);
+        net.set_kernel(Some(ConvKernel::Direct));
+        net.forward_block(&ids, &frames, &mut direct);
+        net.set_kernel(Some(ConvKernel::Im2col));
+        net.forward_block(&ids, &frames, &mut im2col);
+        for (k, (&dv, &iv)) in direct.iter().zip(&im2col).enumerate() {
+            assert!((dv - iv).abs() < 1e-5, "q {k}: direct {dv} vs im2col {iv}");
+        }
+    }
+
+    /// scratch_bytes reports the reserved footprint at spawn and the hot
+    /// path never grows past the reservation.
+    #[test]
+    fn scratch_accounting_reports_reserved_bytes() {
+        let (h, w, c) = FRAME;
+        let fl = h * w * c;
+        let mut rng = Rng::new(53);
+        let members = random_members(&mut rng, 2);
+        let mut net = pack(&members);
+        assert_eq!(net.scratch_bytes(), 0, "fresh net holds no scratch");
+        let rows = 6;
+        net.reserve_scratch(rows);
+        let (ho, wo) = net.out_hw();
+        let floor = (rows * ho * wo * FEATS + ho * wo * K * K * c) * 4;
+        let reserved = net.scratch_bytes();
+        assert!(reserved >= floor, "{reserved} < {floor}");
+        let ids = [0usize, 0, 1, 1, 0, 1];
+        let mut frames = vec![0.0f32; rows * fl];
+        rng.fill_normal(&mut frames, 1.0);
+        let mut out = vec![0.0f32; rows * N_ACTIONS];
+        net.set_kernel(Some(ConvKernel::Im2col));
+        net.forward_block(&ids, &frames, &mut out);
+        assert_eq!(net.scratch_bytes(), reserved, "forward_block must not realloc");
     }
 
     #[test]

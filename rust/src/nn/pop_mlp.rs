@@ -18,7 +18,8 @@
 //! [`PopMlp::forward_block`] forwards an `[n, in]` observation block in
 //! one call; row `k` uses member `members[k]`'s weights. Consecutive rows
 //! owned by the same member are forwarded as one row-blocked mat-mat
-//! ([`matmat`](crate::nn::mlp::matmat)) with that member's weight matrix
+//! through the kernel layer ([`crate::nn::kernels`] — register-tiled by
+//! default, overridable per instance) with that member's weight matrix
 //! hot in cache — note that in today's actor loop each agent owns exactly
 //! one env, so runs have length 1 and the win comes from the single
 //! dispatch, shared scratch, and the packed one-pass weight sync; the run
@@ -27,7 +28,8 @@
 //! the P=1 special case and delegates here.
 
 use crate::manifest::Artifact;
-use crate::nn::mlp::{matmat, Activation};
+use crate::nn::kernels::{self, matmat_with, MatKernel};
+use crate::nn::mlp::Activation;
 
 #[derive(Clone, Debug)]
 struct PopLayer {
@@ -48,6 +50,9 @@ pub struct PopMlp {
     pub final_act: Activation,
     /// Scratch buffers reused across calls (allocation-free hot path).
     scratch: [Vec<f32>; 2],
+    /// Per-instance mat-mat kernel override; `None` follows the
+    /// process-wide selection ([`kernels::mat_kernel`]).
+    kernel: Option<MatKernel>,
 }
 
 impl PopMlp {
@@ -59,6 +64,28 @@ impl PopMlp {
             hidden_act,
             final_act,
             scratch: [Vec::new(), Vec::new()],
+            kernel: None,
+        }
+    }
+
+    /// Force a mat-mat kernel for THIS net (A/B benches and parity
+    /// tests); `None` restores the process-wide selection.
+    pub fn set_kernel(&mut self, kernel: Option<MatKernel>) {
+        self.kernel = kernel;
+    }
+
+    /// Bytes currently reserved by the double-buffered forward scratch.
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch.iter().map(|s| s.capacity() * std::mem::size_of::<f32>()).sum()
+    }
+
+    /// Pre-size the forward scratch for `rows`-row blocks so the hot
+    /// path never allocates and [`Self::scratch_bytes`] reports the
+    /// steady-state footprint already at spawn.
+    pub fn reserve_scratch(&mut self, rows: usize) {
+        let wide = self.layers.iter().map(|l| l.in_dim.max(l.out_dim)).max().unwrap_or(0);
+        for s in &mut self.scratch {
+            s.reserve(rows * wide);
         }
     }
 
@@ -149,6 +176,9 @@ impl PopMlp {
         assert_eq!(out.len(), n * self.out_dim(), "out dim mismatch");
         debug_assert!(members.iter().all(|&m| m < self.pop), "member out of range");
         let n_layers = self.layers.len();
+        // Resolve the kernel once per pass: instance override beats the
+        // process-wide selection.
+        let kernel = self.kernel.unwrap_or_else(kernels::mat_kernel);
         // Double-buffer through scratch to stay allocation-free: take the
         // buffers out of `self` for the duration of the pass.
         let mut src = std::mem::take(&mut self.scratch[0]);
@@ -167,7 +197,8 @@ impl PopMlp {
                 while end < n && members[end] == m {
                     end += 1;
                 }
-                matmat(
+                matmat_with(
+                    kernel,
                     &layer.w[m * ws..(m + 1) * ws],
                     &layer.b[m * o..(m + 1) * o],
                     &src[row * i..end * i],
@@ -317,6 +348,46 @@ mod tests {
             assert_eq!(w[0], (m * i * o) as f32);
             assert_eq!(b[0], (pop * i * o + m * o) as f32);
         }
+    }
+
+    /// Reference vs tiled kernel through the same net: forward_block is
+    /// kernel-parity (≤1e-5) whichever dispatch is forced.
+    #[test]
+    fn forward_block_kernel_override_parity() {
+        let mut rng = Rng::new(21);
+        let dims = [7usize, 33, 12];
+        let members = random_members(&mut rng, 4, &dims);
+        let mut net = pack(&members, &dims);
+        let ids = [0usize, 1, 1, 2, 3, 3, 3];
+        let mut obs = vec![0.0f32; ids.len() * dims[0]];
+        rng.fill_normal(&mut obs, 1.0);
+        let mut reference = vec![0.0f32; ids.len() * dims[2]];
+        let mut tiled = vec![0.0f32; ids.len() * dims[2]];
+        net.set_kernel(Some(MatKernel::Reference));
+        net.forward_block(&ids, &obs, &mut reference);
+        net.set_kernel(Some(MatKernel::Tiled));
+        net.forward_block(&ids, &obs, &mut tiled);
+        for (k, (&r, &t)) in reference.iter().zip(&tiled).enumerate() {
+            assert!((r - t).abs() < 1e-5, "lane {k}: {r} vs {t}");
+        }
+    }
+
+    #[test]
+    fn scratch_accounting_reports_reserved_bytes() {
+        let mut rng = Rng::new(22);
+        let dims = [3usize, 16, 2];
+        let members = random_members(&mut rng, 2, &dims);
+        let mut net = pack(&members, &dims);
+        assert_eq!(net.scratch_bytes(), 0, "no scratch before first use");
+        net.reserve_scratch(8);
+        // two buffers, each at least 8 rows x the widest dim (16 lanes)
+        assert!(net.scratch_bytes() >= 2 * 8 * 16 * 4, "{}", net.scratch_bytes());
+        let before = net.scratch_bytes();
+        let mut out = vec![0.0f32; 4 * dims[2]];
+        let mut obs = vec![0.0f32; 4 * dims[0]];
+        rng.fill_normal(&mut obs, 1.0);
+        net.forward_block(&[0, 0, 1, 1], &obs, &mut out);
+        assert_eq!(net.scratch_bytes(), before, "reserve covers the forward pass");
     }
 
     #[test]
