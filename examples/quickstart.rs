@@ -12,6 +12,7 @@
 
 use fastpbrl::coordinator::trainer::{run_training, NoController, TrainerConfig};
 use fastpbrl::manifest::Manifest;
+use fastpbrl::telemetry::TelemetryConfig;
 
 fn main() -> anyhow::Result<()> {
     let updates: u64 = std::env::args()
@@ -26,6 +27,8 @@ fn main() -> anyhow::Result<()> {
         .with_warmup(500)
         .with_seed(1)
         .with_csv("results/quickstart.csv")
+        // live snapshots: watch with `fastpbrl top results` while running
+        .with_telemetry(TelemetryConfig::jsonl("results/telemetry.jsonl"))
         .with_max_seconds(900.0);
     println!(
         "quickstart: TD3 population of {} on pendulum, {} update steps",
@@ -39,6 +42,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", summary.timers.report());
     println!("learning curve -> results/quickstart.csv");
+    println!("telemetry stream -> results/telemetry.jsonl (fastpbrl top results)");
     // Random pendulum policies score ~ -1200..-1600; a learning population
     // should clear -900 within the default budget.
     if summary.best_return > -900.0 {

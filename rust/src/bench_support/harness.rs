@@ -2,7 +2,7 @@
 //! timed iterations with mean/std/percentiles, CSV-friendly reporting.
 
 use crate::util::stats::{percentile, Running};
-use crate::util::timer::Stopwatch;
+use crate::telemetry::Stopwatch;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {

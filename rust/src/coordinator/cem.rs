@@ -16,7 +16,7 @@ use crate::runtime::Runtime;
 use crate::util::log::CsvLogger;
 use crate::util::rng::Rng;
 use crate::util::stats::{argsort_desc, mean};
-use crate::util::timer::PhaseTimer;
+use crate::telemetry::PhaseTimer;
 
 /// Diagonal-Gaussian CEM over flat parameter vectors.
 #[derive(Clone, Debug)]

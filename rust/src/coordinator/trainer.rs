@@ -37,10 +37,11 @@ use crate::manifest::{Artifact, Dtype, Manifest};
 use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, ShardedReplay, Staging};
 use crate::runtime::checkpoint::{Checkpoint, CheckpointLineage};
 use crate::runtime::Runtime;
+use crate::telemetry::{self, export::Exporter, PhaseRecorder, PhaseTimer, RunCounter,
+                       TelemetryConfig};
 use crate::util::log::{self, CsvLogger};
 use crate::util::rng::Rng;
 use crate::util::stats;
-use crate::util::timer::PhaseTimer;
 
 /// Groups copied wholesale when one agent replaces another.
 pub const AGENT_STATE_GROUPS: &[&str] = &[
@@ -114,6 +115,9 @@ pub struct TrainerConfig {
     /// Per-member health scan: |param| above this is a norm explosion
     /// (0 = magnitude check off; NaN/Inf are always faults).
     pub health_norm_limit: f64,
+    /// Live-metrics switches: registry on/off, JSONL snapshot stream,
+    /// Prometheus dump (see [`crate::telemetry`]). Off by default.
+    pub telemetry: TelemetryConfig,
     /// Deterministic fault injection for resilience tests (see
     /// [`FaultPlan`](crate::data::supervisor::FaultPlan)).
     #[cfg(feature = "fault-inject")]
@@ -151,6 +155,7 @@ impl Default for TrainerConfig {
             restart_backoff_ms: 100,
             stall_timeout_ms: 5_000,
             health_norm_limit: 1e6,
+            telemetry: TelemetryConfig::off(),
             #[cfg(feature = "fault-inject")]
             fault_plan: None,
         }
@@ -266,6 +271,11 @@ impl TrainerConfig {
 
     pub fn with_health_norm_limit(mut self, limit: f64) -> Self {
         self.health_norm_limit = limit;
+        self
+    }
+
+    pub fn with_telemetry(mut self, telemetry: TelemetryConfig) -> Self {
+        self.telemetry = telemetry;
         self
     }
 
@@ -728,7 +738,7 @@ impl<D: Domain> Trainer<D> {
         }
     }
 
-    fn upload_and_step(&mut self, timers: &mut PhaseTimer) -> anyhow::Result<()> {
+    fn upload_and_step(&mut self, timers: &mut PhaseRecorder) -> anyhow::Result<()> {
         let art = self.population.artifact.clone();
         let t0 = Instant::now();
         let mut bufs = Vec::with_capacity(art.inputs.len() - 1);
@@ -757,7 +767,21 @@ impl<D: Domain> Trainer<D> {
     pub fn run(&mut self, controller: &mut dyn Controller) -> anyhow::Result<Summary> {
         let art = self.population.artifact.clone();
         let k = art.num_steps as u64;
-        let mut timers = PhaseTimer::new();
+        // Live metrics: flip the process-wide registry per this run's
+        // config, start the snapshot exporter (None when off), and
+        // record learner stages through the registry-backed recorder
+        // (its run-local PhaseTimer feeds Summary either way).
+        telemetry::configure(&self.cfg.telemetry);
+        let mut exporter = Exporter::from_config(&self.cfg.telemetry)?;
+        if let Some(path) = exporter.as_ref().and_then(|e| e.jsonl_path()) {
+            log::info(&format!("telemetry snapshots -> {}", path.display()));
+        }
+        let mut timers = PhaseRecorder::new("learner.phase");
+        let c_updates = telemetry::counter("learner.updates");
+        let c_env_steps = telemetry::counter("learner.env_steps");
+        let c_episodes = telemetry::counter("learner.episodes");
+        let mut env_steps_counted: u64 = 0;
+        let mut episodes_counted: u64 = 0;
         let mut csv = if self.cfg.csv_path.is_empty() {
             None
         } else {
@@ -795,10 +819,16 @@ impl<D: Domain> Trainer<D> {
             },
             pool.threads(),
         );
-        let mut actor_restarts: u64 = 0;
-        let mut stall_events: u64 = 0;
-        let mut members_repaired: u64 = 0;
+        // Run-local counts mirrored into the registry through one bump
+        // site each, so Summary and telemetry cannot drift apart.
+        let mut actor_restarts = RunCounter::new(telemetry::counter("supervisor.actor_restarts"));
+        let mut stall_events = RunCounter::new(telemetry::counter("supervisor.stall_events"));
+        let mut members_repaired =
+            RunCounter::new(telemetry::counter("supervisor.members_repaired"));
         let mut stalled_flags = vec![false; pool.threads()];
+        let hb_gauges: Vec<telemetry::Gauge> = (0..pool.threads())
+            .map(|t| telemetry::gauge(&format!("actor.{t}.heartbeat_age_ms")))
+            .collect();
         #[cfg(feature = "fault-inject")]
         let mut nan_faults_fired: Vec<bool> = self
             .cfg
@@ -838,10 +868,16 @@ impl<D: Domain> Trainer<D> {
                 }
                 for t in restarts.due(Instant::now()) {
                     if pool.respawn(t) {
-                        actor_restarts += 1;
+                        actor_restarts.bump(1);
                         log::info(&format!(
-                            "respawned actor thread {t} (restart #{actor_restarts})"
+                            "respawned actor thread {t} (restart #{})",
+                            actor_restarts.get()
                         ));
+                    }
+                }
+                if telemetry::enabled() {
+                    for (t, g) in hb_gauges.iter().enumerate() {
+                        g.set(pool.heartbeats().millis_since(t) as f64);
                     }
                 }
                 if self.cfg.stall_timeout_ms > 0 {
@@ -850,7 +886,7 @@ impl<D: Domain> Trainer<D> {
                             pool.heartbeats().is_stalled(t, self.cfg.stall_timeout_ms);
                         if stalled && !stalled_flags[t] {
                             stalled_flags[t] = true;
-                            stall_events += 1;
+                            stall_events.bump(1);
                             log::warn(&format!(
                                 "actor thread {t} stalled: no heartbeat for {} ms \
                                  (flagging only; threads cannot be force-killed)",
@@ -864,38 +900,49 @@ impl<D: Domain> Trainer<D> {
                 }
 
                 // ---- drain actor messages --------------------------------
-                let t0 = Instant::now();
-                if sink_mode {
-                    let now = throttle.env_steps.load(std::sync::atomic::Ordering::Relaxed);
-                    self.gate.on_env_steps(now.saturating_sub(env_steps_seen));
-                    env_steps_seen = now;
-                    while let Some(ep) = pool.poll_episode() {
-                        self.population.returns[ep.agent].push(ep.ret);
-                        episodes += 1;
+                {
+                    let _drain = timers.span("drain");
+                    if sink_mode {
+                        let now =
+                            throttle.env_steps.load(std::sync::atomic::Ordering::Relaxed);
+                        self.gate.on_env_steps(now.saturating_sub(env_steps_seen));
+                        env_steps_seen = now;
+                        while let Some(ep) = pool.poll_episode() {
+                            self.population.returns[ep.agent].push(ep.ret);
+                            episodes += 1;
+                        }
+                    }
+                    let mut drained = 0u64;
+                    while let Ok(block) = pool.rx.try_recv() {
+                        drained += block.rows() as u64;
+                        episodes += self.absorb_block(&block);
+                        pool.recycle(block);
+                        if drained >= self.cfg.drain_bound {
+                            break; // bounded drain per iteration
+                        }
                     }
                 }
-                let mut drained = 0u64;
-                while let Ok(block) = pool.rx.try_recv() {
-                    drained += block.rows() as u64;
-                    episodes += self.absorb_block(&block);
-                    pool.recycle(block);
-                    if drained >= self.cfg.drain_bound {
-                        break; // bounded drain per iteration
-                    }
-                }
-                timers.add("drain", t0.elapsed().as_secs_f64());
+                // Reconcile the learner counters from the gate's
+                // authoritative totals (covers drain, sink and park paths).
+                let g_now = self.gate.env_steps();
+                c_env_steps.add(g_now.saturating_sub(env_steps_counted));
+                env_steps_counted = g_now;
+                c_episodes.add(episodes.saturating_sub(episodes_counted));
+                episodes_counted = episodes;
 
                 // ---- update step -----------------------------------------
                 let min_fill = self.replays.iter().map(|r| r.len()).min().unwrap_or(0);
                 let gate_open = self.cfg.ratio <= 0.0 || self.gate.may_update(k);
                 if min_fill >= art.batch && gate_open {
-                    let t1 = Instant::now();
-                    self.fill_batches();
-                    timers.add("sample", t1.elapsed().as_secs_f64());
+                    {
+                        let _sample = timers.span("sample");
+                        self.fill_batches();
+                    }
                     self.upload_and_step(&mut timers)?;
                     self.gate.on_update_steps(k);
                     throttle.updates.fetch_add(k, std::sync::atomic::Ordering::Relaxed);
                     updates += k;
+                    c_updates.add(k);
                     since_sync += 1;
                 } else {
                     // replay warmup / ratio wait: park on the channel
@@ -914,9 +961,10 @@ impl<D: Domain> Trainer<D> {
                     || (since_sync > 0 && updates >= self.cfg.total_updates)
                 {
                     since_sync = 0;
-                    let t2 = Instant::now();
-                    let mut host = self.population.sync_to_host()?;
-                    timers.add("host_sync", t2.elapsed().as_secs_f64());
+                    let mut host = {
+                        let _sync = timers.span("host_sync");
+                        self.population.sync_to_host()?
+                    };
                     // fault injection: simulate a member diverging by the
                     // time this sync observes the state (fires once per
                     // planned (member, update) entry)
@@ -933,20 +981,17 @@ impl<D: Domain> Trainer<D> {
                         }
                     }
                     // ---- member health scan + quarantine repair ----------
-                    let t_h = Instant::now();
-                    let scan = health::scan_members(
-                        &art,
-                        &host,
-                        self.cfg.health_norm_limit as f32,
-                    );
-                    timers.add("health_scan", t_h.elapsed().as_secs_f64());
+                    let scan = {
+                        let _scan = timers.span("health_scan");
+                        health::scan_members(&art, &host, self.cfg.health_norm_limit as f32)
+                    };
                     let scan_clean = scan.all_healthy();
                     let mut repaired_this_sync = false;
                     if !scan_clean {
                         let fitness = self.population.fitness();
                         let outcome =
                             health::repair_members(&art, &mut host, &scan, &fitness)?;
-                        members_repaired += outcome.repaired.len() as u64;
+                        members_repaired.bump(outcome.repaired.len() as u64);
                         repaired_this_sync = true;
                         for &m in &outcome.repaired {
                             // the repaired member is a new lineage: its old
@@ -956,7 +1001,9 @@ impl<D: Domain> Trainer<D> {
                         log::warn(&format!(
                             "quarantined members {:?} repaired from donor {} \
                              ({} total repairs)",
-                            outcome.repaired, outcome.donor, members_repaired
+                            outcome.repaired,
+                            outcome.donor,
+                            members_repaired.get()
                         ));
                     }
                     let fitness = self.population.fitness();
@@ -978,16 +1025,30 @@ impl<D: Domain> Trainer<D> {
                         self.population.returns[agent].clear();
                     }
                     if mutated {
-                        let t3 = Instant::now();
+                        let _evolve = timers.span("evolve_upload");
                         self.population.load_host(&self.rt, host)?;
-                        timers.add("evolve_upload", t3.elapsed().as_secs_f64());
                     }
                     if self.lineage.is_some() {
+                        let _ckpt = timers.span("checkpoint");
                         let c = Checkpoint::capture(&self.population.train_state)?;
                         // `last_good` advances only when this sync's scan
                         // (before any repair) found every member healthy —
                         // so resume can always reach a pre-divergence state
                         self.lineage.as_mut().unwrap().save(&c, scan_clean)?;
+                    }
+                    // One stripe-length walk per sync feeds both the
+                    // per-stripe fill gauges and the CSV min/max columns
+                    // (same source, so the two views cannot drift).
+                    let stripe_lens = if csv.is_some() || telemetry::enabled() {
+                        self.stripe_lens()
+                    } else {
+                        Vec::new()
+                    };
+                    if telemetry::enabled() {
+                        for (i, &len) in stripe_lens.iter().enumerate() {
+                            telemetry::gauge(&format!("replay.stripe.{i}.fill"))
+                                .set(len as f64);
+                        }
                     }
                     if let Some(csv) = csv.as_mut() {
                         let f = self.population.fitness();
@@ -1005,7 +1066,6 @@ impl<D: Domain> Trainer<D> {
                                 })
                                 .unwrap_or(f64::NAN)
                         };
-                        let stripe_lens = self.stripe_lens();
                         let mut row = vec![
                             start.elapsed().as_secs_f64(),
                             updates as f64,
@@ -1013,9 +1073,9 @@ impl<D: Domain> Trainer<D> {
                             if best.is_finite() { best } else { f64::NAN },
                             stats::mean(&finite),
                             episodes as f64,
-                            actor_restarts as f64,
+                            actor_restarts.get() as f64,
                             stalled_flags.iter().filter(|&&s| s).count() as f64,
-                            members_repaired as f64,
+                            members_repaired.get() as f64,
                             stripe_lens.iter().copied().min().unwrap_or(0) as f64,
                             stripe_lens.iter().copied().max().unwrap_or(0) as f64,
                         ];
@@ -1024,28 +1084,46 @@ impl<D: Domain> Trainer<D> {
                         csv.flush()?;
                     }
                 }
+                if let Some(e) = exporter.as_mut() {
+                    e.tick();
+                }
             }
             Ok(())
         })();
         pool.stop();
         result?;
+        // Final counter reconcile: a `break` (wall-clock budget) can exit
+        // between a park-path absorb and the next drain, so bring the
+        // exported totals up to the gate's before the last snapshot.
+        c_env_steps.add(self.gate.env_steps().saturating_sub(env_steps_counted));
+        c_episodes.add(episodes.saturating_sub(episodes_counted));
 
         let fitness = self.population.fitness();
         let finite: Vec<f64> = fitness.iter().copied().filter(|v| v.is_finite()).collect();
         let stripe_lens = self.stripe_lens();
+        if telemetry::enabled() {
+            // Summary's stripe min/max and the exported fill gauges come
+            // from this same final walk.
+            for (i, &len) in stripe_lens.iter().enumerate() {
+                telemetry::gauge(&format!("replay.stripe.{i}.fill")).set(len as f64);
+            }
+        }
+        if let Some(e) = exporter.as_mut() {
+            e.flush();
+        }
         Ok(Summary {
             wall_seconds: start.elapsed().as_secs_f64(),
             updates,
             env_steps: self.gate.env_steps(),
             best_return: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
             mean_return: stats::mean(&finite),
-            actor_restarts,
-            stalled_actors: stall_events,
-            members_repaired,
+            actor_restarts: actor_restarts.get(),
+            stalled_actors: stall_events.get(),
+            members_repaired: members_repaired.get(),
             replay_shards: self.actor_sinks.len().max(1),
             stripe_min_fill: stripe_lens.iter().copied().min().unwrap_or(0),
             stripe_max_fill: stripe_lens.iter().copied().max().unwrap_or(0),
-            timers,
+            timers: timers.into_timer(),
         })
     }
 }
@@ -1117,7 +1195,8 @@ mod tests {
             .with_max_actor_restarts(5)
             .with_restart_backoff_ms(250)
             .with_stall_timeout_ms(1234)
-            .with_health_norm_limit(1e5);
+            .with_health_norm_limit(1e5)
+            .with_telemetry(TelemetryConfig::jsonl("t.jsonl"));
         assert_eq!(cfg.algo, "dqn");
         assert_eq!(cfg.env, "minatar");
         assert_eq!(cfg.pop, 8);
@@ -1140,6 +1219,8 @@ mod tests {
         assert_eq!(cfg.restart_backoff_ms, 250);
         assert_eq!(cfg.stall_timeout_ms, 1234);
         assert!((cfg.health_norm_limit - 1e5).abs() < 1e-9);
+        assert!(cfg.telemetry.is_on());
+        assert_eq!(cfg.telemetry.jsonl_path, "t.jsonl");
         // the config is Clone + Debug (sweeps copy it, tests print it)
         let copy = cfg.clone();
         assert!(format!("{copy:?}").contains("minatar"));

@@ -847,6 +847,9 @@ fn actor_loop(
     let mut episodes: Vec<EpisodeEnd> = Vec::new();
     let mut block = TransitionBlock::new(thread, agents, obs_dim, act_dim);
     venv.reset_all(&mut rng);
+    // Per-thread telemetry handles, resolved once outside the loop so a
+    // record is a relaxed fetch-add (or one load + branch when off).
+    let tm = crate::telemetry::ActorMetrics::for_thread(thread);
 
     let mut iters: usize = 0;
     let pop_total = artifact.pop as u64;
@@ -879,6 +882,7 @@ fn actor_loop(
         if iters < cfg.warmup_steps {
             rng.fill_uniform(&mut acts, -1.0, 1.0);
         } else {
+            let _fwd = crate::telemetry::timed(&tm.forward);
             policy.forward_block(agents, venv.obs(), &mut raw);
             for k in 0..n {
                 select_action(
@@ -895,8 +899,11 @@ fn actor_loop(
         block.obs.copy_from_slice(venv.obs());
         block.act.copy_from_slice(&acts);
         episodes.clear();
-        venv.step_into(&mut rng, &acts, &mut block.next_obs, &mut block.rew, &mut block.done,
-                       &mut episodes);
+        {
+            let _step = crate::telemetry::timed(&tm.env_step);
+            venv.step_into(&mut rng, &acts, &mut block.next_obs, &mut block.rew,
+                           &mut block.done, &mut episodes);
+        }
         block.n = n;
         for e in &episodes {
             block.episodes.push(EpisodeReport {
@@ -907,11 +914,14 @@ fn actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
+        tm.env_steps.add(n as u64);
+        tm.blocks.add(1);
         match &sink {
             // Direct-ingest mode: push the rows straight into this
             // thread's replay stripe and reuse the block in place — no
             // channel hop, no learner round-trip, allocation-free.
             Some(sk) => {
+                let _pub = crate::telemetry::timed(&tm.publish);
                 sk.rows.push_rows(&block, 0, block.n);
                 for e in block.episodes.drain(..) {
                     let _ = sk.episodes.send(e);
@@ -919,6 +929,7 @@ fn actor_loop(
                 block.reset();
             }
             None => {
+                let _pub = crate::telemetry::timed(&tm.publish);
                 if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
                     break;
                 }
@@ -977,6 +988,8 @@ fn pixel_actor_loop(
     let mut episodes: Vec<EpisodeEnd> = Vec::new();
     let mut block = PixelTransitionBlock::new(thread, agents, frame_len);
     venv.reset_all(&mut rng);
+    // Per-thread telemetry handles (see actor_loop).
+    let tm = crate::telemetry::ActorMetrics::for_thread(thread);
 
     let mut iters: usize = 0;
     let warmup_total = cfg.warmup_steps as u64 * artifact.pop as u64;
@@ -1010,6 +1023,7 @@ fn pixel_actor_loop(
                 *a = rng.below(n_actions);
             }
         } else {
+            let _fwd = crate::telemetry::timed(&tm.forward);
             qnet.forward_block(agents, venv.obs(), &mut q);
             for k in 0..n {
                 acts[k] = if rng.uniform() < eps[k] as f64 {
@@ -1026,8 +1040,11 @@ fn pixel_actor_loop(
             *d = a as i32;
         }
         episodes.clear();
-        venv.step_into(&mut rng, &acts, &mut next_obs, &mut block.rew, &mut block.done,
-                       &mut episodes);
+        {
+            let _step = crate::telemetry::timed(&tm.env_step);
+            venv.step_into(&mut rng, &acts, &mut next_obs, &mut block.rew, &mut block.done,
+                           &mut episodes);
+        }
         quantize_frames(&next_obs, &mut block.next_obs);
         block.n = n;
         for e in &episodes {
@@ -1039,10 +1056,13 @@ fn pixel_actor_loop(
         }
         iters += 1;
         throttle.env_steps.fetch_add(n as u64, Ordering::Relaxed);
+        tm.env_steps.add(n as u64);
+        tm.blocks.add(1);
         match &sink {
             // Direct-ingest mode: see actor_loop — same contract, u8
             // frame planes land in the stripe without requantization.
             Some(sk) => {
+                let _pub = crate::telemetry::timed(&tm.publish);
                 sk.rows.push_rows(&block, 0, block.n);
                 for e in block.episodes.drain(..) {
                     let _ = sk.episodes.send(e);
@@ -1050,6 +1070,7 @@ fn pixel_actor_loop(
                 block.reset();
             }
             None => {
+                let _pub = crate::telemetry::timed(&tm.publish);
                 if send_blocking(&tx, block, &stop, || heartbeats.beat(thread)).is_err() {
                     break;
                 }

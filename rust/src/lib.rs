@@ -29,6 +29,7 @@ pub mod manifest;
 pub mod nn;
 pub mod replay;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root).

@@ -7,6 +7,8 @@
 //!                              the domain is picked from the artifact)
 //!   cemrl  ...                 CEM-RL with the shared critic (§5.2)
 //!   dvd    ...                 DvD diversity training (§5.3)
+//!   top    <run-dir|jsonl>     live per-member/per-phase telemetry table
+//!   report ...                 plot results CSVs in the terminal
 
 use fastpbrl::coordinator::cem::{run_cemrl, CemRlConfig};
 use fastpbrl::coordinator::dvd::DvdLambdaSchedule;
@@ -35,15 +37,38 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "cemrl" => cemrl(rest),
         "dvd" => dvd(rest),
         "report" => report(rest),
+        "top" => top(rest),
         _ => {
             println!(
                 "fastpbrl — Fast Population-Based RL on a Single Machine (ICML 2022)\n\n\
-                 Usage: fastpbrl <list|train|cemrl|dvd|report> [options]\n\
+                 Usage: fastpbrl <list|train|cemrl|dvd|top|report> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
         }
     }
+}
+
+/// Live telemetry table: tail a run's JSONL snapshot stream (written
+/// when training runs with `--telemetry`) and render it in place.
+fn top(argv: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "fastpbrl top",
+        "live per-member/per-phase view of a training run's telemetry stream",
+    )
+    .opt("refresh", "2", "seconds between redraws")
+    .opt("iterations", "0", "redraw count before exiting (0 = until Ctrl-C)");
+    let args = cli.parse(argv)?;
+    let target = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or(fastpbrl::RESULTS_DIR);
+    fastpbrl::telemetry::top::run_top(
+        std::path::Path::new(target),
+        args.get_f64("refresh")?,
+        args.get_u64("iterations")?,
+    )
 }
 
 /// Render results CSVs as terminal charts (Fig 5/6-style curves).
@@ -120,6 +145,11 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
             "1",
             "shared-replay ingest stripes (0 = one per actor thread; needs shared replay)",
         )
+        .opt(
+            "telemetry",
+            "",
+            "live telemetry: JSONL snapshot path or run dir (pair with `fastpbrl top`)",
+        )
 }
 
 fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
@@ -135,6 +165,10 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
         .with_stall_timeout_ms(args.get_u64("stall-timeout-ms")?)
         .with_max_seconds(args.get_f64("max-seconds")?)
         .with_replay_shards(args.get_usize("replay-shards")?);
+    let telemetry_path = args.get("telemetry");
+    if !telemetry_path.is_empty() {
+        cfg.telemetry = fastpbrl::telemetry::TelemetryConfig::jsonl(telemetry_path);
+    }
     // optional config file refinements
     let path = args.get("config");
     if !path.is_empty() {
@@ -163,6 +197,15 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
             file.get_u64("train.stall_timeout_ms", cfg.stall_timeout_ms)?;
         cfg.health_norm_limit =
             file.get_f64("train.health_norm_limit", cfg.health_norm_limit)?;
+        // telemetry knobs (--telemetry sets the JSONL path; the file can
+        // flip the switch alone, tune cadence, or add a Prometheus dump)
+        cfg.telemetry.enabled =
+            file.get_bool("telemetry.enabled", cfg.telemetry.enabled)?;
+        cfg.telemetry.snapshot_secs =
+            file.get_f64("telemetry.snapshot_secs", cfg.telemetry.snapshot_secs)?;
+        if let Some(p) = file.get("telemetry.prometheus_path") {
+            cfg.telemetry.prometheus_path = p.to_string();
+        }
         // kernel-selection overrides for A/B runs (auto | reference |
         // tiled, auto | direct | im2col); absent keys keep Auto dispatch
         fastpbrl::nn::kernels::configure(

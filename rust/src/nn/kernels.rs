@@ -53,8 +53,10 @@
 //!   mat-mat for dense frames.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use crate::nn::mlp::Activation;
+use crate::telemetry::Counter;
 
 /// Rows per register tile (the `R` in the RxT micro-kernel).
 pub const TILE_ROWS: usize = 4;
@@ -73,6 +75,24 @@ pub const MATMAT_SPARSE_THRESHOLD: f32 = 0.75;
 /// conv kernel at this frame-block zero fraction; MinAtar planes usually
 /// sit well above it.
 pub const CONV_SPARSE_THRESHOLD: f32 = 0.75;
+
+// ---------------------------------------------------------------------------
+// dispatch telemetry
+// ---------------------------------------------------------------------------
+
+// Dispatch-outcome counters (`kernels.matmat.*` / `kernels.conv.*`):
+// the handles are resolved once and cached in process statics, so a
+// bump on the hot path is the cached-handle fast path — one relaxed
+// load + branch when telemetry is off, one relaxed fetch-add when on.
+static MAT_REFERENCE: OnceLock<Counter> = OnceLock::new();
+static MAT_TILED: OnceLock<Counter> = OnceLock::new();
+static MAT_SPARSE: OnceLock<Counter> = OnceLock::new();
+static CONV_DIRECT: OnceLock<Counter> = OnceLock::new();
+static CONV_IM2COL: OnceLock<Counter> = OnceLock::new();
+
+fn bump(cell: &OnceLock<Counter>, name: &str) {
+    cell.get_or_init(|| crate::telemetry::counter(name)).add(1);
+}
 
 // ---------------------------------------------------------------------------
 // kernel selection
@@ -417,10 +437,17 @@ pub fn matmat_tiled(w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32], in_dim: us
 pub fn matmat_with(kernel: MatKernel, w: &[f32], b: &[f32], x: &[f32], dst: &mut [f32],
                    in_dim: usize, out_dim: usize, rows: usize, act: Activation) {
     match kernel {
-        MatKernel::Reference => matmat_reference(w, b, x, dst, in_dim, out_dim, rows, act),
-        MatKernel::Tiled => matmat_tiled(w, b, x, dst, in_dim, out_dim, rows, act),
+        MatKernel::Reference => {
+            bump(&MAT_REFERENCE, "kernels.matmat.reference");
+            matmat_reference(w, b, x, dst, in_dim, out_dim, rows, act);
+        }
+        MatKernel::Tiled => {
+            bump(&MAT_TILED, "kernels.matmat.tiled");
+            matmat_tiled(w, b, x, dst, in_dim, out_dim, rows, act);
+        }
         MatKernel::Auto => {
             if zero_fraction(&x[..rows * in_dim]) >= MATMAT_SPARSE_THRESHOLD {
+                bump(&MAT_SPARSE, "kernels.matmat.sparse");
                 for r in 0..rows {
                     matvec_sparse(
                         w,
@@ -433,6 +460,7 @@ pub fn matmat_with(kernel: MatKernel, w: &[f32], b: &[f32], x: &[f32], dst: &mut
                     );
                 }
             } else {
+                bump(&MAT_TILED, "kernels.matmat.tiled");
                 matmat_tiled(w, b, x, dst, in_dim, out_dim, rows, act);
             }
         }
@@ -558,7 +586,7 @@ pub fn conv2d_im2col_relu(
 /// (≥ [`CONV_SPARSE_THRESHOLD`]), im2col otherwise.
 pub fn conv_block_choice(requested: ConvKernel, frames: &[f32], out_rows: usize,
                          f: usize) -> ConvKernel {
-    match requested {
+    let chosen = match requested {
         ConvKernel::Auto => {
             if f < TILE_LANES
                 || out_rows < TILE_ROWS
@@ -570,7 +598,13 @@ pub fn conv_block_choice(requested: ConvKernel, frames: &[f32], out_rows: usize,
             }
         }
         k => k,
+    };
+    match chosen {
+        ConvKernel::Direct => bump(&CONV_DIRECT, "kernels.conv.direct"),
+        ConvKernel::Im2col => bump(&CONV_IM2COL, "kernels.conv.im2col"),
+        ConvKernel::Auto => unreachable!("Auto always resolves"),
     }
+    chosen
 }
 
 #[cfg(test)]

@@ -26,10 +26,11 @@
 //! the row copies, so the stored prefix is always consistent and the
 //! supervisor can respawn the actor onto the same stripe.
 
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 
 use crate::data::pipeline::{RowSink, TransportBlock};
 use crate::replay::{Replay, Staging};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 /// Poison-tolerant lock: a panicked actor cannot leave a stripe
@@ -63,7 +64,31 @@ impl<R: Replay> ShardedReplay<R> {
     /// `thread % num_stripes`). Clones share the stripe, so a respawned
     /// incarnation of the thread re-binds to the same stripe.
     pub fn sink_for_thread(&self, thread: usize) -> StripeSink<R> {
-        StripeSink { stripe: Arc::clone(&self.stripes[thread % self.stripes.len()]) }
+        let s = thread % self.stripes.len();
+        StripeSink {
+            stripe: Arc::clone(&self.stripes[s]),
+            metrics: StripeMetrics::for_stripe(s),
+        }
+    }
+}
+
+/// Telemetry handles for one stripe (`replay.stripe.{s}.*`), resolved
+/// once at sink construction so the push path never touches the registry
+/// map. Sinks onto the same stripe share the underlying cells.
+#[derive(Clone)]
+struct StripeMetrics {
+    pushes: telemetry::Counter,
+    contended: telemetry::Counter,
+    fill: telemetry::Gauge,
+}
+
+impl StripeMetrics {
+    fn for_stripe(s: usize) -> StripeMetrics {
+        StripeMetrics {
+            pushes: telemetry::counter(&format!("replay.stripe.{s}.pushes")),
+            contended: telemetry::counter(&format!("replay.stripe.{s}.contended")),
+            fill: telemetry::gauge(&format!("replay.stripe.{s}.fill")),
+        }
     }
 }
 
@@ -147,17 +172,31 @@ where
 /// of a thread feeds the same stripe.
 pub struct StripeSink<R: Replay> {
     stripe: Arc<Mutex<R>>,
+    metrics: StripeMetrics,
 }
 
 impl<R: Replay> Clone for StripeSink<R> {
     fn clone(&self) -> Self {
-        StripeSink { stripe: Arc::clone(&self.stripe) }
+        StripeSink { stripe: Arc::clone(&self.stripe), metrics: self.metrics.clone() }
     }
 }
 
 impl<R: Replay> RowSink<R::Block> for StripeSink<R> {
     fn push_rows(&self, block: &R::Block, start: usize, end: usize) {
-        lock(&self.stripe).push_rows(block, start, end);
+        // Try-lock first so lock-held collisions (the learner sampling,
+        // or a sibling thread sharing this stripe) are observable as the
+        // `contended` counter; fall back to the blocking lock.
+        let mut g = match self.stripe.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.metrics.contended.add(1);
+                lock(&self.stripe)
+            }
+        };
+        g.push_rows(block, start, end);
+        self.metrics.pushes.add(1);
+        self.metrics.fill.set(g.len() as f64);
     }
 }
 

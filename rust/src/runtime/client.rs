@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::manifest::{Artifact, BatchInput, Dtype};
-use crate::util::timer::Stopwatch;
+use crate::telemetry::Stopwatch;
 
 /// Owns the PJRT client and a cache of compiled executables.
 pub struct Runtime {

@@ -1,0 +1,312 @@
+//! Snapshot export: JSONL stream (one [`Snapshot`] per line, tailed by
+//! `fastpbrl top`), Prometheus text dump (atomically rewritten file),
+//! and the [`Exporter`] the trainer ticks once per loop iteration.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::telemetry::registry::{CounterSnap, GaugeSnap, HistSnap, Snapshot};
+use crate::telemetry::TelemetryConfig;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::log::JsonlLogger;
+
+/// One snapshot as a JSON value (object keys serialize sorted, so the
+/// encoding is deterministic — pinned by the golden tests).
+pub fn snapshot_to_json(snap: &Snapshot) -> Json {
+    obj(vec![
+        ("uptime_s", num(snap.uptime_s)),
+        (
+            "counters",
+            arr(snap
+                .counters
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("name", s(&c.name)),
+                        ("value", num(c.value as f64)),
+                        ("rate", num(c.rate)),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "gauges",
+            arr(snap
+                .gauges
+                .iter()
+                .map(|g| obj(vec![("name", s(&g.name)), ("value", num(g.value))]))
+                .collect()),
+        ),
+        (
+            "hists",
+            arr(snap
+                .hists
+                .iter()
+                .map(|h| {
+                    obj(vec![
+                        ("name", s(&h.name)),
+                        ("count", num(h.count as f64)),
+                        ("sum", num(h.sum as f64)),
+                        ("p50", num(h.p50)),
+                        ("p95", num(h.p95)),
+                        ("p99", num(h.p99)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+fn field(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(Json::as_f64).with_context(|| format!("snapshot field {key:?}"))
+}
+
+fn name_of(j: &Json) -> Result<String> {
+    Ok(j.get("name").and_then(Json::as_str).context("snapshot field \"name\"")?.to_string())
+}
+
+/// Parse one JSONL line back into a [`Snapshot`] (the `fastpbrl top`
+/// reader side).
+pub fn snapshot_from_json(j: &Json) -> Result<Snapshot> {
+    let items = |key: &str| -> Result<&[Json]> {
+        j.get(key).and_then(Json::as_arr).with_context(|| format!("snapshot array {key:?}"))
+    };
+    let mut snap = Snapshot { uptime_s: field(j, "uptime_s")?, ..Snapshot::default() };
+    for c in items("counters")? {
+        snap.counters.push(CounterSnap {
+            name: name_of(c)?,
+            value: field(c, "value")? as u64,
+            rate: field(c, "rate")?,
+        });
+    }
+    for g in items("gauges")? {
+        snap.gauges.push(GaugeSnap { name: name_of(g)?, value: field(g, "value")? });
+    }
+    for h in items("hists")? {
+        snap.hists.push(HistSnap {
+            name: name_of(h)?,
+            count: field(h, "count")? as u64,
+            sum: field(h, "sum")? as u64,
+            p50: field(h, "p50")?,
+            p95: field(h, "p95")?,
+            p99: field(h, "p99")?,
+        });
+    }
+    Ok(snap)
+}
+
+/// Dotted metric names -> Prometheus identifiers (`fastpbrl_` prefix,
+/// non-alphanumerics to `_`).
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// Prometheus floats: integral values print without a decimal point
+/// (matches the JSON writer, keeps the goldens stable).
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < (1u64 << 53) as f64 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The snapshot in Prometheus text exposition format: counters and
+/// gauges as single samples, histograms as summaries (quantile series
+/// plus `_sum`/`_count`).
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for c in &snap.counters {
+        let n = sanitize(&c.name);
+        let _ = writeln!(out, "# TYPE fastpbrl_{n} counter");
+        let _ = writeln!(out, "fastpbrl_{n} {}", c.value);
+    }
+    for g in &snap.gauges {
+        let n = sanitize(&g.name);
+        let _ = writeln!(out, "# TYPE fastpbrl_{n} gauge");
+        let _ = writeln!(out, "fastpbrl_{n} {}", fmt_num(g.value));
+    }
+    for h in &snap.hists {
+        let n = sanitize(&h.name);
+        let _ = writeln!(out, "# TYPE fastpbrl_{n} summary");
+        let _ = writeln!(out, "fastpbrl_{n}{{quantile=\"0.5\"}} {}", fmt_num(h.p50));
+        let _ = writeln!(out, "fastpbrl_{n}{{quantile=\"0.95\"}} {}", fmt_num(h.p95));
+        let _ = writeln!(out, "fastpbrl_{n}{{quantile=\"0.99\"}} {}", fmt_num(h.p99));
+        let _ = writeln!(out, "fastpbrl_{n}_sum {}", h.sum);
+        let _ = writeln!(out, "fastpbrl_{n}_count {}", h.count);
+    }
+    out
+}
+
+/// Write the Prometheus dump atomically (tmp file + rename), so a
+/// scraper never reads a half-written exposition.
+pub fn write_prometheus(path: &Path, snap: &Snapshot) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("prom.tmp");
+    fs::write(&tmp, prometheus_text(snap))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Resolve a configured output path: an existing directory gets the
+/// default `telemetry.jsonl` file name appended (so `--telemetry <dir>`
+/// and `fastpbrl top <dir>` agree on the location).
+pub fn resolve_jsonl_path(path: &str) -> PathBuf {
+    let p = PathBuf::from(path);
+    if p.is_dir() {
+        p.join("telemetry.jsonl")
+    } else {
+        p
+    }
+}
+
+/// Periodic snapshot writer driven by the learner loop: `tick()` once
+/// per iteration, snapshots land every `snapshot_secs`. JSONL write
+/// failures degrade (warn once, keep training) via [`JsonlLogger`];
+/// Prometheus write failures are silently dropped per attempt (the next
+/// tick retries).
+pub struct Exporter {
+    jsonl: Option<JsonlLogger>,
+    prom_path: Option<PathBuf>,
+    every: Duration,
+    last: Instant,
+}
+
+impl Exporter {
+    /// Build from a [`TelemetryConfig`]; `Ok(None)` when disabled or no
+    /// output is named.
+    pub fn from_config(cfg: &TelemetryConfig) -> Result<Option<Exporter>> {
+        if !cfg.enabled || (cfg.jsonl_path.is_empty() && cfg.prometheus_path.is_empty()) {
+            return Ok(None);
+        }
+        let jsonl = if cfg.jsonl_path.is_empty() {
+            None
+        } else {
+            Some(JsonlLogger::create(resolve_jsonl_path(&cfg.jsonl_path))?)
+        };
+        let prom_path = if cfg.prometheus_path.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&cfg.prometheus_path))
+        };
+        Ok(Some(Exporter {
+            jsonl,
+            prom_path,
+            every: Duration::from_secs_f64(cfg.snapshot_secs.max(0.05)),
+            last: Instant::now(),
+        }))
+    }
+
+    /// Where the JSONL stream lands (for logs / `fastpbrl top` hints).
+    pub fn jsonl_path(&self) -> Option<&Path> {
+        self.jsonl.as_ref().map(|l| l.path.as_path())
+    }
+
+    /// Snapshot-and-write if the interval elapsed.
+    pub fn tick(&mut self) {
+        if self.last.elapsed() >= self.every {
+            self.flush();
+        }
+    }
+
+    /// Snapshot-and-write unconditionally (end of run).
+    pub fn flush(&mut self) {
+        self.last = Instant::now();
+        let snap = crate::telemetry::global().snapshot();
+        self.write(&snap);
+    }
+
+    fn write(&mut self, snap: &Snapshot) {
+        if let Some(w) = self.jsonl.as_mut() {
+            w.write(&snapshot_to_json(snap));
+        }
+        if let Some(p) = &self.prom_path {
+            let _ = write_prometheus(p, snap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            uptime_s: 2.0,
+            counters: vec![CounterSnap { name: "a.b".into(), value: 3, rate: 1.5 }],
+            gauges: vec![GaugeSnap { name: "g".into(), value: 0.5 }],
+            hists: vec![HistSnap {
+                name: "h".into(),
+                count: 2,
+                sum: 3,
+                p50: 1.0,
+                p95: 2.0,
+                p99: 2.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn jsonl_encoding_is_pinned() {
+        let line = snapshot_to_json(&sample_snapshot()).to_string();
+        assert_eq!(
+            line,
+            "{\"counters\":[{\"name\":\"a.b\",\"rate\":1.5,\"value\":3}],\
+             \"gauges\":[{\"name\":\"g\",\"value\":0.5}],\
+             \"hists\":[{\"count\":2,\"name\":\"h\",\"p50\":1,\"p95\":2,\"p99\":2,\"sum\":3}],\
+             \"uptime_s\":2}"
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_snapshot() {
+        let snap = sample_snapshot();
+        let j = Json::parse(&snapshot_to_json(&snap).to_string()).unwrap();
+        assert_eq!(snapshot_from_json(&j).unwrap(), snap);
+    }
+
+    #[test]
+    fn prometheus_encoding_is_pinned() {
+        let text = prometheus_text(&sample_snapshot());
+        let want = "\
+# TYPE fastpbrl_a_b counter
+fastpbrl_a_b 3
+# TYPE fastpbrl_g gauge
+fastpbrl_g 0.5
+# TYPE fastpbrl_h summary
+fastpbrl_h{quantile=\"0.5\"} 1
+fastpbrl_h{quantile=\"0.95\"} 2
+fastpbrl_h{quantile=\"0.99\"} 2
+fastpbrl_h_sum 3
+fastpbrl_h_count 2
+";
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn exporter_disabled_configs_build_nothing() {
+        assert!(Exporter::from_config(&TelemetryConfig::off()).unwrap().is_none());
+        // enabled but no outputs named
+        let cfg = TelemetryConfig { enabled: true, ..TelemetryConfig::off() };
+        assert!(Exporter::from_config(&cfg).unwrap().is_none());
+    }
+
+    #[test]
+    fn prometheus_file_is_written_atomically_in_place() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_prom");
+        let path = dir.join("metrics.prom");
+        write_prometheus(&path, &sample_snapshot()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("fastpbrl_a_b 3"));
+        assert!(!path.with_extension("prom.tmp").exists());
+    }
+}

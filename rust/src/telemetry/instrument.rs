@@ -1,0 +1,277 @@
+//! Timing instrumentation: the wall-clock helpers that used to live in
+//! `util/timer.rs` ([`Stopwatch`], [`PhaseTimer`]) plus the RAII timers
+//! that feed the registry — [`timed`] for per-thread actor phases,
+//! [`PhaseRecorder`]/[`PhaseSpan`] for the learner loop stages, and
+//! [`ActorMetrics`] bundling one actor thread's handles.
+//!
+//! Convention: histograms fed by these timers record **nanoseconds**.
+//! When telemetry is disabled the RAII guards skip the clock reads
+//! entirely (one relaxed load per guard), so instrumented hot paths cost
+//! nothing measurable with the switch off.
+
+use std::time::Instant;
+
+use crate::telemetry::registry::{Counter, Histogram};
+
+/// Scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let dt = self.elapsed_s();
+        self.start = Instant::now();
+        dt
+    }
+}
+
+/// Accumulates time spent in named phases (update step, env step, sync…).
+/// This is the run-local, single-threaded view the trainer's
+/// [`Summary`](crate::coordinator::trainer::Summary) carries;
+/// [`PhaseRecorder`] layers the registry histograms on top.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, seconds: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|e| e.0 == phase) {
+            e.1 += seconds;
+            e.2 += 1;
+        } else {
+            self.phases.push((phase.to_string(), seconds, 1));
+        }
+    }
+
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(phase, sw.elapsed_s());
+        out
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.phases.iter().find(|e| e.0 == phase).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.iter().find(|e| e.0 == phase).map(|e| e.2).unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, secs, n) in &self.phases {
+            out.push_str(&format!(
+                "{name}: {secs:.3}s over {n} calls ({:.3} ms/call)\n",
+                secs / (*n as f64) * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// RAII nanosecond timer: records the guarded scope's duration into the
+/// histogram on drop. When the histogram's registry is disabled, no
+/// clock is read and nothing is recorded.
+pub struct ScopedNs<'a> {
+    hist: &'a Histogram,
+    start: Option<Instant>,
+}
+
+/// Start a [`ScopedNs`] over `hist`.
+#[inline]
+pub fn timed(hist: &Histogram) -> ScopedNs<'_> {
+    ScopedNs { start: hist.is_enabled().then(Instant::now), hist }
+}
+
+impl Drop for ScopedNs<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            self.hist.record(start.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// The learner loop's phase clock: every `add` lands in both the
+/// run-local [`PhaseTimer`] (always — `Summary` reports it with
+/// telemetry off) and a registry histogram named
+/// `{prefix}.{phase}` in nanoseconds (gated on the enabled switch).
+pub struct PhaseRecorder {
+    timer: PhaseTimer,
+    prefix: String,
+    hists: Vec<(String, Histogram)>,
+}
+
+impl PhaseRecorder {
+    /// `prefix` names the histogram family, e.g. `learner.phase`.
+    pub fn new(prefix: &str) -> PhaseRecorder {
+        PhaseRecorder { timer: PhaseTimer::new(), prefix: prefix.to_string(), hists: Vec::new() }
+    }
+
+    fn hist(&mut self, phase: &str) -> &Histogram {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == phase) {
+            &self.hists[i].1
+        } else {
+            let full = format!("{}.{}", self.prefix, phase);
+            self.hists.push((phase.to_string(), crate::telemetry::histogram(&full)));
+            &self.hists.last().expect("just pushed").1
+        }
+    }
+
+    /// Record `seconds` spent in `phase` (manual form, for callers that
+    /// already hold an `Instant` pair).
+    pub fn add(&mut self, phase: &str, seconds: f64) {
+        self.timer.add(phase, seconds);
+        self.hist(phase).record((seconds * 1e9) as u64);
+    }
+
+    /// RAII form: the returned [`PhaseSpan`] records on drop, so early
+    /// exits (`?`, `break`, `continue`) are timed correctly.
+    pub fn span(&mut self, phase: &'static str) -> PhaseSpan<'_> {
+        PhaseSpan { start: Instant::now(), phase, rec: self }
+    }
+
+    pub fn timer(&self) -> &PhaseTimer {
+        &self.timer
+    }
+
+    pub fn into_timer(self) -> PhaseTimer {
+        self.timer
+    }
+}
+
+/// RAII guard from [`PhaseRecorder::span`].
+pub struct PhaseSpan<'a> {
+    rec: &'a mut PhaseRecorder,
+    phase: &'static str,
+    start: Instant,
+}
+
+impl Drop for PhaseSpan<'_> {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.rec.add(self.phase, secs);
+    }
+}
+
+/// One actor thread's metric handles, registered under `actor.{t}.*`.
+/// Created at the top of each actor-loop incarnation: a respawned
+/// thread re-resolves the same names and lands in the same cells.
+pub struct ActorMetrics {
+    /// `actor.{t}.env_steps` — environment steps produced (all agents of
+    /// the thread).
+    pub env_steps: Counter,
+    /// `actor.{t}.blocks` — transport blocks published.
+    pub blocks: Counter,
+    /// `actor.{t}.phase.forward` — policy/q-net block inference + action
+    /// selection, ns.
+    pub forward: Histogram,
+    /// `actor.{t}.phase.env_step` — vectorized env stepping, ns.
+    pub env_step: Histogram,
+    /// `actor.{t}.phase.publish` — sink push or channel send + recycle, ns.
+    pub publish: Histogram,
+}
+
+impl ActorMetrics {
+    pub fn for_thread(thread: usize) -> ActorMetrics {
+        let c = |k: &str| crate::telemetry::counter(&format!("actor.{thread}.{k}"));
+        let h = |k: &str| crate::telemetry::histogram(&format!("actor.{thread}.phase.{k}"));
+        ActorMetrics {
+            env_steps: c("env_steps"),
+            blocks: c("blocks"),
+            forward: h("forward"),
+            env_step: h("env_step"),
+            publish: h("publish"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::Registry;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("a", 0.5);
+        t.add("a", 0.25);
+        t.add("b", 1.0);
+        assert!((t.total("a") - 0.75).abs() < 1e-12);
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.count("missing"), 0);
+        assert!(t.report().contains("a:"));
+    }
+
+    #[test]
+    fn timed_records_only_when_enabled() {
+        let r = Registry::new();
+        let h = r.histogram("scope");
+        {
+            let _t = timed(&h);
+        }
+        assert_eq!(h.count(), 0, "disabled: no record, no clock");
+        r.set_enabled(true);
+        {
+            let _t = timed(&h);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.sum() >= 500_000, "recorded ns, got {}", h.sum());
+    }
+
+    #[test]
+    fn phase_recorder_feeds_timer_and_histogram() {
+        let mut rec = PhaseRecorder::new("test_rec.phase");
+        crate::telemetry::set_enabled(true);
+        rec.add("drain", 0.002);
+        {
+            let _span = rec.span("drain");
+        }
+        crate::telemetry::set_enabled(false);
+        assert_eq!(rec.timer().count("drain"), 2);
+        assert!(rec.timer().total("drain") >= 0.002);
+        let h = crate::telemetry::histogram("test_rec.phase.drain");
+        assert_eq!(h.count(), 2);
+        assert!(h.sum() >= 2_000_000, "ns convention, got {}", h.sum());
+        // the local timer keeps counting with telemetry off
+        rec.add("drain", 0.001);
+        assert_eq!(rec.timer().count("drain"), 3);
+        assert_eq!(h.count(), 2);
+        assert_eq!(rec.into_timer().count("drain"), 3);
+    }
+
+    #[test]
+    fn actor_metrics_share_cells_across_respawn() {
+        let a = ActorMetrics::for_thread(901);
+        let b = ActorMetrics::for_thread(901);
+        a.env_steps.add_always(3);
+        b.env_steps.add_always(4);
+        assert_eq!(a.env_steps.get(), 7);
+    }
+}

@@ -1,0 +1,165 @@
+//! First-class observability for live training runs.
+//!
+//! The paper's thesis — population training with minimal overhead over
+//! single-agent training — needs *live* evidence, not just offline
+//! benches. This subsystem provides it in three layers:
+//!
+//! - [`registry`]: a process-wide registry of named counters, gauges and
+//!   log2-bucketed histograms backed by padded atomic cells. Recording
+//!   is a relaxed `fetch_add` through a pre-resolved handle — no locks —
+//!   and a single relaxed load + branch when disabled (the default).
+//! - [`instrument`]: the timing layer — RAII phase timers for the
+//!   learner loop ([`PhaseRecorder`]) and actor threads ([`timed`],
+//!   [`ActorMetrics`]), plus the [`Stopwatch`]/[`PhaseTimer`] helpers
+//!   folded in from the old `util::timer` (which now re-exports them).
+//! - [`export`] / [`top`]: a periodic JSONL snapshot stream and
+//!   Prometheus text dump ([`export::Exporter`]), and the `fastpbrl top`
+//!   live table that tails the stream ([`top::run_top`]).
+//!
+//! # Metric catalog
+//!
+//! | name | kind | meaning |
+//! |---|---|---|
+//! | `learner.updates` | counter | per-agent update steps applied |
+//! | `learner.env_steps` | counter | env steps absorbed by the gate |
+//! | `learner.episodes` | counter | episode ends observed |
+//! | `learner.phase.{drain,sample,upload,update_exec,host_sync,health_scan,evolve_upload,checkpoint}` | histogram | learner stage wall time, ns |
+//! | `actor.{t}.env_steps` | counter | env steps produced by thread `t` |
+//! | `actor.{t}.blocks` | counter | transport blocks published |
+//! | `actor.{t}.phase.{forward,env_step,publish}` | histogram | actor stage wall time, ns |
+//! | `actor.{t}.heartbeat_age_ms` | gauge | ms since thread `t`'s last heartbeat |
+//! | `replay.stripe.{i}.fill` | gauge | live rows in stripe `i` |
+//! | `replay.stripe.{i}.pushes` | counter | sink pushes into stripe `i` |
+//! | `replay.stripe.{i}.contended` | counter | pushes that found the stripe lock held |
+//! | `kernels.matmat.{tiled,reference,sparse}` | counter | mat-mat dispatch outcomes |
+//! | `kernels.conv.{direct,im2col}` | counter | conv dispatch outcomes |
+//! | `supervisor.actor_restarts` | counter | crashed actor threads respawned |
+//! | `supervisor.stall_events` | counter | heartbeat stall transitions |
+//! | `supervisor.members_repaired` | counter | quarantined members repaired |
+//!
+//! The supervision counters record even with telemetry disabled (they
+//! feed [`Summary`](crate::coordinator::trainer::Summary) through
+//! [`RunCounter`], one bump site for both views). Everything else is
+//! off until [`TelemetryConfig::enabled`] switches the registry on.
+
+pub mod export;
+pub mod instrument;
+pub mod registry;
+pub mod top;
+
+use std::sync::OnceLock;
+
+pub use instrument::{timed, ActorMetrics, PhaseRecorder, PhaseSpan, PhaseTimer, ScopedNs,
+                     Stopwatch};
+pub use registry::{Counter, CounterSnap, Gauge, GaugeSnap, HistSnap, Histogram, Registry,
+                   RunCounter, Snapshot};
+
+/// Telemetry switches carried by
+/// [`TrainerConfig`](crate::coordinator::trainer::TrainerConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch for the gated record paths.
+    pub enabled: bool,
+    /// JSONL snapshot stream path ("" = off). A directory resolves to
+    /// `<dir>/telemetry.jsonl` — the same convention `fastpbrl top`
+    /// uses, so `--telemetry <run-dir>` and `fastpbrl top <run-dir>`
+    /// pair up.
+    pub jsonl_path: String,
+    /// Prometheus text dump path, atomically rewritten per snapshot
+    /// ("" = off).
+    pub prometheus_path: String,
+    /// Seconds between snapshots.
+    pub snapshot_secs: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig::off()
+    }
+}
+
+impl TelemetryConfig {
+    /// Telemetry fully off (the default — zero overhead on hot paths).
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: false,
+            jsonl_path: String::new(),
+            prometheus_path: String::new(),
+            snapshot_secs: 1.0,
+        }
+    }
+
+    /// Enabled, streaming JSONL snapshots to `path`.
+    pub fn jsonl(path: impl Into<String>) -> TelemetryConfig {
+        TelemetryConfig { enabled: true, jsonl_path: path.into(), ..TelemetryConfig::off() }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.enabled
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry all production call sites record against.
+/// Starts disabled; [`configure`] (called at the top of every trainer
+/// run) flips it per the run's [`TelemetryConfig`]. The switch is
+/// process-wide: concurrent runs in one process share it, last
+/// configure wins.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Is the global registry currently recording?
+#[inline]
+pub fn enabled() -> bool {
+    global().is_enabled()
+}
+
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+/// Apply a run's config to the global registry.
+pub fn configure(cfg: &TelemetryConfig) {
+    set_enabled(cfg.enabled);
+}
+
+/// Get-or-create a counter in the global registry.
+pub fn counter(name: &str) -> Counter {
+    global().counter(name)
+}
+
+/// Get-or-create a gauge in the global registry.
+pub fn gauge(name: &str) -> Gauge {
+    global().gauge(name)
+}
+
+/// Get-or-create a histogram in the global registry.
+pub fn histogram(name: &str) -> Histogram {
+    global().histogram(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_constructors() {
+        let off = TelemetryConfig::default();
+        assert!(!off.is_on());
+        assert!(off.jsonl_path.is_empty());
+        let on = TelemetryConfig::jsonl("run/telemetry.jsonl");
+        assert!(on.is_on());
+        assert_eq!(on.jsonl_path, "run/telemetry.jsonl");
+        assert!((on.snapshot_secs - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_registry_handles_are_shared() {
+        let a = counter("mod_test.shared");
+        let b = counter("mod_test.shared");
+        a.add_always(2);
+        assert_eq!(b.get(), 2);
+    }
+}

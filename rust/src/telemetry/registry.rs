@@ -1,0 +1,640 @@
+//! The metrics registry: named counters, gauges, and log-bucketed
+//! histograms behind lock-free recording handles.
+//!
+//! Registration (name -> cell) is the cold path and takes a `RwLock`;
+//! the handles a caller gets back ([`Counter`], [`Gauge`], [`Histogram`])
+//! hold `Arc`s straight to the padded atomic cells, so the hot path is a
+//! relaxed `fetch_add` with no lock and no lookup. Every handle also
+//! carries the owning registry's enabled flag: when telemetry is off,
+//! `add`/`set`/`record` are a single relaxed load and a branch — no
+//! stores, no clock reads (see
+//! [`timed`](crate::telemetry::instrument::timed)), which is what keeps
+//! the instrumented hot paths within the bench budget.
+//!
+//! [`Registry::snapshot`] walks the cells into a point-in-time
+//! [`Snapshot`]: counter values with rates since the previous snapshot,
+//! gauge values, and histogram count/sum plus p50/p95/p99 estimated from
+//! the log2 buckets (linear interpolation inside the landing bucket).
+//! Writers are never blocked by a snapshot in progress.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Instant;
+
+/// One atomic metric cell, padded to a cache line so independent
+/// counters never false-share (actor threads hammer their own cells).
+#[repr(align(64))]
+#[derive(Default)]
+struct Cell(AtomicU64);
+
+/// Log2 buckets: bucket 0 holds zeros, bucket `i >= 1` holds
+/// `[2^(i-1), 2^i)`, and the last bucket absorbs everything above
+/// `2^62`. 64 buckets cover the full `u64` range, which is plenty for
+/// nanosecond phase timings (bucket 35 is already ~half a minute).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value (see [`HIST_BUCKETS`]).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// `[lo, hi)` value range of bucket `i`; the last bucket's `hi` is
+/// saturated to `u64::MAX`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i == 0 {
+        (0, 1)
+    } else {
+        let lo = 1u64 << (i - 1);
+        let hi = if i >= HIST_BUCKETS - 1 { u64::MAX } else { 1u64 << i };
+        (lo, hi)
+    }
+}
+
+/// Quantile estimate from log2 bucket counts: walk the cumulative
+/// distribution to the bucket holding the q-th sample, then interpolate
+/// linearly inside that bucket's value range. Returns 0 for an empty
+/// histogram.
+pub fn quantile_from_buckets(buckets: &[u64], q: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0);
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let before = cum as f64;
+        cum += c;
+        if cum as f64 >= target {
+            let (lo, hi) = bucket_bounds(i);
+            let frac = (target - before) / c as f64;
+            return lo as f64 + frac * (hi - lo) as f64;
+        }
+    }
+    bucket_bounds(buckets.len().saturating_sub(1)).1 as f64
+}
+
+struct HistCells {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: Cell,
+    count: Cell,
+}
+
+impl HistCells {
+    fn new() -> HistCells {
+        HistCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: Cell::default(),
+            count: Cell::default(),
+        }
+    }
+}
+
+/// Monotonic counter handle. `add` is gated on the registry's enabled
+/// flag; `add_always` bypasses the gate for run-defining events (actor
+/// restarts, member repairs) that [`Summary`](crate::coordinator::trainer::Summary)
+/// reports even when telemetry is off.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<Cell>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Record regardless of the enabled switch (cold-path events only).
+    #[inline]
+    pub fn add_always(&self, n: u64) {
+        self.cell.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle storing an `f64` (bit-cast into the
+/// atomic cell).
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<Cell>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log2-bucketed histogram handle. Values are unit-agnostic `u64`s; the
+/// phase timers record **nanoseconds** by convention (see
+/// [`timed`](crate::telemetry::instrument::timed)).
+#[derive(Clone)]
+pub struct Histogram {
+    cells: Arc<HistCells>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.cells.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.cells.sum.0.fetch_add(v, Ordering::Relaxed);
+        self.cells.count.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether records currently land (drives the skip-the-clock
+    /// optimization in the RAII timers).
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cells.count.0.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.cells.sum.0.load(Ordering::Relaxed)
+    }
+
+    fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.cells.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Quantile estimate over everything recorded so far.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from_buckets(&self.bucket_counts(), q)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Cell>),
+    Gauge(Arc<Cell>),
+    Hist(Arc<HistCells>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// One counter in a [`Snapshot`]: cumulative value plus the per-second
+/// rate since the previous snapshot of the same registry (first
+/// snapshot: averaged over the registry's uptime).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSnap {
+    pub name: String,
+    pub value: u64,
+    pub rate: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaugeSnap {
+    pub name: String,
+    pub value: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnap {
+    pub name: String,
+    pub count: u64,
+    pub sum: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Point-in-time view of a [`Registry`], sorted by metric name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// Seconds since the registry was created.
+    pub uptime_s: f64,
+    pub counters: Vec<CounterSnap>,
+    pub gauges: Vec<GaugeSnap>,
+    pub hists: Vec<HistSnap>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<&CounterSnap> {
+        self.counters.iter().find(|c| c.name == name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<&GaugeSnap> {
+        self.gauges.iter().find(|g| g.name == name)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnap> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+}
+
+struct RateState {
+    at: f64,
+    counters: BTreeMap<String, u64>,
+}
+
+/// A named-metric registry. Unit tests build private instances;
+/// production code records against the process-wide one behind
+/// [`crate::telemetry::global`].
+pub struct Registry {
+    enabled: Arc<AtomicBool>,
+    metrics: RwLock<BTreeMap<String, Metric>>,
+    epoch: Instant,
+    rates: Mutex<RateState>,
+}
+
+/// Poison tolerance: a panicking actor thread can die between a
+/// registry lock acquire and release (registration is cold but happens
+/// on actor spawn); the map is only ever mutated by complete inserts,
+/// so the data behind a poisoned lock is valid.
+fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+fn mutex_lock<T>(l: &Mutex<T>) -> MutexGuard<'_, T> {
+    l.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Registry {
+    /// A fresh registry, **disabled** — records are no-ops until
+    /// [`Registry::set_enabled`] switches them on.
+    pub fn new() -> Registry {
+        Registry {
+            enabled: Arc::new(AtomicBool::new(false)),
+            metrics: RwLock::new(BTreeMap::new()),
+            epoch: Instant::now(),
+            rates: Mutex::new(RateState { at: 0.0, counters: BTreeMap::new() }),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn cell(&self, name: &str, make: fn() -> Metric, want: &'static str) -> Metric {
+        {
+            let m = read_lock(&self.metrics);
+            if let Some(existing) = m.get(name) {
+                return Self::clone_checked(name, existing, want);
+            }
+        }
+        let mut m = write_lock(&self.metrics);
+        let entry = m.entry(name.to_string()).or_insert_with(make);
+        Self::clone_checked(name, entry, want)
+    }
+
+    fn clone_checked(name: &str, m: &Metric, want: &'static str) -> Metric {
+        assert!(
+            m.kind() == want,
+            "telemetry metric {name:?} already registered as a different kind: \
+             is a {}, requested as a {want}",
+            m.kind()
+        );
+        match m {
+            Metric::Counter(c) => Metric::Counter(Arc::clone(c)),
+            Metric::Gauge(c) => Metric::Gauge(Arc::clone(c)),
+            Metric::Hist(h) => Metric::Hist(Arc::clone(h)),
+        }
+    }
+
+    /// Get-or-create the named counter. Panics if the name is already
+    /// registered as a different kind (a programmer error).
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.cell(name, || Metric::Counter(Arc::new(Cell::default())), "counter") {
+            Metric::Counter(cell) => Counter { cell, enabled: Arc::clone(&self.enabled) },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.cell(name, || Metric::Gauge(Arc::new(Cell::default())), "gauge") {
+            Metric::Gauge(cell) => Gauge { cell, enabled: Arc::clone(&self.enabled) },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        match self.cell(name, || Metric::Hist(Arc::new(HistCells::new())), "histogram") {
+            Metric::Hist(cells) => Histogram { cells, enabled: Arc::clone(&self.enabled) },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Point-in-time view of every metric. Writers are not blocked:
+    /// values are relaxed loads, so a snapshot taken mid-write may be at
+    /// most one in-flight record behind per cell — never torn, never
+    /// decreasing.
+    pub fn snapshot(&self) -> Snapshot {
+        let now = self.uptime_s();
+        let metrics = read_lock(&self.metrics);
+        let mut rates = mutex_lock(&self.rates);
+        let dt = now - rates.at;
+        let mut snap = Snapshot { uptime_s: now, ..Snapshot::default() };
+        for (name, m) in metrics.iter() {
+            match m {
+                Metric::Counter(c) => {
+                    let v = c.0.load(Ordering::Relaxed);
+                    let rate = match rates.counters.get(name) {
+                        Some(&p) if dt > 1e-9 && v >= p => (v - p) as f64 / dt,
+                        None if now > 1e-9 => v as f64 / now,
+                        _ => 0.0,
+                    };
+                    rates.counters.insert(name.clone(), v);
+                    snap.counters.push(CounterSnap { name: name.clone(), value: v, rate });
+                }
+                Metric::Gauge(c) => {
+                    snap.gauges.push(GaugeSnap {
+                        name: name.clone(),
+                        value: f64::from_bits(c.0.load(Ordering::Relaxed)),
+                    });
+                }
+                Metric::Hist(h) => {
+                    let buckets: Vec<u64> =
+                        h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+                    snap.hists.push(HistSnap {
+                        name: name.clone(),
+                        count: h.count.0.load(Ordering::Relaxed),
+                        sum: h.sum.0.load(Ordering::Relaxed),
+                        p50: quantile_from_buckets(&buckets, 0.50),
+                        p95: quantile_from_buckets(&buckets, 0.95),
+                        p99: quantile_from_buckets(&buckets, 0.99),
+                    });
+                }
+            }
+        }
+        rates.at = now;
+        snap
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// A run-local counter mirrored into a registry [`Counter`]: one `bump`
+/// call site increments both, so the run's
+/// [`Summary`](crate::coordinator::trainer::Summary) (which must report
+/// these even with telemetry off) and the exported metric cannot drift
+/// apart. The registry side uses [`Counter::add_always`] — these are
+/// rare, run-defining events, and the exported cell is a process-wide
+/// total across runs.
+pub struct RunCounter {
+    local: u64,
+    shared: Counter,
+}
+
+impl RunCounter {
+    pub fn new(shared: Counter) -> RunCounter {
+        RunCounter { local: 0, shared }
+    }
+
+    pub fn bump(&mut self, n: u64) {
+        self.local += n;
+        self.shared.add_always(n);
+    }
+
+    /// This run's count (not the process-wide registry total).
+    pub fn get(&self) -> u64 {
+        self.local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_the_range() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index((1 << 62) - 1), 62);
+        assert_eq!(bucket_index(1 << 62), 63);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        // every bucket's own bounds map back to it
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(bucket_index(lo), i, "lo of bucket {i}");
+            assert_eq!(bucket_index(hi - 1), i, "hi-1 of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        // empty histogram
+        assert_eq!(quantile_from_buckets(&[0; HIST_BUCKETS], 0.5), 0.0);
+        // all mass in one bucket [4, 8): p50 lands mid-bucket
+        let mut b = [0u64; HIST_BUCKETS];
+        b[3] = 10;
+        let p50 = quantile_from_buckets(&b, 0.5);
+        assert!((4.0..8.0).contains(&p50), "p50 {p50}");
+        assert!(quantile_from_buckets(&b, 0.99) <= 8.0);
+        // two buckets, 90/10 split: p50 in the low bucket, p99 in the high
+        let mut b = [0u64; HIST_BUCKETS];
+        b[1] = 90; // [1, 2)
+        b[10] = 10; // [512, 1024)
+        assert!(quantile_from_buckets(&b, 0.5) < 2.0);
+        let p99 = quantile_from_buckets(&b, 0.99);
+        assert!((512.0..=1024.0).contains(&p99), "p99 {p99}");
+        // quantiles are monotone in q
+        let p95 = quantile_from_buckets(&b, 0.95);
+        assert!(p95 <= p99);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_recorded_values() {
+        let r = Registry::new();
+        r.set_enabled(true);
+        let h = r.histogram("t");
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+        // log2 buckets bound the error by 2x
+        let p50 = h.quantile(0.5);
+        assert!((25.0..=100.0).contains(&p50), "p50 {p50}");
+        assert!(h.quantile(0.99) >= p50);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let r = Registry::new();
+        let c = r.counter("c");
+        let g = r.gauge("g");
+        let h = r.histogram("h");
+        c.add(5);
+        c.inc();
+        g.set(3.5);
+        h.record(42);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+        assert_eq!(h.count(), 0);
+        assert!(!h.is_enabled());
+        // the always-path still lands (Summary counters)
+        c.add_always(2);
+        assert_eq!(c.get(), 2);
+        // re-enabling makes the gated path live
+        r.set_enabled(true);
+        c.add(5);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn handles_share_cells_by_name() {
+        let r = Registry::new();
+        r.set_enabled(true);
+        let a = r.counter("same");
+        let b = r.counter("same");
+        a.add(2);
+        b.add(3);
+        assert_eq!(a.get(), 5);
+        assert_eq!(b.get(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        let _ = r.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_reports_rates_and_quantiles() {
+        let r = Registry::new();
+        r.set_enabled(true);
+        let c = r.counter("steps");
+        c.add(100);
+        r.gauge("fill").set(7.0);
+        let h = r.histogram("lat");
+        h.record(10);
+        h.record(1000);
+        let s1 = r.snapshot();
+        assert_eq!(s1.counter("steps").unwrap().value, 100);
+        assert!(s1.counter("steps").unwrap().rate > 0.0, "first snapshot averages over uptime");
+        assert_eq!(s1.gauge("fill").unwrap().value, 7.0);
+        let hs = s1.hist("lat").unwrap();
+        assert_eq!(hs.count, 2);
+        assert_eq!(hs.sum, 1010);
+        assert!(hs.p50 <= hs.p95 && hs.p95 <= hs.p99);
+        // no progress between snapshots -> rate falls to 0
+        let s2 = r.snapshot();
+        let rate = s2.counter("steps").unwrap().rate;
+        assert!(rate >= 0.0 && rate < 1e7, "stale counter rate {rate}");
+    }
+
+    #[test]
+    fn concurrent_hammer_matches_serial_total() {
+        let r = Arc::new(Registry::new());
+        r.set_enabled(true);
+        let threads = 8;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("hammer");
+                    let h = r.histogram("hammer_h");
+                    for i in 0..per {
+                        c.inc();
+                        h.record(i % 17);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("hammer").get(), threads * per);
+        assert_eq!(r.histogram("hammer_h").count(), threads * per);
+    }
+
+    #[test]
+    fn snapshot_while_writing_is_monotone() {
+        let r = Arc::new(Registry::new());
+        r.set_enabled(true);
+        let writer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let c = r.counter("mono");
+                for _ in 0..200_000 {
+                    c.inc();
+                }
+            })
+        };
+        let mut last = 0u64;
+        for _ in 0..50 {
+            let s = r.snapshot();
+            let v = s.counter("mono").unwrap().value;
+            assert!(v >= last, "counter went backwards: {v} < {last}");
+            last = v;
+        }
+        writer.join().unwrap();
+        assert_eq!(r.counter("mono").get(), 200_000);
+    }
+
+    #[test]
+    fn run_counter_mirrors_into_registry() {
+        let r = Registry::new(); // disabled: the mirror must still land
+        let mut rc = RunCounter::new(r.counter("restarts"));
+        rc.bump(1);
+        rc.bump(2);
+        assert_eq!(rc.get(), 3);
+        assert_eq!(r.counter("restarts").get(), 3);
+    }
+}

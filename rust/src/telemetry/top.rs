@@ -1,0 +1,298 @@
+//! `fastpbrl top`: tail a telemetry JSONL snapshot stream and render a
+//! live per-phase / per-actor table — steps/s per actor thread, the
+//! update:env ratio, learner phase time breakdown, replay stripe fill,
+//! and supervision/kernel counters.
+//!
+//! The renderer is a pure function of the latest [`Snapshot`]
+//! ([`render`]), so the table is golden-testable without a terminal;
+//! [`run_top`] adds the tailing loop around it.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::telemetry::export::{resolve_jsonl_path, snapshot_from_json};
+use crate::telemetry::registry::Snapshot;
+use crate::util::json::Json;
+
+/// `<run-dir>` or the JSONL file itself — directories resolve to
+/// `<dir>/telemetry.jsonl`, matching the trainer's output convention.
+pub fn resolve_stream(path: &Path) -> PathBuf {
+    resolve_jsonl_path(&path.to_string_lossy())
+}
+
+/// Latest parseable snapshot in the stream (`None`: file missing or no
+/// complete line yet — the run may not have started).
+pub fn latest_snapshot(file: &Path) -> Result<Option<Snapshot>> {
+    let text = match std::fs::read_to_string(file) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let Some(line) = text.lines().rev().find(|l| !l.trim().is_empty()) else {
+        return Ok(None);
+    };
+    let j = Json::parse(line.trim())?;
+    Ok(Some(snapshot_from_json(&j)?))
+}
+
+fn ms(ns: f64) -> f64 {
+    ns / 1e6
+}
+
+/// Thread/stripe indices present under `prefix{i}suffix` names.
+fn indices(names: impl Iterator<Item = String>, prefix: &str, suffix: &str) -> Vec<usize> {
+    let mut out: Vec<usize> = names
+        .filter_map(|n| {
+            n.strip_prefix(prefix)?.strip_suffix(suffix)?.parse::<usize>().ok()
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Render one snapshot as the `fastpbrl top` table.
+pub fn render(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "fastpbrl top — uptime {:.1}s", snap.uptime_s);
+
+    // ---- learner: updates, env steps, ratio -----------------------------
+    let updates = snap.counter("learner.updates");
+    let env_steps = snap.counter("learner.env_steps");
+    if let (Some(u), Some(e)) = (updates, env_steps) {
+        let ratio = if e.value > 0 { u.value as f64 / e.value as f64 } else { 0.0 };
+        let _ = writeln!(
+            out,
+            "learner   {} updates ({:.1}/s)   {} env steps ({:.1}/s)   update:env {:.3}",
+            u.value, u.rate, e.value, e.rate, ratio
+        );
+    }
+
+    // ---- learner phase breakdown ----------------------------------------
+    let phases: Vec<_> =
+        snap.hists.iter().filter(|h| h.name.starts_with("learner.phase.")).collect();
+    if !phases.is_empty() {
+        let total_ns: f64 = phases.iter().map(|h| h.sum as f64).sum();
+        let _ = writeln!(
+            out,
+            "{:<14} {:>8} {:>10} {:>10} {:>10} {:>7}",
+            "phase", "calls", "total s", "p50 ms", "p99 ms", "share"
+        );
+        for h in &phases {
+            let name = h.name.trim_start_matches("learner.phase.");
+            let share = if total_ns > 0.0 { 100.0 * h.sum as f64 / total_ns } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "{:<14} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>6.1}%",
+                name,
+                h.count,
+                h.sum as f64 / 1e9,
+                ms(h.p50),
+                ms(h.p99),
+                share
+            );
+        }
+    }
+
+    // ---- per-actor-thread table -----------------------------------------
+    let threads =
+        indices(snap.counters.iter().map(|c| c.name.clone()), "actor.", ".env_steps");
+    if !threads.is_empty() {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>12} {:>10} {:>12} {:>12} {:>12} {:>10}",
+            "actor", "steps", "steps/s", "fwd p50 ms", "env p50 ms", "pub p50 ms", "hb ms"
+        );
+        for t in threads {
+            let steps = snap.counter(&format!("actor.{t}.env_steps"));
+            let p50 = |phase: &str| {
+                snap.hist(&format!("actor.{t}.phase.{phase}")).map(|h| ms(h.p50)).unwrap_or(0.0)
+            };
+            let hb = snap
+                .gauge(&format!("actor.{t}.heartbeat_age_ms"))
+                .map(|g| g.value)
+                .unwrap_or(0.0);
+            let _ = writeln!(
+                out,
+                "{:<8} {:>12} {:>10.1} {:>12.3} {:>12.3} {:>12.3} {:>10.0}",
+                format!("#{t}"),
+                steps.map(|c| c.value).unwrap_or(0),
+                steps.map(|c| c.rate).unwrap_or(0.0),
+                p50("forward"),
+                p50("env_step"),
+                p50("publish"),
+                hb
+            );
+        }
+    }
+
+    // ---- replay stripes --------------------------------------------------
+    let stripes = indices(snap.gauges.iter().map(|g| g.name.clone()), "replay.stripe.", ".fill");
+    if !stripes.is_empty() {
+        let fills: Vec<f64> = stripes
+            .iter()
+            .map(|i| {
+                snap.gauge(&format!("replay.stripe.{i}.fill")).map(|g| g.value).unwrap_or(0.0)
+            })
+            .collect();
+        let contended: u64 = stripes
+            .iter()
+            .map(|i| {
+                snap.counter(&format!("replay.stripe.{i}.contended"))
+                    .map(|c| c.value)
+                    .unwrap_or(0)
+            })
+            .sum();
+        let min = fills.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = fills.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let _ = writeln!(
+            out,
+            "replay    {} stripes   fill min {:.0} / max {:.0}   contended pushes {}",
+            stripes.len(),
+            min,
+            max,
+            contended
+        );
+    }
+
+    // ---- supervision + kernel dispatch counters -------------------------
+    for prefix in ["supervisor.", "kernels."] {
+        let items: Vec<_> =
+            snap.counters.iter().filter(|c| c.name.starts_with(prefix)).collect();
+        if !items.is_empty() {
+            let line = items
+                .iter()
+                .map(|c| format!("{} {}", c.name, c.value))
+                .collect::<Vec<_>>()
+                .join("   ");
+            let _ = writeln!(out, "{line}");
+        }
+    }
+    out
+}
+
+/// Tail the stream at `path` (file or run dir), rendering the latest
+/// snapshot every `refresh_s` seconds. `iterations` bounds the number of
+/// render cycles (0 = until interrupted).
+pub fn run_top(path: &Path, refresh_s: f64, iterations: u64) -> Result<()> {
+    let file = resolve_stream(path);
+    let mut done = 0u64;
+    loop {
+        match latest_snapshot(&file) {
+            Ok(Some(snap)) => {
+                // clear screen + home, then the table
+                print!("\x1b[2J\x1b[H{}", render(&snap));
+                let _ = std::io::stdout().flush();
+            }
+            Ok(None) => {
+                println!("waiting for snapshots at {} …", file.display());
+            }
+            Err(e) => {
+                println!("unreadable snapshot stream {}: {e:#}", file.display());
+            }
+        }
+        done += 1;
+        if iterations != 0 && done >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs_f64(refresh_s.max(0.1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{CounterSnap, GaugeSnap, HistSnap};
+
+    fn synthetic() -> Snapshot {
+        Snapshot {
+            uptime_s: 12.5,
+            counters: vec![
+                CounterSnap { name: "actor.0.env_steps".into(), value: 4000, rate: 320.0 },
+                CounterSnap { name: "actor.1.env_steps".into(), value: 3900, rate: 310.0 },
+                CounterSnap { name: "kernels.matmat.tiled".into(), value: 77, rate: 6.0 },
+                CounterSnap { name: "learner.env_steps".into(), value: 7900, rate: 630.0 },
+                CounterSnap { name: "learner.updates".into(), value: 7900, rate: 630.0 },
+                CounterSnap { name: "replay.stripe.0.contended".into(), value: 3, rate: 0.2 },
+                CounterSnap { name: "supervisor.actor_restarts".into(), value: 1, rate: 0.0 },
+            ],
+            gauges: vec![
+                GaugeSnap { name: "actor.0.heartbeat_age_ms".into(), value: 12.0 },
+                GaugeSnap { name: "replay.stripe.0.fill".into(), value: 512.0 },
+                GaugeSnap { name: "replay.stripe.1.fill".into(), value: 480.0 },
+            ],
+            hists: vec![
+                HistSnap {
+                    name: "actor.0.phase.forward".into(),
+                    count: 100,
+                    sum: 50_000_000,
+                    p50: 400_000.0,
+                    p95: 900_000.0,
+                    p99: 1_000_000.0,
+                },
+                HistSnap {
+                    name: "learner.phase.drain".into(),
+                    count: 200,
+                    sum: 2_000_000_000,
+                    p50: 9_000_000.0,
+                    p95: 20_000_000.0,
+                    p99: 30_000_000.0,
+                },
+                HistSnap {
+                    name: "learner.phase.update_exec".into(),
+                    count: 150,
+                    sum: 6_000_000_000,
+                    p50: 30_000_000.0,
+                    p95: 60_000_000.0,
+                    p99: 80_000_000.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_covers_every_section() {
+        let table = render(&synthetic());
+        // learner line with the update:env ratio
+        assert!(table.contains("update:env 1.000"), "{table}");
+        // phase rows with share of total phase time
+        assert!(table.contains("drain"), "{table}");
+        assert!(table.contains("update_exec"), "{table}");
+        assert!(table.contains("75.0%"), "{table}");
+        // both actor threads with steps/s
+        assert!(table.contains("#0"), "{table}");
+        assert!(table.contains("#1"), "{table}");
+        assert!(table.contains("320.0"), "{table}");
+        // stripe fill + contention and the counter dumps
+        assert!(table.contains("fill min 480 / max 512"), "{table}");
+        assert!(table.contains("supervisor.actor_restarts 1"), "{table}");
+        assert!(table.contains("kernels.matmat.tiled 77"), "{table}");
+    }
+
+    #[test]
+    fn render_handles_an_empty_snapshot() {
+        let table = render(&Snapshot::default());
+        assert!(table.contains("uptime"));
+    }
+
+    #[test]
+    fn latest_snapshot_tails_the_last_line() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_top");
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("telemetry.jsonl");
+        assert!(latest_snapshot(&dir.join("missing.jsonl")).unwrap().is_none());
+        let s1 = crate::telemetry::export::snapshot_to_json(&synthetic()).to_string();
+        let mut older = synthetic();
+        older.uptime_s = 1.0;
+        let s0 = crate::telemetry::export::snapshot_to_json(&older).to_string();
+        std::fs::write(&file, format!("{s0}\n{s1}\n")).unwrap();
+        let got = latest_snapshot(&file).unwrap().unwrap();
+        assert_eq!(got.uptime_s, 12.5, "must read the newest line");
+        // directory form resolves to the conventional file name
+        assert_eq!(resolve_stream(&dir), file);
+    }
+}

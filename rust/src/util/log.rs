@@ -92,10 +92,18 @@ impl CsvLogger {
     }
 }
 
-/// Append-only JSONL writer (one `Json` per line).
+/// Append-only JSONL writer (one `Json` per line, flushed per line so
+/// tailing readers see complete records).
+///
+/// Same degradation contract as [`CsvLogger`]: telemetry output is
+/// best-effort, so the first I/O error warns once and disables the
+/// logger instead of erroring mid-run — later `write` calls are no-ops.
 pub struct JsonlLogger {
     w: BufWriter<File>,
     pub path: PathBuf,
+    disabled: bool,
+    #[cfg(test)]
+    force_fail: bool,
 }
 
 impl JsonlLogger {
@@ -104,13 +112,40 @@ impl JsonlLogger {
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
         }
-        Ok(JsonlLogger { w: BufWriter::new(File::create(&path)?), path })
+        Ok(JsonlLogger {
+            w: BufWriter::new(File::create(&path)?),
+            path,
+            disabled: false,
+            #[cfg(test)]
+            force_fail: false,
+        })
     }
 
-    pub fn write(&mut self, v: &Json) -> anyhow::Result<()> {
+    /// Has a write failure already switched this logger off?
+    pub fn is_disabled(&self) -> bool {
+        self.disabled
+    }
+
+    fn write_line(&mut self, v: &Json) -> std::io::Result<()> {
+        #[cfg(test)]
+        if self.force_fail {
+            return Err(std::io::Error::other("forced jsonl failure"));
+        }
         writeln!(self.w, "{v}")?;
-        self.w.flush()?;
-        Ok(())
+        self.w.flush()
+    }
+
+    pub fn write(&mut self, v: &Json) {
+        if self.disabled {
+            return;
+        }
+        if let Err(e) = self.write_line(v) {
+            self.disabled = true;
+            warn(&format!(
+                "jsonl logging to {} disabled after write error: {e} (run continues)",
+                self.path.display()
+            ));
+        }
     }
 }
 
@@ -167,10 +202,29 @@ mod tests {
         let dir = std::env::temp_dir().join("fastpbrl_test_jsonl");
         let path = dir.join("x.jsonl");
         let mut l = JsonlLogger::create(&path).unwrap();
-        l.write(&crate::util::json::obj(vec![("k", crate::util::json::num(3.0))]))
-            .unwrap();
+        l.write(&crate::util::json::obj(vec![("k", crate::util::json::num(3.0))]));
         let text = std::fs::read_to_string(&path).unwrap();
         let parsed = Json::parse(text.trim()).unwrap();
         assert_eq!(parsed.path("k").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn jsonl_write_failure_degrades_to_disabled_not_error() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_jsonl_degrade");
+        let path = dir.join("x.jsonl");
+        let mut l = JsonlLogger::create(&path).unwrap();
+        let line = |n: f64| crate::util::json::obj(vec![("k", crate::util::json::num(n))]);
+        l.write(&line(1.0));
+        l.force_fail = true;
+        // I/O failure: warn-once-and-disable, never an abort
+        l.write(&line(2.0));
+        assert!(l.is_disabled());
+        l.force_fail = false;
+        l.write(&line(3.0)); // no-op now
+        assert!(l.is_disabled());
+        // only the pre-failure line reached disk
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        assert!(text.contains(":1"));
     }
 }

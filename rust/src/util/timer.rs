@@ -1,99 +1,7 @@
-//! Wall-clock timing helpers.
+//! Compatibility shim: the timing helpers moved into the telemetry
+//! subsystem ([`crate::telemetry::instrument`]), where they share one
+//! abstraction with the registry-backed phase timers. This re-export
+//! keeps the historical `util::timer` path compiling (benches, examples,
+//! downstream users); new code should import from [`crate::telemetry`].
 
-use std::time::Instant;
-
-/// Scoped stopwatch.
-pub struct Stopwatch {
-    start: Instant,
-}
-
-impl Stopwatch {
-    pub fn start() -> Self {
-        Stopwatch { start: Instant::now() }
-    }
-
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    pub fn elapsed_ms(&self) -> f64 {
-        self.elapsed_s() * 1e3
-    }
-
-    pub fn restart(&mut self) -> f64 {
-        let dt = self.elapsed_s();
-        self.start = Instant::now();
-        dt
-    }
-}
-
-/// Accumulates time spent in named phases (update step, env step, sync…).
-#[derive(Default, Debug, Clone)]
-pub struct PhaseTimer {
-    phases: Vec<(String, f64, u64)>,
-}
-
-impl PhaseTimer {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn add(&mut self, phase: &str, seconds: f64) {
-        if let Some(e) = self.phases.iter_mut().find(|e| e.0 == phase) {
-            e.1 += seconds;
-            e.2 += 1;
-        } else {
-            self.phases.push((phase.to_string(), seconds, 1));
-        }
-    }
-
-    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
-        let sw = Stopwatch::start();
-        let out = f();
-        self.add(phase, sw.elapsed_s());
-        out
-    }
-
-    pub fn total(&self, phase: &str) -> f64 {
-        self.phases.iter().find(|e| e.0 == phase).map(|e| e.1).unwrap_or(0.0)
-    }
-
-    pub fn count(&self, phase: &str) -> u64 {
-        self.phases.iter().find(|e| e.0 == phase).map(|e| e.2).unwrap_or(0)
-    }
-
-    pub fn report(&self) -> String {
-        let mut out = String::new();
-        for (name, secs, n) in &self.phases {
-            out.push_str(&format!(
-                "{name}: {secs:.3}s over {n} calls ({:.3} ms/call)\n",
-                secs / (*n as f64) * 1e3
-            ));
-        }
-        out
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn stopwatch_monotone() {
-        let sw = Stopwatch::start();
-        std::thread::sleep(std::time::Duration::from_millis(5));
-        assert!(sw.elapsed_ms() >= 4.0);
-    }
-
-    #[test]
-    fn phase_timer_accumulates() {
-        let mut t = PhaseTimer::new();
-        t.add("a", 0.5);
-        t.add("a", 0.25);
-        t.add("b", 1.0);
-        assert!((t.total("a") - 0.75).abs() < 1e-12);
-        assert_eq!(t.count("a"), 2);
-        assert_eq!(t.count("missing"), 0);
-        assert!(t.report().contains("a:"));
-    }
-}
+pub use crate::telemetry::instrument::{PhaseTimer, Stopwatch};

@@ -1,0 +1,145 @@
+//! Telemetry smoke tests: a real training run with the registry enabled
+//! must emit a parseable JSONL snapshot stream with non-zero phase
+//! timers, and `fastpbrl top` must render it. The training-backed test
+//! is skipped gracefully when `make artifacts` has not run; the exporter
+//! round-trip below it runs everywhere.
+//!
+//! These tests live in their own integration binary (own process), so
+//! flipping the process-wide registry switch cannot race the library
+//! unit tests.
+
+use fastpbrl::coordinator::trainer::{NoController, Trainer, TrainerConfig};
+use fastpbrl::coordinator::trainer::Continuous;
+use fastpbrl::manifest::Manifest;
+use fastpbrl::telemetry::{self, top, TelemetryConfig};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping telemetry smoke test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn training_emits_parseable_snapshot_stream() {
+    let Some(m) = manifest() else { return };
+    let dir = std::env::temp_dir().join("fastpbrl_it_telemetry");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cfg = TrainerConfig {
+        env: "pendulum".into(),
+        algo: "td3".into(),
+        pop: 4,
+        total_updates: 200,
+        sync_every: 25,
+        warmup_steps: 100,
+        replay_capacity: 10_000,
+        seed: 42,
+        max_seconds: 120.0,
+        telemetry: TelemetryConfig {
+            enabled: true,
+            jsonl_path: dir.display().to_string(),
+            prometheus_path: dir.join("metrics.prom").display().to_string(),
+            snapshot_secs: 0.05,
+        },
+        ..TrainerConfig::default()
+    };
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
+    let summary = trainer.run(&mut NoController).unwrap();
+    assert_eq!(summary.updates, 200);
+
+    // the stream lands at the run-dir convention `fastpbrl top` uses
+    let stream = top::resolve_stream(&dir);
+    assert_eq!(stream, dir.join("telemetry.jsonl"));
+    let text = std::fs::read_to_string(&stream).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "no snapshots written");
+
+    // every line parses; the last one carries the full run
+    let snap = top::latest_snapshot(&stream).unwrap().expect("final snapshot");
+    for line in &lines {
+        fastpbrl::util::json::Json::parse(line).unwrap();
+    }
+
+    // learner counters match the run's own summary
+    let updates = snap.counter("learner.updates").expect("learner.updates");
+    assert_eq!(updates.value, summary.updates);
+    let env_steps = snap.counter("learner.env_steps").expect("learner.env_steps");
+    assert_eq!(env_steps.value, summary.env_steps);
+
+    // non-zero phase timers for the hot learner stages
+    for phase in ["drain", "sample", "upload", "update_exec", "host_sync"] {
+        let h = snap.hist(&format!("learner.phase.{phase}")).expect(phase);
+        assert!(h.count > 0, "phase {phase} never recorded");
+        assert!(h.sum > 0, "phase {phase} has zero total time");
+    }
+    // and Summary's run-local timer agrees the stage ran
+    assert!(summary.timers.total("update_exec") > 0.0);
+
+    // actor threads recorded steps and stage timings
+    let t0_steps = snap.counter("actor.0.env_steps").expect("actor.0.env_steps");
+    assert!(t0_steps.value > 0);
+    assert!(snap.hist("actor.0.phase.env_step").expect("env_step hist").count > 0);
+
+    // replay fill gauges exist (per-agent buffers count as stripes)
+    assert!(snap.gauge("replay.stripe.0.fill").is_some());
+
+    // supervision counters are registered even on a healthy run
+    assert_eq!(snap.counter("supervisor.actor_restarts").map(|c| c.value), Some(0));
+
+    // kernel dispatch counters ticked on the native actor forward path
+    let kernel_total: u64 = snap
+        .counters
+        .iter()
+        .filter(|c| c.name.starts_with("kernels."))
+        .map(|c| c.value)
+        .sum();
+    assert!(kernel_total > 0, "no kernel dispatch recorded");
+
+    // the Prometheus dump was rewritten alongside the stream
+    let prom = std::fs::read_to_string(dir.join("metrics.prom")).unwrap();
+    assert!(prom.contains("# TYPE fastpbrl_learner_updates counter"), "{prom}");
+
+    // `fastpbrl top` renders the stream
+    let table = top::render(&snap);
+    assert!(table.contains("update:env"), "{table}");
+    assert!(table.contains("update_exec"), "{table}");
+    assert!(table.contains("#0"), "{table}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Exporter round-trip against the live global registry — no artifacts
+/// needed, so CI always exercises the write/parse path.
+#[test]
+fn exporter_streams_global_registry_snapshots() {
+    let dir = std::env::temp_dir().join("fastpbrl_it_telemetry_exporter");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = TelemetryConfig {
+        enabled: true,
+        jsonl_path: dir.join("stream.jsonl").display().to_string(),
+        prometheus_path: String::new(),
+        snapshot_secs: 1000.0, // only explicit flushes write
+    };
+    telemetry::configure(&cfg);
+    let mut exporter =
+        fastpbrl::telemetry::export::Exporter::from_config(&cfg).unwrap().unwrap();
+    let c = telemetry::counter("it_exporter.events");
+    c.add(5);
+    exporter.flush();
+    c.add(2);
+    exporter.flush();
+
+    let stream = top::resolve_stream(&dir.join("stream.jsonl"));
+    let snap = top::latest_snapshot(&stream).unwrap().expect("snapshot");
+    let got = snap.counter("it_exporter.events").expect("counter in stream");
+    assert_eq!(got.value, 7);
+    let text = std::fs::read_to_string(&stream).unwrap();
+    assert_eq!(text.lines().count(), 2, "one line per flush");
+    let _ = std::fs::remove_dir_all(&dir);
+}
