@@ -36,7 +36,8 @@ use crate::data::supervisor::{RestartDecision, RestartPolicy, RestartTracker};
 use crate::manifest::{Artifact, Dtype, Manifest};
 use crate::replay::{PixelReplayBuffer, RatioGate, Replay, ReplayBuffer, ShardedReplay, Staging};
 use crate::runtime::checkpoint::{Checkpoint, CheckpointLineage};
-use crate::runtime::Runtime;
+use crate::runtime::runstate::{RunState, RUN_STATE_SCHEMA};
+use crate::runtime::{classify_fault, watchdog, FaultKind, Runtime, TrainState};
 use crate::telemetry::{self, export::Exporter, PhaseRecorder, PhaseTimer, RunCounter,
                        TelemetryConfig};
 use crate::util::log::{self, CsvLogger};
@@ -115,6 +116,16 @@ pub struct TrainerConfig {
     /// Per-member health scan: |param| above this is a norm explosion
     /// (0 = magnitude check off; NaN/Inf are always faults).
     pub health_norm_limit: f64,
+    /// Transient PJRT dispatch failures (`FaultKind::Retryable`) retried
+    /// per call site before the error propagates (0 = no retries).
+    pub runtime_retries: u32,
+    /// Backoff before the first runtime retry, in milliseconds; doubles
+    /// per attempt within a call site.
+    pub runtime_retry_backoff_ms: u64,
+    /// Device-loss recoveries (`FaultKind::DeviceLost` → rebuild the
+    /// runtime, re-load executables, re-upload the host mirror) allowed
+    /// per run before the fault propagates (0 = never recover).
+    pub max_device_restarts: u32,
     /// Live-metrics switches: registry on/off, JSONL snapshot stream,
     /// Prometheus dump (see [`crate::telemetry`]). Off by default.
     pub telemetry: TelemetryConfig,
@@ -155,6 +166,9 @@ impl Default for TrainerConfig {
             restart_backoff_ms: 100,
             stall_timeout_ms: 5_000,
             health_norm_limit: 1e6,
+            runtime_retries: 3,
+            runtime_retry_backoff_ms: 100,
+            max_device_restarts: 2,
             telemetry: TelemetryConfig::off(),
             #[cfg(feature = "fault-inject")]
             fault_plan: None,
@@ -272,6 +286,51 @@ impl TrainerConfig {
     pub fn with_health_norm_limit(mut self, limit: f64) -> Self {
         self.health_norm_limit = limit;
         self
+    }
+
+    pub fn with_runtime_retries(mut self, n: u32) -> Self {
+        self.runtime_retries = n;
+        self
+    }
+
+    pub fn with_runtime_retry_backoff_ms(mut self, ms: u64) -> Self {
+        self.runtime_retry_backoff_ms = ms;
+        self
+    }
+
+    pub fn with_max_device_restarts(mut self, n: u32) -> Self {
+        self.max_device_restarts = n;
+        self
+    }
+
+    /// Stable fingerprint of the run-defining fields — what `run.json`
+    /// records so a watchdog restart (or an operator pointing a new
+    /// launch at an old run dir) can tell "same run" from "different
+    /// run wearing the same checkpoint path". Paths and output knobs
+    /// (CSV, telemetry) are deliberately excluded: moving the logs does
+    /// not change what is being trained.
+    pub fn config_digest(&self) -> String {
+        let canon = format!(
+            "algo={} env={} pop={} num_steps={:?} total_updates={} sync_every={} \
+             warmup={} replay_capacity={} ratio={} ratio_slack={} shared_replay={} \
+             replay_shards={} actor_threads={} seed={} hypers={}",
+            self.algo,
+            self.env,
+            self.pop,
+            self.num_steps,
+            self.total_updates,
+            self.sync_every,
+            self.warmup_steps,
+            self.replay_capacity,
+            self.ratio,
+            self.ratio_slack,
+            self.shared_replay,
+            self.replay_shards,
+            self.n_actor_threads,
+            self.seed,
+            self.hyper_spec.is_some(),
+        );
+        crate::runtime::runstate::fnv1a_hex(canon.as_bytes())
     }
 
     pub fn with_telemetry(mut self, telemetry: TelemetryConfig) -> Self {
@@ -521,6 +580,12 @@ pub struct Summary {
     pub stalled_actors: u64,
     /// Quarantined members repaired in place from a healthy donor.
     pub members_repaired: u64,
+    /// Transient PJRT dispatch failures absorbed by bounded retry.
+    pub runtime_retries: u64,
+    /// Device-loss recoveries performed in place (runtime rebuilt,
+    /// executable re-loaded, population re-uploaded from the host
+    /// mirror).
+    pub device_restarts: u64,
     /// Ingest stripes behind the shared replay buffer (1 = unsharded
     /// or per-agent buffers).
     pub replay_shards: usize,
@@ -530,6 +595,14 @@ pub struct Summary {
     /// Largest live length across replay stripes when the run ended.
     pub stripe_max_fill: usize,
     pub timers: PhaseTimer,
+}
+
+/// Run-local runtime-fault counters, mirrored into the registry through
+/// one bump site each (the same pattern as the supervision counters) so
+/// Summary and the exported `runtime.*` metrics cannot drift apart.
+struct RecoveryCounters {
+    retries: RunCounter,
+    device_restarts: RunCounter,
 }
 
 /// The population trainer, generic over its [`Domain`] — one learner
@@ -553,6 +626,16 @@ pub struct Trainer<D: Domain> {
     staging: Staging,
     /// Rotated checkpoint history (None when checkpointing is off).
     lineage: Option<CheckpointLineage>,
+    /// Run dir (the checkpoint base's parent) where `run.json` and the
+    /// watchdog heartbeat live; `None` when checkpointing is off.
+    run_dir: Option<std::path::PathBuf>,
+    /// Did construction restore from the checkpoint lineage? Gates the
+    /// fault-inject process abort to the run's first incarnation (and
+    /// lets callers tell a resumed incarnation from a fresh start).
+    pub resumed: bool,
+    /// One fired-flag per planned device error, so each fires once.
+    #[cfg(feature = "fault-inject")]
+    device_faults_fired: Vec<bool>,
     _domain: PhantomData<D>,
 }
 
@@ -640,6 +723,15 @@ impl<D: Domain> Trainer<D> {
         } else {
             Some(CheckpointLineage::new(&cfg.checkpoint_path, cfg.keep_checkpoints))
         };
+        let run_dir = if cfg.checkpoint_path.is_empty() {
+            None
+        } else {
+            let p = std::path::Path::new(&cfg.checkpoint_path);
+            Some(match p.parent() {
+                Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+                _ => std::path::PathBuf::from("."),
+            })
+        };
         let mut trainer = Trainer {
             cfg,
             rt,
@@ -651,8 +743,21 @@ impl<D: Domain> Trainer<D> {
             rng,
             staging,
             lineage,
+            run_dir,
+            resumed: false,
+            #[cfg(feature = "fault-inject")]
+            device_faults_fired: Vec::new(),
             _domain: PhantomData,
         };
+        #[cfg(feature = "fault-inject")]
+        {
+            trainer.device_faults_fired = trainer
+                .cfg
+                .fault_plan
+                .as_ref()
+                .map(|p| vec![false; p.device_errors.len()])
+                .unwrap_or_default();
+        }
         // Auto-resume: restore the newest checkpoint in the lineage that
         // loads (magic + hash), matches this artifact, AND passes a
         // member health scan — a checkpoint of a diverged population is
@@ -672,11 +777,48 @@ impl<D: Domain> Trainer<D> {
                 trainer.population.train_state =
                     c.restore(&trainer.rt, &trainer.population.artifact)?;
                 trainer.population.view.publish(c.state);
+                trainer.resumed = true;
                 log::info(&format!(
                     "resumed from {} at {} updates",
                     path.display(),
                     c.updates_done
                 ));
+            }
+        }
+        // Durable run state: record this run's identity (argv, lineage
+        // base, seed, config digest) in the run dir so a watchdog restart
+        // reconstructs the exact run instead of trusting its remembered
+        // command line. A run dir already claimed by a *different*
+        // config gets a warning before the record is replaced — the
+        // operator may be about to resume someone else's lineage.
+        if let Some(dir) = trainer.run_dir.clone() {
+            let digest = trainer.cfg.config_digest();
+            match RunState::load(&dir) {
+                Ok(Some(prev)) if prev.config_digest != digest => log::warn(&format!(
+                    "run.json in {} was written by a different config \
+                     (digest {} vs {}); replacing the record — if this was \
+                     unintentional, this run dir belongs to another run",
+                    dir.display(),
+                    prev.config_digest,
+                    digest
+                )),
+                Ok(_) => {}
+                Err(e) => log::warn(&format!(
+                    "unreadable run.json in {} ({e:#}); rewriting it",
+                    dir.display()
+                )),
+            }
+            let rs = RunState {
+                schema: RUN_STATE_SCHEMA,
+                argv: std::env::args().collect(),
+                checkpoint_base: trainer.cfg.checkpoint_path.clone(),
+                seed: trainer.cfg.seed,
+                config_digest: digest,
+            };
+            if let Err(e) = rs.save(&dir) {
+                // best-effort like the CSV/telemetry writers: a read-only
+                // run dir degrades durability, never aborts training
+                log::warn(&format!("could not write run.json ({e:#}); continuing"));
             }
         }
         Ok(trainer)
@@ -757,13 +899,138 @@ impl<D: Domain> Trainer<D> {
         Ok(())
     }
 
-    /// Run the full loop with the given controller.
+    /// Rebuild the PJRT layer in place after a device loss: fresh
+    /// client, re-compiled executable, and train state re-uploaded from
+    /// the host mirror the actors read. The mirror was last published at
+    /// the previous sync, so updates executed since then are rolled back
+    /// — bounded by `sync_every`, the same loss a process restart from
+    /// the checkpoint lineage would take.
+    fn recover_runtime(&mut self) -> anyhow::Result<()> {
+        let art = self.population.artifact.clone();
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(&art)?;
+        let host = self.population.view.with(|h| h.to_vec());
+        let updates_done = self.population.train_state.updates_done;
+        let mut ts = TrainState::from_host(&rt, &art, &host)?;
+        ts.updates_done = updates_done;
+        self.population.train_state = ts;
+        self.exe = exe;
+        self.rt = rt;
+        Ok(())
+    }
+
+    /// React to a failed runtime call according to its [`FaultKind`]:
+    /// `Ok(())` means "handled, try the call again" (after a backoff
+    /// sleep or an in-place device recovery); `Err` propagates faults
+    /// that are fatal or out of budget.
+    fn handle_runtime_fault(
+        &mut self,
+        what: &str,
+        e: anyhow::Error,
+        attempt: &mut u32,
+        recovery: &mut RecoveryCounters,
+    ) -> anyhow::Result<()> {
+        match classify_fault(&format!("{e:#}")) {
+            FaultKind::Retryable if *attempt < self.cfg.runtime_retries => {
+                let backoff_ms = self
+                    .cfg
+                    .runtime_retry_backoff_ms
+                    .max(1)
+                    .saturating_mul(1u64 << (*attempt).min(16));
+                *attempt += 1;
+                recovery.retries.bump(1);
+                log::warn(&format!(
+                    "{what}: transient PJRT failure ({e:#}); retry {}/{} in {backoff_ms} ms",
+                    attempt, self.cfg.runtime_retries
+                ));
+                std::thread::sleep(std::time::Duration::from_millis(backoff_ms));
+                Ok(())
+            }
+            FaultKind::DeviceLost
+                if recovery.device_restarts.get() < self.cfg.max_device_restarts as u64 =>
+            {
+                recovery.device_restarts.bump(1);
+                log::warn(&format!(
+                    "{what}: device lost ({e:#}); rebuilding the PJRT runtime and \
+                     re-uploading the population from the host mirror \
+                     (device restart {}/{}; updates since the last publish roll back)",
+                    recovery.device_restarts.get(),
+                    self.cfg.max_device_restarts
+                ));
+                self.recover_runtime().map_err(|re| {
+                    anyhow::anyhow!("device-loss recovery failed: {re:#} (original fault: {e:#})")
+                })?;
+                // fresh retry budget against the rebuilt runtime
+                *attempt = 0;
+                Ok(())
+            }
+            _ => Err(e),
+        }
+    }
+
+    /// Drive one update-step execution through the fault-classification
+    /// wrapper (retry transient, rebuild on device loss, propagate the
+    /// rest). `updates` is the loop's progress count, used only by the
+    /// fault-inject device-error plan.
+    fn step_with_recovery(
+        &mut self,
+        timers: &mut PhaseRecorder,
+        recovery: &mut RecoveryCounters,
+        updates: u64,
+    ) -> anyhow::Result<()> {
+        #[cfg(not(feature = "fault-inject"))]
+        let _ = updates;
+        let mut attempt = 0u32;
+        loop {
+            #[cfg(feature = "fault-inject")]
+            if let Some(e) = self.take_injected_device_fault(updates) {
+                self.handle_runtime_fault("update step", e, &mut attempt, recovery)?;
+                continue;
+            }
+            match self.upload_and_step(timers) {
+                Ok(()) => return Ok(()),
+                Err(e) => self.handle_runtime_fault("update step", e, &mut attempt, recovery)?,
+            }
+        }
+    }
+
+    /// Download the population to host through the same
+    /// fault-classification wrapper as the update step. After a
+    /// device-loss recovery the re-run download returns the re-uploaded
+    /// mirror — exactly the state the actors already hold.
+    fn sync_with_recovery(&mut self, recovery: &mut RecoveryCounters) -> anyhow::Result<Vec<f32>> {
+        let mut attempt = 0u32;
+        loop {
+            match self.population.sync_to_host() {
+                Ok(host) => return Ok(host),
+                Err(e) => self.handle_runtime_fault("host sync", e, &mut attempt, recovery)?,
+            }
+        }
+    }
+
+    /// One planned device error whose update threshold is crossed and
+    /// which has not fired yet, as the error the runtime would surface.
+    #[cfg(feature = "fault-inject")]
+    fn take_injected_device_fault(&mut self, updates: u64) -> Option<anyhow::Error> {
+        let plan = self.cfg.fault_plan.clone()?;
+        for (i, &at) in plan.device_errors.iter().enumerate() {
+            if updates >= at && !self.device_faults_fired[i] {
+                self.device_faults_fired[i] = true;
+                return Some(anyhow::anyhow!(
+                    "fault-inject: simulated device loss at {updates} updates (DEVICE_LOST)"
+                ));
+            }
+        }
+        None
+    }
+
     /// Live length of every replay stripe: per-agent buffers count as
     /// one stripe each, a [`ShardedReplay`] reports each stripe.
     fn stripe_lens(&self) -> Vec<usize> {
         self.replays.iter().flat_map(|r| r.stripe_lens()).collect()
     }
 
+    /// Run the full loop with the given controller.
     pub fn run(&mut self, controller: &mut dyn Controller) -> anyhow::Result<Summary> {
         let art = self.population.artifact.clone();
         let k = art.num_steps as u64;
@@ -825,6 +1092,10 @@ impl<D: Domain> Trainer<D> {
         let mut stall_events = RunCounter::new(telemetry::counter("supervisor.stall_events"));
         let mut members_repaired =
             RunCounter::new(telemetry::counter("supervisor.members_repaired"));
+        let mut recovery = RecoveryCounters {
+            retries: RunCounter::new(telemetry::counter("runtime.retries")),
+            device_restarts: RunCounter::new(telemetry::counter("runtime.device_restarts")),
+        };
         let mut stalled_flags = vec![false; pool.threads()];
         let hb_gauges: Vec<telemetry::Gauge> = (0..pool.threads())
             .map(|t| telemetry::gauge(&format!("actor.{t}.heartbeat_age_ms")))
@@ -841,6 +1112,15 @@ impl<D: Domain> Trainer<D> {
         let mut updates: u64 = 0;
         let mut episodes: u64 = 0;
         let mut since_sync: u64 = 0;
+        // Watchdog liveness: touch the heartbeat at launch (so startup
+        // is never mistaken for a stall), then from the loop every
+        // HEARTBEAT_INTERVAL_SECS and at every sync point. A wedged
+        // device call freezes the loop and therefore the heartbeat —
+        // exactly the condition the watchdog must catch.
+        if let Some(dir) = &self.run_dir {
+            let _ = watchdog::touch_heartbeat(dir, 0);
+        }
+        let mut last_heartbeat = Instant::now();
         let result = (|| -> anyhow::Result<()> {
             while updates < self.cfg.total_updates {
                 if self.cfg.max_seconds > 0.0
@@ -938,7 +1218,7 @@ impl<D: Domain> Trainer<D> {
                         let _sample = timers.span("sample");
                         self.fill_batches();
                     }
-                    self.upload_and_step(&mut timers)?;
+                    self.step_with_recovery(&mut timers, &mut recovery, updates)?;
                     self.gate.on_update_steps(k);
                     throttle.updates.fetch_add(k, std::sync::atomic::Ordering::Relaxed);
                     updates += k;
@@ -963,7 +1243,7 @@ impl<D: Domain> Trainer<D> {
                     since_sync = 0;
                     let mut host = {
                         let _sync = timers.span("host_sync");
-                        self.population.sync_to_host()?
+                        self.sync_with_recovery(&mut recovery)?
                     };
                     // fault injection: simulate a member diverging by the
                     // time this sync observes the state (fires once per
@@ -1036,6 +1316,26 @@ impl<D: Domain> Trainer<D> {
                         // so resume can always reach a pre-divergence state
                         self.lineage.as_mut().unwrap().save(&c, scan_clean)?;
                     }
+                    if let Some(dir) = &self.run_dir {
+                        let _ = watchdog::touch_heartbeat(dir, updates);
+                        last_heartbeat = Instant::now();
+                    }
+                    // fault injection: kill the whole process at a sync
+                    // point so the watchdog restart path can be proven
+                    // end to end. Fires after the checkpoint save (the
+                    // lineage holds this sync's state) and only in a
+                    // first-incarnation run — the restarted process
+                    // resumes instead of re-dying.
+                    #[cfg(feature = "fault-inject")]
+                    if let Some(at) = self.cfg.fault_plan.as_ref().and_then(|p| p.process_abort) {
+                        if !self.resumed && self.population.train_state.updates_done >= at {
+                            log::warn(&format!(
+                                "fault-inject: planned process abort at {} updates (sync point)",
+                                self.population.train_state.updates_done
+                            ));
+                            std::process::abort();
+                        }
+                    }
                     // One stripe-length walk per sync feeds both the
                     // per-stripe fill gauges and the CSV min/max columns
                     // (same source, so the two views cannot drift).
@@ -1084,6 +1384,14 @@ impl<D: Domain> Trainer<D> {
                         csv.flush()?;
                     }
                 }
+                if let Some(dir) = &self.run_dir {
+                    if last_heartbeat.elapsed().as_secs_f64()
+                        >= watchdog::HEARTBEAT_INTERVAL_SECS
+                    {
+                        let _ = watchdog::touch_heartbeat(dir, updates);
+                        last_heartbeat = Instant::now();
+                    }
+                }
                 if let Some(e) = exporter.as_mut() {
                     e.tick();
                 }
@@ -1120,6 +1428,8 @@ impl<D: Domain> Trainer<D> {
             actor_restarts: actor_restarts.get(),
             stalled_actors: stall_events.get(),
             members_repaired: members_repaired.get(),
+            runtime_retries: recovery.retries.get(),
+            device_restarts: recovery.device_restarts.get(),
             replay_shards: self.actor_sinks.len().max(1),
             stripe_min_fill: stripe_lens.iter().copied().min().unwrap_or(0),
             stripe_max_fill: stripe_lens.iter().copied().max().unwrap_or(0),
@@ -1196,6 +1506,9 @@ mod tests {
             .with_restart_backoff_ms(250)
             .with_stall_timeout_ms(1234)
             .with_health_norm_limit(1e5)
+            .with_runtime_retries(7)
+            .with_runtime_retry_backoff_ms(42)
+            .with_max_device_restarts(4)
             .with_telemetry(TelemetryConfig::jsonl("t.jsonl"));
         assert_eq!(cfg.algo, "dqn");
         assert_eq!(cfg.env, "minatar");
@@ -1219,6 +1532,9 @@ mod tests {
         assert_eq!(cfg.restart_backoff_ms, 250);
         assert_eq!(cfg.stall_timeout_ms, 1234);
         assert!((cfg.health_norm_limit - 1e5).abs() < 1e-9);
+        assert_eq!(cfg.runtime_retries, 7);
+        assert_eq!(cfg.runtime_retry_backoff_ms, 42);
+        assert_eq!(cfg.max_device_restarts, 4);
         assert!(cfg.telemetry.is_on());
         assert_eq!(cfg.telemetry.jsonl_path, "t.jsonl");
         // the config is Clone + Debug (sweeps copy it, tests print it)
@@ -1270,6 +1586,28 @@ mod tests {
         let mut host = vec![0.07f32, 0.09];
         assert!(!Pixel::prepare_host(&art, &cfg, &mut host));
         assert_eq!(host, vec![0.07, 0.09]);
+    }
+
+    #[test]
+    fn config_digest_tracks_run_identity_not_output_paths() {
+        let base = TrainerConfig::new("td3", "pendulum").with_pop(4).with_seed(7);
+        let same = base.clone();
+        assert_eq!(base.config_digest(), same.config_digest());
+        // run-defining fields change the digest
+        assert_ne!(base.config_digest(), base.clone().with_seed(8).config_digest());
+        assert_ne!(base.config_digest(), base.clone().with_pop(8).config_digest());
+        assert_ne!(base.config_digest(), base.clone().with_updates(99).config_digest());
+        // output/robustness knobs do not — moving the logs or tuning the
+        // retry budget is still the same run
+        assert_eq!(
+            base.config_digest(),
+            base.clone().with_csv("elsewhere.csv").config_digest()
+        );
+        assert_eq!(
+            base.config_digest(),
+            base.clone().with_runtime_retries(9).config_digest()
+        );
+        assert_eq!(base.config_digest().len(), 16);
     }
 
     #[test]

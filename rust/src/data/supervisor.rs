@@ -221,6 +221,19 @@ pub struct FaultPlan {
     /// `(member, update)`: NaN-poison that member's params once the
     /// learner passes that many updates.
     pub nan_members: Vec<(usize, u64)>,
+    /// Absolute update counts at which the learner's next update-step
+    /// execution reports a simulated PJRT device loss (each threshold
+    /// fires once per trainer; the message classifies as
+    /// `FaultKind::DeviceLost`, exercising the rebuild-and-re-upload
+    /// recovery path in place).
+    pub device_errors: Vec<u64>,
+    /// `abort()` the whole trainer process at the first sync point whose
+    /// absolute update count reaches this threshold. Fires only in a
+    /// trainer that did NOT resume from a checkpoint (the run's first
+    /// incarnation), mirroring the generation-0 gating of actor faults:
+    /// the watchdog-restarted process proves the recovery path instead
+    /// of re-dying forever.
+    pub process_abort: Option<u64>,
 }
 
 #[cfg(feature = "fault-inject")]
@@ -334,6 +347,7 @@ mod tests {
             actor_panics: vec![(0, 5)],
             actor_stalls: vec![(1, 2, 1)],
             nan_members: vec![(2, 100), (0, 50)],
+            ..FaultPlan::default()
         };
         // wrong thread/iteration: no panic
         plan.actor_tick(0, 4, 0);

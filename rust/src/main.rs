@@ -8,6 +8,8 @@
 //!   cemrl  ...                 CEM-RL with the shared critic (§5.2)
 //!   dvd    ...                 DvD diversity training (§5.3)
 //!   top    <run-dir|jsonl>     live per-member/per-phase telemetry table
+//!   watchdog -- <train args>   supervise a trainer: restart on crash/stall,
+//!                              resuming from the checkpoint lineage
 //!   report ...                 plot results CSVs in the terminal
 
 use fastpbrl::coordinator::cem::{run_cemrl, CemRlConfig};
@@ -38,10 +40,11 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "dvd" => dvd(rest),
         "report" => report(rest),
         "top" => top(rest),
+        "watchdog" => watchdog(rest),
         _ => {
             println!(
                 "fastpbrl — Fast Population-Based RL on a Single Machine (ICML 2022)\n\n\
-                 Usage: fastpbrl <list|train|cemrl|dvd|top|report> [options]\n\
+                 Usage: fastpbrl <list|train|cemrl|dvd|top|watchdog|report> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -69,6 +72,112 @@ fn top(argv: &[String]) -> anyhow::Result<()> {
         args.get_f64("refresh")?,
         args.get_u64("iterations")?,
     )
+}
+
+/// The run dir the child trainer will use, derived from its
+/// `--checkpoint` argument — the watchdog and the trainer must agree on
+/// where `run.json`, the heartbeat, and the telemetry stream live.
+fn checkpoint_run_dir(child_args: &[String]) -> Option<std::path::PathBuf> {
+    let mut ckpt: Option<&str> = None;
+    let mut i = 0;
+    while i < child_args.len() {
+        let a = &child_args[i];
+        if let Some(v) = a.strip_prefix("--checkpoint=") {
+            ckpt = Some(v);
+        } else if a == "--checkpoint" {
+            ckpt = child_args.get(i + 1).map(|s| s.as_str());
+            i += 1;
+        }
+        i += 1;
+    }
+    let ckpt = ckpt.filter(|s| !s.is_empty())?;
+    let p = std::path::Path::new(ckpt);
+    Some(match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    })
+}
+
+/// Out-of-process supervision: spawn the trainer as a child, restart it
+/// on crash or stall; each restart auto-resumes from the checkpoint
+/// lineage's `last_good`.
+fn watchdog(argv: &[String]) -> anyhow::Result<()> {
+    use fastpbrl::runtime::watchdog::{run_watchdog, WatchdogConfig, WatchdogOutcome};
+    let cli = Cli::new(
+        "fastpbrl watchdog",
+        "supervise a trainer: restart on crash or stall, resuming from the \
+         checkpoint lineage\n\
+         (usage: fastpbrl watchdog [opts] -- train --checkpoint <path> ...)",
+    )
+    .opt("max-process-restarts", "5", "restart budget before giving up")
+    .opt("backoff-ms", "1000", "base restart backoff (doubles per restart)")
+    .opt("backoff-cap-ms", "60000", "restart backoff cap")
+    .opt(
+        "heartbeat-timeout-secs",
+        "120",
+        "kill a child silent for this long (0 = watch exit status only)",
+    )
+    .opt(
+        "crash-loop-window-secs",
+        "10",
+        "failures this soon after launch count toward the crash-loop streak",
+    )
+    .opt(
+        "crash-loop-threshold",
+        "3",
+        "consecutive fast failures before giving up permanently (0 = off)",
+    )
+    .opt("poll-ms", "200", "child liveness poll interval");
+    let sep = argv.iter().position(|a| a == "--");
+    let (own, child) = match sep {
+        Some(i) => (&argv[..i], &argv[i + 1..]),
+        None => (&argv[..], &[][..]),
+    };
+    // `Cli::parse` reports --help as an error (exit code 1); the watchdog
+    // is scripted (CI smokes it), so its --help must exit 0.
+    if own.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    anyhow::ensure!(
+        !child.is_empty(),
+        "watchdog needs a child command after `--`, e.g.:\n  \
+         fastpbrl watchdog -- train --algo td3 --checkpoint runs/a/ckpt.bin"
+    );
+    let args = cli.parse(own)?;
+    let run_dir = checkpoint_run_dir(child).ok_or_else(|| {
+        anyhow::anyhow!(
+            "the child command must carry --checkpoint <path>: restarts resume from \
+             the lineage, and its parent dir hosts run.json and the heartbeat file"
+        )
+    })?;
+    let cfg = WatchdogConfig {
+        program: std::env::current_exe()?,
+        args: child.to_vec(),
+        run_dir,
+        max_process_restarts: args.get_u32("max-process-restarts")?,
+        backoff_base_ms: args.get_u64("backoff-ms")?,
+        backoff_cap_ms: args.get_u64("backoff-cap-ms")?,
+        heartbeat_timeout_secs: args.get_f64("heartbeat-timeout-secs")?,
+        crash_loop_window_secs: args.get_f64("crash-loop-window-secs")?,
+        crash_loop_threshold: args.get_u32("crash-loop-threshold")?,
+        poll_ms: args.get_u64("poll-ms")?,
+        ..WatchdogConfig::default()
+    };
+    let report = run_watchdog(&cfg)?;
+    match report.outcome {
+        WatchdogOutcome::Completed => Ok(()),
+        WatchdogOutcome::BudgetExhausted => anyhow::bail!(
+            "trainer kept failing after {} restart(s); last failure: {}",
+            report.restarts,
+            report.last_failure.unwrap_or_default()
+        ),
+        WatchdogOutcome::CrashLoop => anyhow::bail!(
+            "crash loop — the trainer dies within seconds of every launch; \
+             last failure: {}",
+            report.last_failure.unwrap_or_default()
+        ),
+    }
 }
 
 /// Render results CSVs as terminal charts (Fig 5/6-style curves).
@@ -197,6 +306,14 @@ fn trainer_config_from(args: &fastpbrl::util::cli::Args, algo: &str)
             file.get_u64("train.stall_timeout_ms", cfg.stall_timeout_ms)?;
         cfg.health_norm_limit =
             file.get_f64("train.health_norm_limit", cfg.health_norm_limit)?;
+        // runtime-recovery knobs (transient-fault retries + device-loss
+        // rebuild budget; see runtime::classify_fault)
+        cfg.runtime_retries =
+            file.get_u64("train.runtime_retries", cfg.runtime_retries as u64)? as u32;
+        cfg.runtime_retry_backoff_ms =
+            file.get_u64("train.runtime_retry_backoff_ms", cfg.runtime_retry_backoff_ms)?;
+        cfg.max_device_restarts =
+            file.get_u64("train.max_device_restarts", cfg.max_device_restarts as u64)? as u32;
         // telemetry knobs (--telemetry sets the JSONL path; the file can
         // flip the switch alone, tune cadence, or add a Prometheus dump)
         cfg.telemetry.enabled =
@@ -261,6 +378,12 @@ fn train(argv: &[String]) -> anyhow::Result<()> {
         info(&format!(
             "supervision: {} actor restarts, {} stall events, {} members repaired",
             summary.actor_restarts, summary.stalled_actors, summary.members_repaired
+        ));
+    }
+    if summary.runtime_retries > 0 || summary.device_restarts > 0 {
+        info(&format!(
+            "runtime recovery: {} transient retries, {} device restarts",
+            summary.runtime_retries, summary.device_restarts
         ));
     }
     print!("{}", summary.timers.report());

@@ -159,8 +159,36 @@ impl CheckpointLineage {
     /// instead of overwriting history.
     pub fn new(base: impl Into<std::path::PathBuf>, keep_last: usize) -> CheckpointLineage {
         let base = base.into();
+        Self::sweep_tmp(&base);
         let next_seq = Self::sequence(&base).first().map_or(0, |&(s, _)| s + 1);
         CheckpointLineage { base, keep_last: keep_last.max(1), next_seq }
+    }
+
+    /// Remove write-crash leftovers next to the lineage: `<stem>.tmp` (a
+    /// torn `Checkpoint::save`), `<stem>.mirror.tmp` (a torn base
+    /// mirror), `<stem>.last_good.tmp` (a torn pointer write). Every
+    /// writer in this module renames its temp file over the target, so
+    /// any `<stem>*.tmp` that survives to the next open is garbage by
+    /// construction — never data. A partially-written *generation*
+    /// (`<stem>.<seq>` with a bad hash) is left in place: `resume`
+    /// already skips it, and deleting it would renumber history.
+    fn sweep_tmp(base: &Path) {
+        let Some(stem) = base.file_name().and_then(|n| n.to_str()) else { return };
+        let dir = if base.parent().is_none_or(|p| p.as_os_str().is_empty()) {
+            Path::new(".")
+        } else {
+            base.parent().unwrap()
+        };
+        let prefix = format!("{stem}.");
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.starts_with(&prefix) && name.ends_with(".tmp") {
+                eprintln!("[checkpoint] sweeping stale temp file {}", e.path().display());
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
     }
 
     /// All `<base>.<seq>` generations on disk, newest first.
@@ -475,6 +503,76 @@ mod tests {
             CheckpointLineage::last_good_target(&base).unwrap(),
             base.with_file_name("ckpt.bin.3")
         );
+    }
+
+    /// Opening a lineage sweeps every `<stem>*.tmp` crash leftover —
+    /// torn checkpoint, torn mirror, torn pointer — while sparing
+    /// unrelated files and real generations.
+    #[test]
+    fn new_sweeps_stale_tmp_leftovers() {
+        let dir = lineage_dir("sweep");
+        let base = dir.join("ckpt.bin");
+        let mut lin = CheckpointLineage::new(&base, 3);
+        lin.save(&ckpt_at(1), true).unwrap();
+        drop(lin);
+        let stale = [
+            dir.join("ckpt.bin.tmp"),
+            dir.join("ckpt.bin.mirror.tmp"),
+            dir.join("ckpt.bin.last_good.tmp"),
+        ];
+        for p in &stale {
+            std::fs::write(p, b"torn write from a crashed process").unwrap();
+        }
+        let unrelated = dir.join("other.tmp");
+        std::fs::write(&unrelated, b"not ours").unwrap();
+        let mut lin = CheckpointLineage::new(&base, 3);
+        for p in &stale {
+            assert!(!p.exists(), "{} must be swept", p.display());
+        }
+        assert!(unrelated.exists(), "files outside the lineage namespace are untouched");
+        // the real generation and pointer survived the sweep
+        assert!(dir.join("ckpt.bin.0").exists());
+        assert_eq!(
+            CheckpointLineage::last_good_target(&base).unwrap(),
+            base.with_file_name("ckpt.bin.0")
+        );
+        // and saving still works (numbering unaffected by the sweep)
+        let p = lin.save(&ckpt_at(2), true).unwrap();
+        assert!(p.to_string_lossy().ends_with("ckpt.bin.1"));
+    }
+
+    /// A generation whose write was cut mid-file (crash between
+    /// `File::create` of the final name's temp and the rename — or a
+    /// torn copy made by an operator) is skipped by `resume`, and a
+    /// reopened lineage keeps numbering *after* it rather than reusing
+    /// its sequence number.
+    #[test]
+    fn resume_skips_torn_newest_generation_and_numbering_continues() {
+        let dir = lineage_dir("torn_gen");
+        let base = dir.join("ckpt.bin");
+        let mut lin = CheckpointLineage::new(&base, 4);
+        lin.save(&ckpt_at(1), true).unwrap();
+        lin.save(&ckpt_at(2), true).unwrap();
+        drop(lin);
+        // fabricate a partially-written newest generation: the first
+        // half of a valid checkpoint's bytes under the next seq name
+        let good = std::fs::read(dir.join("ckpt.bin.1")).unwrap();
+        std::fs::write(dir.join("ckpt.bin.2"), &good[..good.len() / 2]).unwrap();
+        // resume skips the torn .2 and lands on the intact .1
+        let (path, c) = CheckpointLineage::resume(&base, |_| true).expect("resumes");
+        assert!(path.to_string_lossy().ends_with("ckpt.bin.1"));
+        assert_eq!(c.updates_done, 2);
+        // a reopened lineage continues after the torn generation: the
+        // next save must land on .3, never overwrite .2's number
+        let mut lin = CheckpointLineage::new(&base, 4);
+        let p = lin.save(&ckpt_at(9), true).unwrap();
+        assert!(p.to_string_lossy().ends_with("ckpt.bin.3"), "{}", p.display());
+        assert_eq!(Checkpoint::load(&base).unwrap().updates_done, 9);
+        let seqs: Vec<u64> = CheckpointLineage::sequence(&base)
+            .into_iter()
+            .map(|(s, _)| s)
+            .collect();
+        assert_eq!(seqs, vec![3, 2, 1, 0]);
     }
 
     #[test]

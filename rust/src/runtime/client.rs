@@ -7,10 +7,79 @@
 //! otherwise reject).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::manifest::{Artifact, BatchInput, Dtype};
 use crate::telemetry::Stopwatch;
+
+/// How a PJRT/XLA failure should be handled by the training loop.
+///
+/// Classification is by message inspection: the PJRT C API surfaces
+/// faults as status strings (canonical gRPC-style codes plus prose), and
+/// the bindings forward them verbatim, so the strings are the only
+/// portable signal. [`classify_fault`] sorts them into three buckets the
+/// trainer's recovery wrapper acts on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient dispatch failure (queue pressure, allocator pressure,
+    /// scheduler hiccup) — worth a bounded retry with backoff against
+    /// the same runtime.
+    Retryable,
+    /// The device (or its runtime) is gone or wedged in an error state —
+    /// retrying the same handle cannot help. Rebuild the [`Runtime`],
+    /// re-load the executable cache, re-upload state from the host
+    /// mirror, and resume in place.
+    DeviceLost,
+    /// Programming or environment error (shape mismatch, missing
+    /// artifact, unsupported op) — propagate; a retry would just fail
+    /// identically.
+    Fatal,
+}
+
+/// Sort a PJRT/XLA error message into a [`FaultKind`].
+///
+/// Device loss is checked first: a lost device frequently *also* reports
+/// canonical transient codes (`UNAVAILABLE` wrapping a device reset), and
+/// retrying against a dead device would burn the whole retry budget
+/// before the real recovery path runs.
+pub fn classify_fault(msg: &str) -> FaultKind {
+    let m = msg.to_ascii_lowercase();
+    const DEVICE_LOST: &[&str] = &[
+        "device_lost",
+        "device lost",
+        "device is in an error state",
+        "device has been removed",
+        "device reset",
+        "simulated device loss",
+    ];
+    if DEVICE_LOST.iter().any(|p| m.contains(p)) {
+        return FaultKind::DeviceLost;
+    }
+    const RETRYABLE: &[&str] = &[
+        "resource_exhausted",
+        "resource exhausted",
+        "unavailable",
+        "aborted",
+        "deadline_exceeded",
+        "deadline exceeded",
+        "too many pending",
+        "try again",
+    ];
+    if RETRYABLE.iter().any(|p| m.contains(p)) {
+        return FaultKind::Retryable;
+    }
+    FaultKind::Fatal
+}
+
+/// Poison-tolerant lock for the executable cache, mirroring the replay
+/// stripes: a thread that panicked mid-`load` can only have left the map
+/// between complete insertions (entries are built before the lock is
+/// taken and inserted whole), so the data behind a poisoned mutex is
+/// still valid — every later `load` must keep working instead of
+/// propagating the panic forever.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Owns the PJRT client and a cache of compiled executables.
 pub struct Runtime {
@@ -36,7 +105,7 @@ impl Runtime {
 
     /// Load + compile an artifact (cached by name).
     pub fn load(&self, artifact: &Artifact) -> anyhow::Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(&artifact.name) {
+        if let Some(e) = lock(&self.cache).get(&artifact.name) {
             return Ok(e.clone());
         }
         let sw = Stopwatch::start();
@@ -52,10 +121,7 @@ impl Runtime {
             artifact: artifact.clone(),
             compile_seconds: sw.elapsed_s(),
         });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(artifact.name.clone(), exec.clone());
+        lock(&self.cache).insert(artifact.name.clone(), exec.clone());
         Ok(exec)
     }
 
@@ -109,5 +175,71 @@ impl Executable {
             .map_err(|e| anyhow::anyhow!("download: {e}"))?;
         lit.to_vec::<f32>()
             .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_device_lost_markers() {
+        for msg in [
+            "executing sac_update: DEVICE_LOST: tpu halted",
+            "INTERNAL: device is in an error state",
+            "the device has been removed from the bus",
+            "fault-inject: simulated device loss at 100 updates (DEVICE_LOST)",
+        ] {
+            assert_eq!(classify_fault(msg), FaultKind::DeviceLost, "{msg}");
+        }
+    }
+
+    #[test]
+    fn classify_retryable_markers() {
+        for msg in [
+            "executing sac_update: UNAVAILABLE: scheduler busy",
+            "RESOURCE_EXHAUSTED: out of transfer slots",
+            "ABORTED: collective interrupted",
+            "DEADLINE_EXCEEDED: dispatch queue full, try again",
+        ] {
+            assert_eq!(classify_fault(msg), FaultKind::Retryable, "{msg}");
+        }
+    }
+
+    #[test]
+    fn classify_fatal_by_default() {
+        for msg in [
+            "INVALID_ARGUMENT: shape mismatch f32[8] vs f32[16]",
+            "parsing \"artifacts/sac.hlo\": no such file",
+            "literal to_vec: dtype mismatch",
+        ] {
+            assert_eq!(classify_fault(msg), FaultKind::Fatal, "{msg}");
+        }
+    }
+
+    #[test]
+    fn device_lost_wins_over_retryable_wrapping() {
+        // A lost device often surfaces wrapped in a canonical transient
+        // code; it must still route to the rebuild path, not the retry
+        // loop.
+        let msg = "UNAVAILABLE: stream executor reported DEVICE_LOST";
+        assert_eq!(classify_fault(msg), FaultKind::DeviceLost);
+    }
+
+    #[test]
+    fn cache_lock_survives_a_poisoning_panic() {
+        let m = Mutex::new(BTreeMap::from([(String::from("a"), 1u32)]));
+        let poisoner = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison the executable cache");
+        }));
+        assert!(poisoner.is_err());
+        assert!(m.is_poisoned());
+        // The replay-stripe idiom: recover the guard, data is intact.
+        let mut g = lock(&m);
+        assert_eq!(g.get("a"), Some(&1));
+        g.insert(String::from("b"), 2);
+        drop(g);
+        assert_eq!(lock(&m).len(), 2);
     }
 }

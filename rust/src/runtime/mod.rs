@@ -3,7 +3,9 @@
 
 pub mod checkpoint;
 pub mod client;
+pub mod runstate;
 pub mod state;
+pub mod watchdog;
 
-pub use client::{Executable, Runtime};
+pub use client::{classify_fault, Executable, FaultKind, Runtime};
 pub use state::TrainState;

@@ -1,0 +1,198 @@
+//! Durable run state: a `run.json` next to the checkpoint lineage.
+//!
+//! The watchdog's restart contract is "relaunch the exact run" — but the
+//! command line it was handed is only what the *first* launch looked
+//! like. The trainer records the run's identity durably: its argv, the
+//! lineage base, the seed, and a digest of the run-defining config
+//! fields. On restart the watchdog prefers `run.json` over its own
+//! remembered arguments, and a trainer launched into a run dir whose
+//! recorded digest differs from its own config warns that the dir
+//! belonged to a different run before overwriting.
+//!
+//! The file is written atomically (tmp + rename), same as checkpoints:
+//! a crash mid-write leaves either the old `run.json` or none at all.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Bumped whenever the `run.json` layout changes incompatibly; a
+/// watchdog reading a newer (or older) schema falls back to the command
+/// line instead of mis-parsing.
+pub const RUN_STATE_SCHEMA: u64 = 1;
+
+/// File name inside the run dir.
+pub const RUN_STATE_FILE: &str = "run.json";
+
+/// FNV-1a over arbitrary bytes, hex-encoded — the same cheap stable
+/// hash the checkpoint format uses for integrity, here used to
+/// fingerprint the run-defining config fields.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The durable identity of a training run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunState {
+    /// Layout version ([`RUN_STATE_SCHEMA`]).
+    pub schema: u64,
+    /// Full argv of the trainer process (`argv[0]` is the binary; the
+    /// watchdog re-execs its own binary with `argv[1..]`).
+    pub argv: Vec<String>,
+    /// Checkpoint lineage base path the run saves to / resumes from.
+    pub checkpoint_base: String,
+    /// Population seed.
+    pub seed: u64,
+    /// Digest of the run-defining config fields
+    /// (`TrainerConfig::config_digest`).
+    pub config_digest: String,
+}
+
+impl RunState {
+    /// Path of the `run.json` inside `run_dir`.
+    pub fn path(run_dir: &Path) -> PathBuf {
+        run_dir.join(RUN_STATE_FILE)
+    }
+
+    /// Atomically write `run.json` into `run_dir`.
+    pub fn save(&self, run_dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(run_dir)?;
+        let j = obj(vec![
+            ("schema", num(self.schema as f64)),
+            ("argv", arr(self.argv.iter().map(|a| s(a)).collect())),
+            ("checkpoint_base", s(&self.checkpoint_base)),
+            // Seeds are arbitrary u64s; a JSON number would silently lose
+            // precision past 2^53, so the seed travels as a string.
+            ("seed", s(&self.seed.to_string())),
+            ("config_digest", s(&self.config_digest)),
+        ]);
+        let path = Self::path(run_dir);
+        let tmp = run_dir.join(format!("{RUN_STATE_FILE}.tmp"));
+        std::fs::write(&tmp, format!("{j}\n"))?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Read `run.json` from `run_dir`. `Ok(None)` when the file does not
+    /// exist (a fresh run dir); `Err` when it exists but cannot be
+    /// trusted (parse failure, unknown schema, missing fields).
+    pub fn load(run_dir: &Path) -> anyhow::Result<Option<RunState>> {
+        let path = Self::path(run_dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(anyhow::anyhow!("reading {path:?}: {e}")),
+        };
+        let j = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: missing schema"))?
+            as u64;
+        anyhow::ensure!(
+            schema == RUN_STATE_SCHEMA,
+            "{path:?}: schema {schema} (this build understands {RUN_STATE_SCHEMA})"
+        );
+        let argv = j
+            .get("argv")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: missing argv"))?
+            .iter()
+            .map(|a| {
+                a.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("{path:?}: non-string argv entry"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let field = |k: &str| -> anyhow::Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("{path:?}: missing {k}"))
+        };
+        let checkpoint_base = field("checkpoint_base")?;
+        let seed = field("seed")?
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("{path:?}: bad seed: {e}"))?;
+        let config_digest = field("config_digest")?;
+        Ok(Some(RunState { schema, argv, checkpoint_base, seed, config_digest }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fastpbrl_runstate_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> RunState {
+        RunState {
+            schema: RUN_STATE_SCHEMA,
+            argv: vec![
+                "fastpbrl".into(),
+                "train".into(),
+                "--checkpoint".into(),
+                "run/ckpt.bin".into(),
+            ],
+            checkpoint_base: "run/ckpt.bin".into(),
+            seed: u64::MAX - 7, // past 2^53: exercises the string encoding
+            config_digest: "00ff00ff00ff00ff".into(),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let dir = tmp_dir("roundtrip");
+        let rs = sample();
+        rs.save(&dir).unwrap();
+        let back = RunState::load(&dir).unwrap().unwrap();
+        assert_eq!(back, rs);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        let dir = tmp_dir("missing");
+        assert!(RunState::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_schema_is_an_error() {
+        let dir = tmp_dir("schema");
+        std::fs::write(
+            RunState::path(&dir),
+            r#"{"schema":99,"argv":[],"checkpoint_base":"","seed":"0","config_digest":""}"#,
+        )
+        .unwrap();
+        assert!(RunState::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_is_an_error_not_a_fresh_dir() {
+        let dir = tmp_dir("garbage");
+        std::fs::write(RunState::path(&dir), "not json").unwrap();
+        assert!(RunState::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fnv_digest_is_stable_and_content_sensitive() {
+        let a = fnv1a_hex(b"env=pendulum seed=7");
+        assert_eq!(a, fnv1a_hex(b"env=pendulum seed=7"));
+        assert_ne!(a, fnv1a_hex(b"env=pendulum seed=8"));
+        assert_eq!(a.len(), 16);
+    }
+}

@@ -1,0 +1,398 @@
+//! Out-of-process supervision: spawn the trainer as a child process,
+//! watch its liveness, and restart it from the checkpoint lineage when
+//! it crashes or stalls.
+//!
+//! This is the rung above the in-process fault-tolerance layer: actor
+//! supervision and member quarantine survive faults *inside* the
+//! trainer, the [`CheckpointLineage`](crate::runtime::checkpoint::CheckpointLineage)
+//! survives faults *across* processes — and the watchdog is the agent
+//! that actually performs the restart. It never parses training state
+//! itself; the restart contract is simply "re-exec the trainer with the
+//! same arguments", because `Trainer::new` already auto-resumes from the
+//! lineage's `last_good` when `--checkpoint` names an existing base.
+//!
+//! Liveness is judged from three signals, newest wins:
+//! - the child's exit status (`try_wait`),
+//! - a heartbeat file the trainer touches from its learner loop
+//!   ([`touch_heartbeat`]), and
+//! - the telemetry JSONL stream's mtime as a fallback (the exporter
+//!   appends a snapshot every `snapshot_secs` while the loop is alive).
+//!
+//! A child that runs but goes silent past `heartbeat_timeout_secs` is
+//! killed and counted as a failure. Failures restart with the same
+//! capped exponential backoff the actor supervisor uses
+//! ([`RestartPolicy`]), bounded by a `max_process_restarts` budget —
+//! and a crash *loop* (N consecutive deaths within seconds of launch:
+//! bad config, missing artifacts, poisoned checkpoint dir) exits
+//! permanently with a diagnosis line instead of burning the budget on a
+//! failure no restart can fix.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus};
+use std::time::{Duration, Instant};
+
+use crate::data::supervisor::RestartPolicy;
+use crate::runtime::runstate::RunState;
+use crate::util::log;
+
+/// Heartbeat file name inside the run dir.
+pub const HEARTBEAT_FILE: &str = "heartbeat";
+
+/// How often the trainer's learner loop touches the heartbeat file (it
+/// also touches at every sync point). The watchdog's
+/// `heartbeat_timeout_secs` should comfortably exceed this.
+pub const HEARTBEAT_INTERVAL_SECS: f64 = 5.0;
+
+/// Path of the heartbeat file inside `run_dir`.
+pub fn heartbeat_path(run_dir: &Path) -> PathBuf {
+    run_dir.join(HEARTBEAT_FILE)
+}
+
+/// Touch the run dir's heartbeat file. The *mtime* is the signal; the
+/// content (the current update count) is a debugging courtesy.
+pub fn touch_heartbeat(run_dir: &Path, updates: u64) -> std::io::Result<()> {
+    std::fs::write(heartbeat_path(run_dir), format!("{updates}\n"))
+}
+
+/// Watchdog configuration. `program` defaults to the current binary in
+/// the CLI path; tests point it at `/bin/sh` to script child behavior.
+#[derive(Clone, Debug)]
+pub struct WatchdogConfig {
+    /// Binary to exec for each trainer incarnation.
+    pub program: PathBuf,
+    /// Arguments after the program (e.g. `train --checkpoint run/ckpt.bin ...`).
+    pub args: Vec<String>,
+    /// Extra environment for the child (inherits the watchdog's env too).
+    pub envs: Vec<(String, String)>,
+    /// The run dir: where `run.json`, the heartbeat file, and the
+    /// telemetry stream live (the checkpoint base's parent).
+    pub run_dir: PathBuf,
+    /// Process restarts allowed over the watchdog's lifetime.
+    pub max_process_restarts: u32,
+    /// First-restart backoff; doubles per restart, capped.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Kill + restart a child silent for this long (no heartbeat touch,
+    /// no telemetry write, measured from the newest signal; the spawn
+    /// instant counts as a signal so startup is never a false stall).
+    /// `0` disables stall detection — exit status only.
+    pub heartbeat_timeout_secs: f64,
+    /// A failure this soon after launch counts toward the crash-loop
+    /// threshold. `0` disables crash-loop detection.
+    pub crash_loop_window_secs: f64,
+    /// Consecutive fast failures before giving up permanently. `0`
+    /// disables crash-loop detection.
+    pub crash_loop_threshold: u32,
+    /// Liveness poll interval.
+    pub poll_ms: u64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            program: PathBuf::new(),
+            args: Vec::new(),
+            envs: Vec::new(),
+            run_dir: PathBuf::from("."),
+            max_process_restarts: 5,
+            backoff_base_ms: 1_000,
+            backoff_cap_ms: 60_000,
+            heartbeat_timeout_secs: 120.0,
+            crash_loop_window_secs: 10.0,
+            crash_loop_threshold: 3,
+            poll_ms: 200,
+        }
+    }
+}
+
+/// Why the watchdog returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WatchdogOutcome {
+    /// The child exited successfully.
+    Completed,
+    /// The child kept failing and the restart budget ran out.
+    BudgetExhausted,
+    /// Crash loop: consecutive failures within seconds of launch — a
+    /// condition restarts cannot fix (bad flags, missing artifacts,
+    /// unloadable checkpoint dir). No restart was attempted.
+    CrashLoop,
+}
+
+/// Final report of a watchdog run.
+#[derive(Clone, Debug)]
+pub struct WatchdogReport {
+    pub outcome: WatchdogOutcome,
+    /// Restarts actually performed (not counting the initial launch).
+    pub restarts: u32,
+    /// Human-readable description of the last failure, if any.
+    pub last_failure: Option<String>,
+}
+
+/// Detects crash loops: `threshold` consecutive failures that each died
+/// within `window` of launch. A child that ran longer than the window
+/// before failing resets the streak — it made real progress, so a
+/// restart (resuming from `last_good`) is still worth the budget.
+#[derive(Clone, Debug)]
+pub struct CrashLoopDetector {
+    window: Duration,
+    threshold: u32,
+    fast_failures: u32,
+}
+
+impl CrashLoopDetector {
+    pub fn new(window: Duration, threshold: u32) -> Self {
+        CrashLoopDetector { window, threshold, fast_failures: 0 }
+    }
+
+    /// Record a failure whose child ran for `run_duration`. Returns
+    /// `true` when the crash-loop threshold is hit.
+    pub fn on_failure(&mut self, run_duration: Duration) -> bool {
+        if self.threshold == 0 || self.window.is_zero() {
+            return false;
+        }
+        if run_duration < self.window {
+            self.fast_failures += 1;
+        } else {
+            self.fast_failures = 0;
+        }
+        self.fast_failures >= self.threshold
+    }
+
+    /// Current consecutive fast-failure count (for diagnostics).
+    pub fn streak(&self) -> u32 {
+        self.fast_failures
+    }
+}
+
+/// How a supervised child ended.
+enum ChildEnd {
+    Exited(ExitStatus),
+    /// Killed by the watchdog after going silent.
+    Stalled { silent_for: Duration },
+}
+
+/// Age of the newest liveness signal: heartbeat mtime, telemetry stream
+/// mtime, or the spawn instant — whichever is freshest.
+fn liveness_age(run_dir: &Path, spawned: Instant) -> Duration {
+    let mut newest = spawned.elapsed();
+    for name in [HEARTBEAT_FILE, "telemetry.jsonl"] {
+        let age = std::fs::metadata(run_dir.join(name))
+            .ok()
+            .and_then(|m| m.modified().ok())
+            // elapsed() errors when the mtime is in the future (clock
+            // skew) — treat that as "fresh right now".
+            .map(|t| t.elapsed().unwrap_or(Duration::ZERO));
+        if let Some(a) = age {
+            newest = newest.min(a);
+        }
+    }
+    newest
+}
+
+/// Poll one child to completion (or kill it on stall).
+fn supervise(child: &mut Child, cfg: &WatchdogConfig, spawned: Instant) -> anyhow::Result<ChildEnd> {
+    loop {
+        if let Some(status) = child.try_wait()? {
+            return Ok(ChildEnd::Exited(status));
+        }
+        if cfg.heartbeat_timeout_secs > 0.0 {
+            let age = liveness_age(&cfg.run_dir, spawned);
+            if age.as_secs_f64() > cfg.heartbeat_timeout_secs {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Ok(ChildEnd::Stalled { silent_for: age });
+            }
+        }
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(10)));
+    }
+}
+
+/// Supervise trainer incarnations until one completes, the restart
+/// budget is exhausted, or a crash loop is diagnosed.
+pub fn run_watchdog(cfg: &WatchdogConfig) -> anyhow::Result<WatchdogReport> {
+    anyhow::ensure!(!cfg.args.is_empty(), "watchdog: empty child command");
+    let policy = RestartPolicy {
+        max_restarts: cfg.max_process_restarts,
+        backoff_base_ms: cfg.backoff_base_ms.max(1),
+        backoff_cap_ms: cfg.backoff_cap_ms.max(cfg.backoff_base_ms.max(1)),
+    };
+    let mut detector = CrashLoopDetector::new(
+        Duration::from_secs_f64(cfg.crash_loop_window_secs.max(0.0)),
+        cfg.crash_loop_threshold,
+    );
+    let mut restarts: u32 = 0;
+    let mut args = cfg.args.clone();
+    loop {
+        // Durable run state beats the remembered command line: a prior
+        // incarnation recorded exactly what it was running.
+        match RunState::load(&cfg.run_dir) {
+            Ok(Some(rs)) if rs.argv.len() > 1 => {
+                let recorded: Vec<String> = rs.argv[1..].to_vec();
+                if recorded != args {
+                    log::warn(&format!(
+                        "[watchdog] run.json in {} records different arguments; \
+                         launching the recorded run: {}",
+                        cfg.run_dir.display(),
+                        recorded.join(" ")
+                    ));
+                    args = recorded;
+                }
+            }
+            Ok(_) => {}
+            Err(e) => log::warn(&format!(
+                "[watchdog] unreadable run.json ({e:#}); trusting the command line"
+            )),
+        }
+        let spawned = Instant::now();
+        log::info(&format!(
+            "[watchdog] launching trainer (attempt {}): {} {}",
+            restarts + 1,
+            cfg.program.display(),
+            args.join(" ")
+        ));
+        let mut child = Command::new(&cfg.program)
+            .args(&args)
+            .envs(cfg.envs.iter().map(|(k, v)| (k.as_str(), v.as_str())))
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning {:?}: {e}", cfg.program))?;
+        let end = supervise(&mut child, cfg, spawned)?;
+        let run_duration = spawned.elapsed();
+        let failure = match &end {
+            ChildEnd::Exited(st) if st.success() => {
+                log::info(&format!(
+                    "[watchdog] trainer completed cleanly after {} restart(s)",
+                    restarts
+                ));
+                return Ok(WatchdogReport {
+                    outcome: WatchdogOutcome::Completed,
+                    restarts,
+                    last_failure: None,
+                });
+            }
+            ChildEnd::Exited(st) => format!("{st}"),
+            ChildEnd::Stalled { silent_for } => format!(
+                "stalled (no heartbeat or telemetry write for {:.1}s); killed",
+                silent_for.as_secs_f64()
+            ),
+        };
+        if detector.on_failure(run_duration) {
+            let diag = format!(
+                "[watchdog] crash loop: {} consecutive failures within {:.1}s of launch \
+                 (last: {failure}) — restarts cannot fix this; inspect the trainer's stderr, \
+                 the run dir ({}), and the checkpoint lineage before relaunching",
+                detector.streak(),
+                cfg.crash_loop_window_secs,
+                cfg.run_dir.display()
+            );
+            log::warn(&diag);
+            return Ok(WatchdogReport {
+                outcome: WatchdogOutcome::CrashLoop,
+                restarts,
+                last_failure: Some(failure),
+            });
+        }
+        if restarts >= cfg.max_process_restarts {
+            log::warn(&format!(
+                "[watchdog] trainer failed ({failure}) and the restart budget ({}) is spent; \
+                 giving up",
+                cfg.max_process_restarts
+            ));
+            return Ok(WatchdogReport {
+                outcome: WatchdogOutcome::BudgetExhausted,
+                restarts,
+                last_failure: Some(failure),
+            });
+        }
+        restarts += 1;
+        let backoff = policy.backoff(restarts);
+        log::warn(&format!(
+            "[watchdog] trainer failed ({failure}); restart {restarts}/{} in {:.1}s — \
+             the next incarnation resumes from the lineage's last_good",
+            cfg.max_process_restarts,
+            backoff.as_secs_f64()
+        ));
+        std::thread::sleep(backoff);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_loop_detector_counts_consecutive_fast_failures() {
+        let mut d = CrashLoopDetector::new(Duration::from_secs(10), 3);
+        assert!(!d.on_failure(Duration::from_secs(1)));
+        assert!(!d.on_failure(Duration::from_secs(2)));
+        assert!(d.on_failure(Duration::from_secs(0)));
+    }
+
+    #[test]
+    fn crash_loop_detector_resets_on_a_long_run() {
+        let mut d = CrashLoopDetector::new(Duration::from_secs(10), 2);
+        assert!(!d.on_failure(Duration::from_secs(1)));
+        // a child that ran past the window made progress: streak resets
+        assert!(!d.on_failure(Duration::from_secs(60)));
+        assert_eq!(d.streak(), 0);
+        assert!(!d.on_failure(Duration::from_secs(1)));
+        assert!(d.on_failure(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn crash_loop_detector_disabled_by_zero_threshold_or_window() {
+        let mut d = CrashLoopDetector::new(Duration::from_secs(10), 0);
+        for _ in 0..20 {
+            assert!(!d.on_failure(Duration::ZERO));
+        }
+        let mut d = CrashLoopDetector::new(Duration::ZERO, 3);
+        for _ in 0..20 {
+            assert!(!d.on_failure(Duration::ZERO));
+        }
+    }
+
+    #[test]
+    fn heartbeat_touch_updates_liveness_age() {
+        let dir = std::env::temp_dir()
+            .join(format!("fastpbrl_watchdog_hb_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Before any touch: the spawn instant is the only signal.
+        // (checked_sub: the monotonic clock may not reach back 100s on a
+        // freshly booted machine — fall back to a shorter backdate.)
+        let backdate = Duration::from_secs(100);
+        let spawned = Instant::now()
+            .checked_sub(backdate)
+            .unwrap_or_else(|| Instant::now().checked_sub(Duration::from_millis(50)).unwrap());
+        let before = liveness_age(&dir, spawned);
+        assert!(before >= Duration::from_millis(40));
+        touch_heartbeat(&dir, 42).unwrap();
+        assert!(liveness_age(&dir, spawned) < before);
+        assert!(liveness_age(&dir, spawned) < Duration::from_secs(5));
+        let content = std::fs::read_to_string(heartbeat_path(&dir)).unwrap();
+        assert_eq!(content.trim(), "42");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn watchdog_returns_completed_for_a_clean_child() {
+        let dir = std::env::temp_dir()
+            .join(format!("fastpbrl_watchdog_ok_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = WatchdogConfig {
+            program: PathBuf::from("/bin/sh"),
+            args: vec!["-c".into(), "exit 0".into()],
+            run_dir: dir.clone(),
+            backoff_base_ms: 10,
+            backoff_cap_ms: 20,
+            heartbeat_timeout_secs: 0.0,
+            poll_ms: 10,
+            ..WatchdogConfig::default()
+        };
+        let report = run_watchdog(&cfg).unwrap();
+        assert_eq!(report.outcome, WatchdogOutcome::Completed);
+        assert_eq!(report.restarts, 0);
+        assert!(report.last_failure.is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -36,9 +36,12 @@
 //! | `supervisor.actor_restarts` | counter | crashed actor threads respawned |
 //! | `supervisor.stall_events` | counter | heartbeat stall transitions |
 //! | `supervisor.members_repaired` | counter | quarantined members repaired |
+//! | `runtime.retries` | counter | transient runtime faults retried in place |
+//! | `runtime.device_restarts` | counter | device losses recovered by a runtime rebuild |
 //!
-//! The supervision counters record even with telemetry disabled (they
-//! feed [`Summary`](crate::coordinator::trainer::Summary) through
+//! The supervision and runtime-recovery counters record even with
+//! telemetry disabled (they feed
+//! [`Summary`](crate::coordinator::trainer::Summary) through
 //! [`RunCounter`], one bump site for both views). Everything else is
 //! off until [`TelemetryConfig::enabled`] switches the registry on.
 

@@ -43,6 +43,50 @@ fn ms(ns: f64) -> f64 {
     ns / 1e6
 }
 
+/// Seconds since the stream file was last written (`None`: missing file
+/// or a filesystem that won't report mtime).
+pub fn stream_age_secs(file: &Path) -> Option<f64> {
+    let mtime = std::fs::metadata(file).ok()?.modified().ok()?;
+    // A future mtime (clock skew) reads as a fresh file, not a panic.
+    Some(mtime.elapsed().map(|d| d.as_secs_f64()).unwrap_or(0.0))
+}
+
+/// Snapshot cadence inferred from the stream itself: the `uptime_s`
+/// delta between the last two snapshot lines. `None` until two lines
+/// exist or when the delta is non-positive (restarted run).
+pub fn stream_cadence_secs(file: &Path) -> Option<f64> {
+    let text = std::fs::read_to_string(file).ok()?;
+    let uptimes: Vec<f64> = text
+        .lines()
+        .rev()
+        .filter(|l| !l.trim().is_empty())
+        .take(2)
+        .filter_map(|l| Json::parse(l.trim()).ok())
+        .filter_map(|j| j.get("uptime_s").and_then(|u| u.as_f64()))
+        .collect();
+    match uptimes[..] {
+        [newer, older] if newer > older => Some(newer - older),
+        _ => None,
+    }
+}
+
+/// Warning banner when the stream has gone quiet: the writer touches the
+/// file every `snapshot_secs`, so an age past ~3 cadences means the run
+/// is stalled, crashed, or finished. Pure so the threshold math is
+/// testable; `None` means fresh.
+pub fn staleness_banner(age_s: Option<f64>, cadence_s: Option<f64>) -> Option<String> {
+    let age = age_s?;
+    let cadence = cadence_s.unwrap_or(1.0).max(0.1);
+    let threshold = (3.0 * cadence).max(2.0);
+    if age <= threshold {
+        return None;
+    }
+    Some(format!(
+        "*** STALE (age {age:.0}s) — no snapshot for > {threshold:.0}s; \
+         run stalled, crashed, or finished ***"
+    ))
+}
+
 /// Thread/stripe indices present under `prefix{i}suffix` names.
 fn indices(names: impl Iterator<Item = String>, prefix: &str, suffix: &str) -> Vec<usize> {
     let mut out: Vec<usize> = names
@@ -184,8 +228,14 @@ pub fn run_top(path: &Path, refresh_s: f64, iterations: u64) -> Result<()> {
     loop {
         match latest_snapshot(&file) {
             Ok(Some(snap)) => {
-                // clear screen + home, then the table
-                print!("\x1b[2J\x1b[H{}", render(&snap));
+                let banner =
+                    staleness_banner(stream_age_secs(&file), stream_cadence_secs(&file));
+                // clear screen + home, optional staleness banner, then the table
+                print!("\x1b[2J\x1b[H");
+                if let Some(b) = banner {
+                    println!("{b}");
+                }
+                print!("{}", render(&snap));
                 let _ = std::io::stdout().flush();
             }
             Ok(None) => {
@@ -294,5 +344,51 @@ mod tests {
         assert_eq!(got.uptime_s, 12.5, "must read the newest line");
         // directory form resolves to the conventional file name
         assert_eq!(resolve_stream(&dir), file);
+    }
+
+    #[test]
+    fn staleness_banner_threshold_math() {
+        // No age (missing file) — nothing to warn about.
+        assert!(staleness_banner(None, Some(1.0)).is_none());
+        // Fresh stream: age within 3x cadence (floored at 2s).
+        assert!(staleness_banner(Some(1.0), Some(1.0)).is_none());
+        assert!(staleness_banner(Some(2.0), None).is_none());
+        // Stale: past the threshold, banner carries the age.
+        let b = staleness_banner(Some(47.0), Some(1.0)).unwrap();
+        assert!(b.contains("STALE (age 47s)"), "{b}");
+        // Slow cadence stretches the threshold: 25s old at 10s cadence is fine.
+        assert!(staleness_banner(Some(25.0), Some(10.0)).is_none());
+        assert!(staleness_banner(Some(31.0), Some(10.0)).is_some());
+        // Degenerate cadence clamps to the 2s floor instead of always firing.
+        assert!(staleness_banner(Some(1.5), Some(0.0)).is_none());
+    }
+
+    #[test]
+    fn cadence_is_inferred_from_uptime_deltas() {
+        let dir = std::env::temp_dir().join("fastpbrl_test_top_cadence");
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("telemetry.jsonl");
+        let at = |uptime: f64| {
+            let mut s = synthetic();
+            s.uptime_s = uptime;
+            crate::telemetry::export::snapshot_to_json(&s).to_string()
+        };
+        // One line: no delta yet.
+        std::fs::write(&file, format!("{}\n", at(1.0))).unwrap();
+        assert!(stream_cadence_secs(&file).is_none());
+        // Two lines 2.5s apart in run-uptime.
+        std::fs::write(&file, format!("{}\n{}\n", at(1.0), at(3.5))).unwrap();
+        let c = stream_cadence_secs(&file).unwrap();
+        assert!((c - 2.5).abs() < 1e-9, "cadence {c}");
+        // Restarted run (uptime went backwards): no cadence claim.
+        std::fs::write(&file, format!("{}\n{}\n", at(9.0), at(0.5))).unwrap();
+        assert!(stream_cadence_secs(&file).is_none());
+        // A just-written file is fresh, so no banner fires.
+        std::fs::write(&file, format!("{}\n{}\n", at(1.0), at(2.0))).unwrap();
+        let banner =
+            staleness_banner(stream_age_secs(&file), stream_cadence_secs(&file));
+        assert!(banner.is_none(), "{banner:?}");
+        // Missing file: no age at all.
+        assert!(stream_age_secs(&dir.join("missing.jsonl")).is_none());
     }
 }

@@ -18,6 +18,8 @@ use fastpbrl::coordinator::trainer::{Continuous, NoController, Trainer, TrainerC
 use fastpbrl::data::pipeline::{ActorConfig, ActorPool, PolicyKind, Throttle};
 use fastpbrl::data::supervisor::FaultPlan;
 use fastpbrl::manifest::{Artifact, Dtype, EnvDesc, Field, Manifest};
+use fastpbrl::runtime::runstate::{RunState, RUN_STATE_SCHEMA};
+use fastpbrl::runtime::watchdog::{run_watchdog, WatchdogConfig, WatchdogOutcome};
 use fastpbrl::util::rng::Rng;
 
 /// A minimal continuous-control artifact matching the native pendulum
@@ -254,4 +256,241 @@ fn trainer_resumes_from_lineage_after_corruption() {
         resumed.population.train_state.updates_done > 0,
         "expected resume from an older checkpoint generation"
     );
+}
+
+/// Runtime-fault acceptance: an injected device loss mid-run must be
+/// recovered *in place* — runtime rebuilt, executables reloaded, the
+/// population re-uploaded from the host mirror — and the run completes
+/// with the recovery visible in the summary.
+#[test]
+fn injected_device_loss_recovers_in_place() {
+    let Some(m) = manifest() else { return };
+    let updates = 300;
+    let plan = Arc::new(FaultPlan {
+        device_errors: vec![updates / 3],
+        ..Default::default()
+    });
+    let mut cfg = base_cfg(updates);
+    cfg.fault_plan = Some(plan);
+    cfg.runtime_retry_backoff_ms = 1;
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
+    let summary = trainer.run(&mut NoController).unwrap();
+    assert_eq!(summary.updates, updates, "run must complete despite the device loss");
+    assert!(
+        summary.device_restarts >= 1,
+        "injected device loss must be recovered by a runtime rebuild: {summary:?}"
+    );
+    assert!(summary.mean_return.is_finite());
+}
+
+// ---- process watchdog (scripted /bin/sh children — no artifacts) ------
+
+fn watchdog_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastpbrl_fault_wd_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sh_watchdog(dir: &std::path::Path, script: String) -> WatchdogConfig {
+    WatchdogConfig {
+        program: PathBuf::from("/bin/sh"),
+        args: vec!["-c".into(), script],
+        run_dir: dir.to_path_buf(),
+        backoff_base_ms: 10,
+        backoff_cap_ms: 20,
+        heartbeat_timeout_secs: 0.0, // exit-status only unless a test opts in
+        poll_ms: 10,
+        ..WatchdogConfig::default()
+    }
+}
+
+#[test]
+fn watchdog_restarts_a_crashing_child_until_it_succeeds() {
+    let dir = watchdog_dir("retry");
+    let counter = dir.join("attempts");
+    // fails twice, succeeds on the third incarnation
+    let script = format!(
+        "n=$(cat {c} 2>/dev/null || echo 0); n=$((n+1)); echo $n > {c}; [ $n -ge 3 ]",
+        c = counter.display()
+    );
+    let mut cfg = sh_watchdog(&dir, script);
+    cfg.crash_loop_threshold = 0; // the fast failures here are the point
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::Completed, "{report:?}");
+    assert_eq!(report.restarts, 2);
+    assert!(report.last_failure.is_none());
+    assert_eq!(std::fs::read_to_string(&counter).unwrap().trim(), "3");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn watchdog_diagnoses_a_crash_loop_instead_of_burning_the_budget() {
+    let dir = watchdog_dir("crashloop");
+    let mut cfg = sh_watchdog(&dir, "exit 7".into());
+    cfg.max_process_restarts = 10;
+    cfg.crash_loop_window_secs = 30.0;
+    cfg.crash_loop_threshold = 3;
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::CrashLoop, "{report:?}");
+    // third consecutive fast failure trips the detector: only 2 restarts
+    assert_eq!(report.restarts, 2);
+    assert!(report.last_failure.unwrap().contains('7'));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn watchdog_gives_up_when_the_restart_budget_is_spent() {
+    let dir = watchdog_dir("budget");
+    let mut cfg = sh_watchdog(&dir, "exit 1".into());
+    cfg.max_process_restarts = 2;
+    cfg.crash_loop_threshold = 0;
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::BudgetExhausted, "{report:?}");
+    assert_eq!(report.restarts, 2);
+    assert!(report.last_failure.is_some());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn watchdog_kills_a_silent_child_as_stalled() {
+    let dir = watchdog_dir("stall");
+    // the child never touches the heartbeat or telemetry, so the spawn
+    // instant is its only liveness signal — the stall timeout kills it
+    let mut cfg = sh_watchdog(&dir, "sleep 30".into());
+    cfg.heartbeat_timeout_secs = 0.3;
+    cfg.max_process_restarts = 0;
+    cfg.crash_loop_threshold = 0;
+    let started = Instant::now();
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::BudgetExhausted, "{report:?}");
+    assert!(report.last_failure.unwrap().contains("stalled"));
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "stalled child must be killed, not waited out"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn watchdog_adopts_the_argv_recorded_in_run_json() {
+    let dir = watchdog_dir("runjson");
+    let marker = dir.join("adopted");
+    // a prior incarnation recorded what it was actually running
+    RunState {
+        schema: RUN_STATE_SCHEMA,
+        argv: vec![
+            "fastpbrl".into(),
+            "-c".into(),
+            format!("echo ok > {}", marker.display()),
+        ],
+        checkpoint_base: dir.join("ckpt.bin").to_string_lossy().into_owned(),
+        seed: 7,
+        config_digest: "deadbeefdeadbeef".into(),
+    }
+    .save(&dir)
+    .unwrap();
+    // the command line disagrees (and would fail); run.json must win
+    let cfg = sh_watchdog(&dir, "exit 1".into());
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::Completed, "{report:?}");
+    assert_eq!(report.restarts, 0);
+    assert!(marker.exists(), "recorded argv was not executed");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- watchdog + trainer end-to-end (needs `make artifacts`) -----------
+
+/// Not a test of its own: the child incarnation that
+/// [`watchdog_resumes_after_child_abort`] supervises. Spawned via
+/// `current_exe() watchdog_child_trainer --exact`, gated on an env var
+/// so it is a no-op in normal suite runs. Runs a checkpointed training
+/// run; the first incarnation aborts mid-run via the fault plan, the
+/// resumed one completes and writes a summary JSON for the parent.
+#[test]
+fn watchdog_child_trainer() {
+    if std::env::var("FASTPBRL_WD_CHILD").is_err() {
+        return;
+    }
+    let Some(m) = manifest() else { return };
+    let updates: u64 = std::env::var("FASTPBRL_WD_UPDATES").unwrap().parse().unwrap();
+    let abort_at: u64 = std::env::var("FASTPBRL_WD_ABORT_AT").unwrap().parse().unwrap();
+    let mut cfg = base_cfg(updates);
+    cfg.checkpoint_path = std::env::var("FASTPBRL_WD_CKPT").unwrap();
+    cfg.sync_every = 20;
+    if abort_at > 0 {
+        cfg.fault_plan = Some(Arc::new(FaultPlan {
+            process_abort: Some(abort_at),
+            ..Default::default()
+        }));
+    }
+    let mut trainer = Trainer::<Continuous>::new(&m, cfg).unwrap();
+    let resumed_at =
+        if trainer.resumed { trainer.population.train_state.updates_done } else { 0 };
+    let s = trainer.run(&mut NoController).unwrap();
+    std::fs::write(
+        std::env::var("FASTPBRL_WD_SUMMARY").unwrap(),
+        format!(
+            "{{\"updates\":{},\"mean_return\":{},\"resumed_at\":{}}}\n",
+            s.updates, s.mean_return, resumed_at
+        ),
+    )
+    .unwrap();
+}
+
+/// The headline watchdog acceptance test: the child trainer is killed
+/// mid-run (`abort()` from its fault plan), the watchdog restarts it,
+/// the restart resumes from the lineage's `last_good`, and the completed
+/// run lands within tolerance of an unfaulted baseline.
+#[test]
+fn watchdog_resumes_after_child_abort() {
+    let Some(m) = manifest() else { return };
+    let updates = 300u64;
+
+    let mut baseline = Trainer::<Continuous>::new(&m, base_cfg(updates)).unwrap();
+    let base = baseline.run(&mut NoController).unwrap();
+    drop(baseline);
+
+    let dir = watchdog_dir("abort");
+    let ckpt = dir.join("ckpt.bin");
+    let summary_path = dir.join("summary.json");
+    let cfg = WatchdogConfig {
+        program: std::env::current_exe().unwrap(),
+        args: vec!["watchdog_child_trainer".into(), "--exact".into(), "--nocapture".into()],
+        envs: vec![
+            ("FASTPBRL_WD_CHILD".into(), "1".into()),
+            ("FASTPBRL_WD_CKPT".into(), ckpt.to_string_lossy().into_owned()),
+            ("FASTPBRL_WD_UPDATES".into(), updates.to_string()),
+            ("FASTPBRL_WD_ABORT_AT".into(), (updates / 2).to_string()),
+            ("FASTPBRL_WD_SUMMARY".into(), summary_path.to_string_lossy().into_owned()),
+        ],
+        run_dir: dir.clone(),
+        backoff_base_ms: 10,
+        backoff_cap_ms: 50,
+        heartbeat_timeout_secs: 0.0, // exit-status only: CI boxes can be slow
+        poll_ms: 20,
+        ..WatchdogConfig::default()
+    };
+    let report = run_watchdog(&cfg).unwrap();
+    assert_eq!(report.outcome, WatchdogOutcome::Completed, "{report:?}");
+    assert_eq!(report.restarts, 1, "exactly one abort was injected: {report:?}");
+
+    let text = std::fs::read_to_string(&summary_path)
+        .expect("the completing incarnation writes its summary");
+    let j = fastpbrl::util::json::Json::parse(text.trim()).unwrap();
+    let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(num("updates") as u64, updates, "resumed run must finish the budget");
+    assert!(
+        num("resumed_at") > 0.0,
+        "the restarted incarnation must resume from the lineage, not start fresh: {text}"
+    );
+    let tolerance = 0.5 * base.mean_return.abs() + 200.0;
+    assert!(
+        num("mean_return") >= base.mean_return - tolerance,
+        "resumed {} vs baseline {} (tolerance {})",
+        num("mean_return"),
+        base.mean_return,
+        tolerance
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
 }
